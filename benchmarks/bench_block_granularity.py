@@ -1,0 +1,30 @@
+"""Beyond-paper: per-column vs 128-block-granular sketching (DESIGN.md §3).
+
+The block variant is what the Pallas kernels accelerate; this benchmark
+quantifies the accuracy cost of the coarser granularity at equal budget.
+Uses a wider MLP (512) so 128-blocks are meaningful.
+"""
+from benchmarks.common import make_policy, save_result, train_mlp_best_lr
+from repro.data.synthetic import classification
+
+
+def run(quick=True):
+    budgets = (0.1, 0.25) if quick else (0.05, 0.1, 0.2, 0.5)
+    xtr, ytr = classification(4096, 784, 10, seed=0)
+    xte, yte = classification(1024, 784, 10, seed=1)
+    data = ((xtr, ytr), (xte, yte))
+    sizes = (784, 512, 512, 10)
+    out = {}
+    for name, block in [("per_column", 0), ("block128", 128)]:
+        out[name] = {}
+        for p in budgets:
+            pol = make_policy("l1", p, block=block, include_head=False)
+            r = train_mlp_best_lr(pol, data=data, sizes=sizes)
+            out[name][str(p)] = r
+            print(f"  {name:10s} p={p:.2f} test_acc={r['test_acc']:.4f}")
+    save_result("block_granularity", out)
+    return out
+
+
+if __name__ == "__main__":
+    run(quick=False)

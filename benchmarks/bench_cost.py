@@ -1,0 +1,56 @@
+"""Compiled-FLOP accounting: exact vs mask vs compact backends (Eq. 6's ρ).
+
+Lowers a single-device train step of a small LM at several budgets and reads
+HLO FLOPs from the compiled artifact: the mask backend (paper-faithful Alg. 6)
+keeps dense-matmul FLOPs ≈ exact, while the compact backend realises the
+budget as shape-level savings — the core TPU adaptation of DESIGN.md §3.
+"""
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import save_result
+from repro.configs.registry import smoke_config
+from repro.core import SketchConfig, SketchPolicy
+from repro.models import lm
+from repro.nn.common import Ctx
+
+
+def _flops(cfg, policy):
+    toks = jax.ShapeDtypeStruct((8, 128), jnp.int32)
+    batch = {"tokens": toks, "labels": toks}
+    key = jax.ShapeDtypeStruct((), jax.random.key(0).dtype)
+
+    def loss(p, b, k):
+        return lm.lm_loss(p, b, Ctx(policy=policy, key=k, cost_mode=True), cfg, k)[0]
+
+    params = jax.eval_shape(lambda k: lm.init_params(k, cfg), key)
+    g = jax.jit(jax.grad(loss))
+    c = g.lower(params, batch, key).compile()
+    ca = c.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    return float(ca["flops"])
+
+
+def run(quick=True):
+    cfg = smoke_config("yi_6b").replace(
+        n_layers=2, d_model=256, n_heads=4, n_kv=2, d_ff=1024, vocab=512,
+        q_chunk=128, kv_chunk=128)
+    budgets = (0.1, 0.5) if quick else (0.05, 0.1, 0.2, 0.5)
+    base = _flops(cfg, None)
+    out = {"exact_flops": base, "rows": []}
+    print(f"  exact: {base:.3e} FLOPs")
+    for backend, block in [("mask", 0), ("compact", 128)]:
+        for p in budgets:
+            pol = SketchPolicy(base=SketchConfig(method="l1", budget=p,
+                                                 backend=backend, block=block))
+            f = _flops(cfg, pol)
+            row = {"backend": backend, "budget": p, "flops": f, "ratio": f / base}
+            out["rows"].append(row)
+            print(f"  {backend:8s} p={p:.2f}: {f:.3e} FLOPs ({f/base:.3f}x exact)")
+    save_result("cost_backends", out)
+    return out
+
+
+if __name__ == "__main__":
+    run(quick=False)

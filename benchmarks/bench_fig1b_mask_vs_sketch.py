@@ -1,0 +1,17 @@
+"""Fig. 1b: uniform masking baselines vs data-dependent sketching.
+
+Paper finding: data-dependent sketches (ℓ1 / DS) consistently beat the three
+agnostic masks (per-element / per-column / per-sample) at equal budget.
+"""
+from benchmarks.common import BUDGETS, save_result, sweep
+
+
+def run(quick=True):
+    budgets = (0.05, 0.1, 0.2) if quick else BUDGETS
+    out = sweep(["per_element", "per_column", "per_sample", "l1", "ds"], budgets)
+    save_result("fig1b_mask_vs_sketch", out)
+    return out
+
+
+if __name__ == "__main__":
+    run(quick=False)

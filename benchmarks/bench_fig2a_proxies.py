@@ -1,0 +1,18 @@
+"""Fig. 2a: weight-proxy comparison (ℓ1 / ℓ2 / Var and squared variants).
+
+Paper finding: all proxies land close; ℓ1 sits on the upper envelope and is
+adopted as the default.
+"""
+from benchmarks.common import BUDGETS, save_result, sweep
+
+
+def run(quick=True):
+    budgets = (0.05, 0.1, 0.2) if quick else BUDGETS
+    methods = ["l1", "l2", "var"] if quick else ["l1", "l2", "var", "l1_sq", "l2_sq", "var_sq"]
+    out = sweep(methods, budgets)
+    save_result("fig2a_proxies", out)
+    return out
+
+
+if __name__ == "__main__":
+    run(quick=False)

@@ -1,0 +1,18 @@
+"""Fig. 2b: spectral (RCS, G-SV) vs coordinate-based strategies.
+
+Paper finding: spectral methods lead at equal budget (they pay O(n³)/O(Nn²)
+per step for it); G-SV beats its square-root counterpart.
+"""
+from benchmarks.common import BUDGETS, save_result, sweep
+
+
+def run(quick=True):
+    budgets = (0.1, 0.2) if quick else BUDGETS
+    methods = ["l1", "gsv", "rcs"] if quick else ["l1", "gsv", "gsv_sq", "rcs", "ds"]
+    out = sweep(methods, budgets)
+    save_result("fig2b_spectral", out)
+    return out
+
+
+if __name__ == "__main__":
+    run(quick=False)

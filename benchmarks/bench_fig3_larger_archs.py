@@ -1,0 +1,97 @@
+"""Fig. 3: sketching on larger architectures (BagNet-style + ViT).
+
+Paper finding: limited degradation even at small budgets; Diagonal Sketching
+(DS) is consistently strong; data-dependent > uniform masking. CPU-scaled
+sizes (--full approaches App. B.2 settings).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import make_policy, save_result
+from repro.data.synthetic import classification
+from repro.models.vision import bagnet_apply, bagnet_init, cls_loss, vit_apply, vit_init
+from repro.nn.common import Ctx
+from repro.optim import adamw, cosine_warmup, sgd
+
+
+def _train(apply_fn, params, policy, data, *, epochs, batch, opt, seed=0):
+    (xtr, ytr), (xte, yte) = data
+
+    def loss_fn(p, b, key):
+        return cls_loss(apply_fn, p, b, Ctx(policy=policy, key=key))
+
+    state = opt.init(params)
+
+    @jax.jit
+    def step(p, s, b, key, i):
+        (l, a), g = jax.value_and_grad(loss_fn, has_aux=True)(p, b, key)
+        p, s = opt.update(g, s, p, i)
+        return p, s, l, a
+
+    @jax.jit
+    def ev(p, x, y):
+        return cls_loss(apply_fn, p, {"x": x, "y": y}, Ctx())[1]
+
+    n = xtr.shape[0]
+    spe = n // batch
+    key = jax.random.key(seed + 7)
+    i = jnp.zeros((), jnp.int32)
+    for ep in range(epochs):
+        perm = np.random.default_rng((seed, ep)).permutation(n)
+        for t in range(spe):
+            idx = perm[t * batch:(t + 1) * batch]
+            k = jax.random.fold_in(key, ep * spe + t)
+            params, state, l, a = step(params, state, {"x": xtr[idx], "y": ytr[idx]}, k, i)
+            i = i + 1
+    return {"train_acc": float(ev(params, xtr[:1024], ytr[:1024])),
+            "test_acc": float(ev(params, xte, yte))}
+
+
+def run(quick=True):
+    n_tr, n_te = (2048, 512) if quick else (16384, 2048)
+    epochs = 2 if quick else 10
+    budgets = (0.1, 0.5) if quick else (0.05, 0.1, 0.2, 0.5)
+    methods = ["per_column", "l1", "ds"] if quick else [
+        "per_element", "per_column", "per_sample", "l1", "ds", "gsv"]
+    xtr, ytr = classification(n_tr, (32, 32, 3), 10, seed=0, noise=0.8, flatten=False)
+    xte, yte = classification(n_te, (32, 32, 3), 10, seed=1, noise=0.8, flatten=False)
+    data = ((xtr, ytr), (xte, yte))
+
+    import functools
+
+    out = {}
+    for arch in ("vit", "bagnet"):
+        if arch == "vit":
+            depth = 4 if quick else 9
+            heads = 8 if quick else 12
+            init = lambda k: vit_init(k, d=128 if quick else 192, depth=depth,
+                                      heads=heads,
+                                      d_ff=512 if quick else 1024)
+            apply_fn = functools.partial(vit_apply, heads=heads)
+            opt = adamw(cosine_warmup(3e-4, 20, 400), weight_decay=0.05, clip=1.0)
+        else:
+            init = lambda k: bagnet_init(k, width=32 if quick else 64)
+            apply_fn = bagnet_apply
+            opt = sgd(cosine_warmup(0.03, 10, 400), momentum=0.9, clip=1.0)
+        params0 = init(jax.random.key(0))
+        res = {"exact": {"1.0": _train(apply_fn, params0, None, data,
+                                       epochs=epochs, batch=64, opt=opt)}}
+        print(f"[{arch}] exact: {res['exact']['1.0']}")
+        for m in methods:
+            res[m] = {}
+            for p in budgets:
+                pol = make_policy(m, p, include_head=False)
+                params0 = init(jax.random.key(0))
+                r = _train(apply_fn, params0, pol, data, epochs=epochs, batch=64, opt=opt)
+                res[m][str(p)] = r
+                print(f"[{arch}] {m:11s} p={p:.2f} test_acc={r['test_acc']:.4f}")
+        out[arch] = res
+    save_result("fig3_larger_archs", out)
+    return out
+
+
+if __name__ == "__main__":
+    run(quick=False)

@@ -1,0 +1,26 @@
+"""Fig. 4 / App. B.1: sketch location study (first vs last vs all layers).
+
+Paper finding: approximating only the last layer degrades accuracy more than
+only the first — motivation for straggler-selective application (B.1), which
+repro/train/straggler.py operationalises.
+"""
+from benchmarks.common import make_policy, mlp_data, save_result, train_mlp_best_lr
+
+
+def run(quick=True):
+    budgets = (0.05, 0.2) if quick else (0.05, 0.1, 0.2, 0.5)
+    data = mlp_data()
+    out = {}
+    for loc in ("all", "first", "last"):
+        out[loc] = {}
+        for p in budgets:
+            pol = make_policy("l1", p, location=loc)
+            r = train_mlp_best_lr(pol, data=data)
+            out[loc][str(p)] = r
+            print(f"  loc={loc:5s} p={p:.2f} test_acc={r['test_acc']:.4f}")
+    save_result("fig4_location", out)
+    return out
+
+
+if __name__ == "__main__":
+    run(quick=False)

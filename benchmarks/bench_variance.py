@@ -1,0 +1,60 @@
+"""Variance accounting: Prop. 2.2 decomposition + Eq. (6) trade-off table.
+
+(1) Monte-Carlo gradient variance per method/budget on the paper MLP — the V
+    entering σ²+V; (2) the cost model ρ(V): sketched-backward FLOPs vs exact,
+    giving the paper's net-win condition ρ(V)(σ²+V) ≤ ρ(0)σ².
+"""
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import make_policy, mlp_data, save_result
+from repro.core import variance as varlib
+from repro.core import static_rank
+from repro.models.mlp import mlp_init, mlp_loss
+from repro.nn.common import Ctx
+
+
+def run(quick=True):
+    budgets = (0.1, 0.5) if quick else (0.05, 0.1, 0.2, 0.5)
+    methods = ["per_column", "l1", "ds"] if quick else [
+        "per_element", "per_column", "per_sample", "l1", "l2", "var", "ds", "gsv", "rcs"]
+    n_mc = 100 if quick else 400
+    (xtr, ytr), _ = mlp_data()
+    batch = {"x": jnp.asarray(xtr[:128]), "y": jnp.asarray(ytr[:128])}
+    params = mlp_init(jax.random.key(0))
+
+    exact = jax.grad(lambda p: mlp_loss(p, batch, Ctx())[0])(params)
+    out = {}
+    for m in methods:
+        out[m] = {}
+        for p in budgets:
+            pol = make_policy(m, p)
+            gfn = jax.jit(lambda k: jax.grad(
+                lambda q: mlp_loss(q, batch, Ctx(policy=pol, key=k))[0])(params))
+            keys = jax.random.split(jax.random.key(3), n_mc)
+            stats = varlib.mc_gradient_variance(gfn, exact, keys)
+            # per-iteration backward cost factor for the MLP under this method
+            rho = _rho(m, p)
+            V = float(stats["variance"])
+            out[m][str(p)] = {
+                "V": V, "bias_sq": float(stats["bias_sq"]),
+                "exact_norm_sq": float(stats["exact_norm_sq"]), "rho": rho,
+            }
+            print(f"  {m:11s} p={p:.2f} V={V:9.4f} rho={rho:.3f} "
+                  f"bias²={float(stats['bias_sq']):.5f}")
+    save_result("variance_eq6", out)
+    return out
+
+
+def _rho(method, p):
+    """Backward-matmul cost factor vs exact (dX+dW both scale with kept cols
+    for column methods; per_element keeps dense shapes -> no dense-FLOP win)."""
+    if method in ("per_element",):
+        return 1.0  # element sparsity: no dense-matmul reduction (DESIGN §3)
+    if method == "per_sample":
+        return p  # row-sparse: both dX and dW shrink with kept rows
+    return p  # column methods: compact path shrinks dX and dW matmuls by p
+
+
+if __name__ == "__main__":
+    run(quick=False)

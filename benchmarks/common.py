@@ -1,0 +1,115 @@
+"""Shared benchmark harness: train paper models on synthetic data under a
+sketch policy; report accuracy-vs-budget (the paper's x/y axes).
+
+Sizes are scaled for CPU (--full restores paper-scale settings); the
+*comparisons* (method A vs B at equal budget) are what reproduce the paper's
+figures, and those orderings are scale-robust.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import SketchConfig, SketchPolicy
+from repro.data.synthetic import classification
+from repro.models.mlp import mlp_init, mlp_loss
+from repro.nn.common import Ctx
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "bench")
+
+BUDGETS = (0.05, 0.1, 0.2, 0.5)
+
+
+def save_result(name: str, payload: dict):
+    os.makedirs(RESULTS, exist_ok=True)
+    with open(os.path.join(RESULTS, name + ".json"), "w") as f:
+        json.dump(payload, f, indent=1, default=float)
+
+
+def mlp_data(n_train=4096, n_test=1024, seed=0):
+    xtr, ytr = classification(n_train, 784, 10, seed=seed, noise=1.0)
+    xte, yte = classification(n_test, 784, 10, seed=seed + 1, noise=1.0)
+    return (xtr, ytr), (xte, yte)
+
+
+def make_policy(method: str, budget: float, *, exact_r=True, block=0,
+                location="all", include_head=True) -> SketchPolicy | None:
+    if method == "exact":
+        return None
+    cfg = SketchConfig(method=method, budget=budget, exact_r=exact_r, block=block)
+    # paper §5 MLP experiments sketch ALL layers (incl. the 10-way head)
+    excl = () if include_head else ("lm_head",)
+    return SketchPolicy(base=cfg, exclude_roles=excl, location=location)
+
+
+def train_mlp(policy, *, lr=0.2, epochs=10, batch=128, seed=0, clip=1.0,
+              data=None, sizes=(784, 64, 64, 10)):
+    """Paper §5 setting: SGD, no momentum/schedule, clip 1.0, CE loss."""
+    (xtr, ytr), (xte, yte) = data if data is not None else mlp_data(seed=seed)
+    params = mlp_init(jax.random.key(seed), sizes)
+
+    def loss_fn(p, batch, key):
+        ctx = Ctx(policy=policy, key=key)
+        return mlp_loss(p, batch, ctx)
+
+    @jax.jit
+    def step(p, batch, key, lr):
+        (loss, acc), g = jax.value_and_grad(loss_fn, has_aux=True)(p, batch, key)
+        gn = jnp.sqrt(sum(jnp.sum(jnp.square(x)) for x in jax.tree.leaves(g)))
+        scale = jnp.minimum(1.0, clip / jnp.maximum(gn, 1e-12))
+        p = jax.tree.map(lambda w, gg: w - lr * scale * gg, p, g)
+        return p, loss, acc
+
+    @jax.jit
+    def evaluate(p, x, y):
+        return mlp_loss(p, {"x": x, "y": y}, Ctx())[1]
+
+    n = xtr.shape[0]
+    steps_per_epoch = n // batch
+    key = jax.random.key(seed + 100)
+    for ep in range(epochs):
+        perm = np.random.default_rng((seed, ep)).permutation(n)
+        for i in range(steps_per_epoch):
+            idx = perm[i * batch:(i + 1) * batch]
+            k = jax.random.fold_in(key, ep * steps_per_epoch + i)
+            params, loss, acc = step(params, {"x": xtr[idx], "y": ytr[idx]}, k, lr)
+    return {
+        "train_acc": float(evaluate(params, xtr[:2048], ytr[:2048])),
+        "test_acc": float(evaluate(params, xte, yte)),
+    }
+
+
+def train_mlp_best_lr(policy, *, lrs=(0.4, 0.2, 0.1), **kw):
+    """Mini LR cross-validation (paper cross-validates per method/budget)."""
+    best = None
+    for lr in lrs:
+        r = train_mlp(policy, lr=lr, **kw)
+        if best is None or r["test_acc"] > best["test_acc"]:
+            best = dict(r, lr=lr)
+    return best
+
+
+def sweep(methods, budgets=BUDGETS, *, policy_kw=None, train_kw=None, baseline=True):
+    """Run (method × budget) MLP sweeps; returns nested dict."""
+    policy_kw = policy_kw or {}
+    train_kw = train_kw or {}
+    data = mlp_data(seed=train_kw.pop("seed", 0))
+    out = {}
+    if baseline:
+        out["exact"] = {"1.0": train_mlp_best_lr(None, data=data, **train_kw)}
+        print(f"  exact       p=1.00  test_acc={out['exact']['1.0']['test_acc']:.4f}")
+    for m in methods:
+        out[m] = {}
+        for p in budgets:
+            kw = dict(policy_kw)
+            pol = make_policy(m, p, **kw)
+            r = train_mlp_best_lr(pol, data=data, **train_kw)
+            out[m][str(p)] = r
+            print(f"  {m:11s} p={p:.2f}  test_acc={r['test_acc']:.4f} (lr={r['lr']})")
+    return out

@@ -1,0 +1,67 @@
+"""Regenerate the data tables inside EXPERIMENTS.md from results/*.json.
+
+Handwritten narrative lives in EXPERIMENTS.md between table markers; this
+script refreshes the generated blocks:
+    <!-- BEGIN:dryrun_16x16 --> ... <!-- END:dryrun_16x16 -->
+    <!-- BEGIN:dryrun_2x16x16 --> ... <!-- END:dryrun_2x16x16 -->
+"""
+import glob
+import json
+import os
+import re
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+RES = os.path.join(ROOT, "results", "dryrun")
+
+
+def load(mesh):
+    recs = []
+    for p in sorted(glob.glob(os.path.join(RES, "*.json"))):
+        r = json.load(open(p))
+        if r.get("mesh") == mesh or (r.get("status") == "error" and mesh in p):
+            recs.append((os.path.basename(p), r))
+    return recs
+
+
+def table(mesh):
+    rows = ["| arch | cell | policy | peak GB/dev | fits | compute s | memory s (op-level) "
+            "| collective s | dominant | HLO GFLOP/dev | MODEL/HLO FLOPs |",
+            "|---|---|---|---|---|---|---|---|---|---|---|"]
+    for name, r in load(mesh):
+        if r.get("status") != "ok":
+            rows.append(f"| {r.get('arch','?')} | {r.get('cell','?')} | - | - | ERROR | - | - | - | - | - | - |")
+            continue
+        m = r["memory"]
+        rl = r.get("roofline")
+        if rl:
+            ratio = r.get("model_flops_ratio")
+            rows.append(
+                f"| {r['arch']} | {r['cell']} | {r['policy']} | {m['peak_GB_per_dev']:.2f} "
+                f"| {'Y' if m['fits_hbm'] else 'N'} | {rl['compute_s']:.4f} | {rl['memory_s']:.4f} "
+                f"| {rl['collective_s']:.4f} | {rl['dominant']} "
+                f"| {r['cost_full_depth']['flops']/1e9:.1f} | {ratio:.2f} |")
+        else:
+            rows.append(
+                f"| {r['arch']} | {r['cell']} | {r['policy']} | {m['peak_GB_per_dev']:.2f} "
+                f"| {'Y' if m['fits_hbm'] else 'N'} | - | - | - | - | - | - |")
+    return "\n".join(rows)
+
+
+def splice(text, tag, block):
+    pat = re.compile(rf"(<!-- BEGIN:{tag} -->).*?(<!-- END:{tag} -->)", re.S)
+    if not pat.search(text):
+        return text
+    return pat.sub(lambda m: m.group(1) + "\n" + block + "\n" + m.group(2), text)
+
+
+def main():
+    path = os.path.join(ROOT, "EXPERIMENTS.md")
+    text = open(path).read()
+    text = splice(text, "dryrun_16x16", table("16x16"))
+    text = splice(text, "dryrun_2x16x16", table("2x16x16"))
+    open(path, "w").write(text)
+    print("EXPERIMENTS.md tables refreshed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Aggregate results/dryrun/*.json into the §Dry-run / §Roofline tables."""
+import glob
+import json
+import os
+
+RES = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+OUT = os.path.join(os.path.dirname(__file__), "..", "results")
+
+
+def load_records(pattern="*.json"):
+    recs = []
+    for p in sorted(glob.glob(os.path.join(RES, pattern))):
+        with open(p) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def fmt_table(recs, *, mesh="16x16"):
+    rows = []
+    header = ("| arch | cell | policy | peak GB/dev | fits | compute s | memory s "
+              "| collective s | dominant | MODEL_FLOPS/HLO | n_params |")
+    rows.append(header)
+    rows.append("|" + "---|" * 11)
+    for r in recs:
+        if r.get("status") != "ok" or r.get("mesh") != mesh:
+            continue
+        m = r["memory"]
+        rl = r.get("roofline", {})
+        ratio = r.get("model_flops_ratio")
+        rows.append(
+            f"| {r['arch']} | {r['cell']} | {r['policy']} | {m['peak_GB_per_dev']:.2f} "
+            f"| {'Y' if m['fits_hbm'] else 'N'} "
+            f"| {rl.get('compute_s', float('nan')):.4f} | {rl.get('memory_s', float('nan')):.4f} "
+            f"| {rl.get('collective_s', float('nan')):.4f} | {rl.get('dominant', '-')} "
+            f"| {ratio:.3f} | {r.get('n_params', 0):.3g} |"
+            if rl else
+            f"| {r['arch']} | {r['cell']} | {r['policy']} | {m['peak_GB_per_dev']:.2f} "
+            f"| {'Y' if m['fits_hbm'] else 'N'} | - | - | - | - | - | {r.get('n_params', 0):.3g} |")
+    return "\n".join(rows)
+
+
+def main():
+    recs = load_records()
+    os.makedirs(OUT, exist_ok=True)
+    for mesh in ("16x16", "2x16x16"):
+        t = fmt_table(recs, mesh=mesh)
+        with open(os.path.join(OUT, f"roofline_{mesh}.md"), "w") as f:
+            f.write(t + "\n")
+        print(f"== mesh {mesh} ==")
+        print(t)
+        print()
+
+
+if __name__ == "__main__":
+    main()

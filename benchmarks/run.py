@@ -1,0 +1,51 @@
+"""Run every benchmark (quick mode by default; --full for paper-scale).
+
+One benchmark per paper table/figure — see DESIGN.md §6 for the index.
+"""
+import argparse
+import time
+import traceback
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    quick = not args.full
+
+    from benchmarks import (bench_block_granularity, bench_cost,
+                            bench_fig1a_correlation, bench_fig1b_mask_vs_sketch,
+                            bench_fig2a_proxies, bench_fig2b_spectral,
+                            bench_fig3_larger_archs, bench_fig4_location,
+                            bench_variance)
+    jobs = {
+        "fig1a_correlation": bench_fig1a_correlation.run,
+        "fig1b_mask_vs_sketch": bench_fig1b_mask_vs_sketch.run,
+        "fig2a_proxies": bench_fig2a_proxies.run,
+        "fig2b_spectral": bench_fig2b_spectral.run,
+        "fig3_larger_archs": bench_fig3_larger_archs.run,
+        "fig4_location": bench_fig4_location.run,
+        "variance_eq6": bench_variance.run,
+        "cost_backends": bench_cost.run,
+        "block_granularity": bench_block_granularity.run,
+    }
+    failures = 0
+    for name, fn in jobs.items():
+        if args.only and args.only != name:
+            continue
+        print(f"\n===== {name} =====", flush=True)
+        t0 = time.time()
+        try:
+            fn(quick=quick)
+            print(f"[{name}] done in {time.time()-t0:.1f}s")
+        except Exception:
+            failures += 1
+            traceback.print_exc()
+            print(f"[{name}] FAILED")
+    print(f"\nbenchmarks complete, failures={failures}")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

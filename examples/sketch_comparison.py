@@ -1,0 +1,35 @@
+"""Compare every sketch method at one budget (mini paper Figs. 1b/2a/2b).
+
+    PYTHONPATH=src python examples/sketch_comparison.py --budget 0.2
+"""
+import argparse
+import sys
+
+sys.path.insert(0, ".")  # allow running from repo root for benchmarks import
+
+from benchmarks.common import make_policy, mlp_data, train_mlp_best_lr  # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--budget", type=float, default=0.2)
+    ap.add_argument("--epochs", type=int, default=10)
+    args = ap.parse_args()
+
+    data = mlp_data()
+    methods = ["exact", "per_element", "per_column", "per_sample",
+               "l1", "l2", "var", "ds", "gsv", "rcs"]
+    print(f"budget p = {args.budget}")
+    rows = []
+    for m in methods:
+        pol = make_policy(m, args.budget) if m != "exact" else None
+        r = train_mlp_best_lr(pol, data=data, epochs=args.epochs)
+        rows.append((m, r["test_acc"], r["lr"]))
+        print(f"  {m:12s} test_acc={r['test_acc']:.4f} (lr={r['lr']})")
+    best = max(rows[1:], key=lambda t: t[1])
+    print(f"\nbest sketch at p={args.budget}: {best[0]} ({best[1]:.4f}); "
+          f"exact reference {rows[0][1]:.4f}")
+
+
+if __name__ == "__main__":
+    main()

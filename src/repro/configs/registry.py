@@ -1,0 +1,53 @@
+"""Registry of assigned architectures (+ reduced smoke variants).
+
+Every entry reproduces the exact published config assigned to this paper
+(see README table). ``smoke_config(name)`` shrinks depth/width/vocab for CPU
+tests while keeping the *family structure* (MoE routing, local:global pattern,
+shared-attn period, enc-dec split, ...) intact.
+"""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import SHAPE_CELLS, ArchConfig
+
+ARCH_IDS = (
+    "olmoe_1b_7b",
+    "mixtral_8x22b",
+    "qwen2_vl_2b",
+    "seamless_m4t_large_v2",
+    "nemotron_4_340b",
+    "gemma3_1b",
+    "yi_6b",
+    "llama3_405b",
+    "zamba2_7b",
+    "rwkv6_3b",
+)
+
+_ALIASES = {a.replace("_", "-"): a for a in ARCH_IDS}
+
+
+def get_config(name: str) -> ArchConfig:
+    name = _ALIASES.get(name, name)
+    if name not in ARCH_IDS:
+        raise KeyError(f"unknown arch {name!r}; known: {ARCH_IDS}")
+    mod = importlib.import_module(f"repro.configs.{name}")
+    return mod.CONFIG
+
+
+def smoke_config(name: str) -> ArchConfig:
+    name = _ALIASES.get(name, name)
+    mod = importlib.import_module(f"repro.configs.{name}")
+    return mod.SMOKE
+
+
+def cells_for(cfg: ArchConfig):
+    """Shape cells that apply to this arch (long_500k needs sub-quadratic attn)."""
+    cells = ["train_4k", "prefill_32k", "decode_32k"]
+    if cfg.sub_quadratic:
+        cells.append("long_500k")
+    return [SHAPE_CELLS[c] for c in cells]
+
+
+def skipped_cells_for(cfg: ArchConfig):
+    return [] if cfg.sub_quadratic else [SHAPE_CELLS["long_500k"]]

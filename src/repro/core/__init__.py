@@ -1,0 +1,32 @@
+"""Paper core: unbiased randomized VJP sketching."""
+from repro.core.policy import POLICY_PRESETS, SketchPolicy
+from repro.core.sketched_linear import linear, sketched_linear
+from repro.core.sketching import (
+    ALL_METHODS,
+    COLUMN_METHODS,
+    ColumnPlan,
+    SketchConfig,
+    column_gate,
+    column_plan,
+    sketch_dense,
+    static_rank,
+)
+from repro.core import solver, scores, variance
+
+__all__ = [
+    "ALL_METHODS",
+    "COLUMN_METHODS",
+    "ColumnPlan",
+    "POLICY_PRESETS",
+    "SketchConfig",
+    "SketchPolicy",
+    "column_gate",
+    "column_plan",
+    "linear",
+    "scores",
+    "sketch_dense",
+    "sketched_linear",
+    "solver",
+    "static_rank",
+    "variance",
+]

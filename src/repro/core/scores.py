@@ -1,0 +1,83 @@
+"""Importance scores (weight proxies) for data-dependent sketches (paper §4.2).
+
+Every score function maps the batch gradient matrix ``G`` (rows = flattened
+batch/sequence samples, columns = output coordinates of the linear node, i.e.
+the *practical* convention of the paper's Appendix C) to a non-negative proxy
+vector ``s`` of shape ``[d_out]``. Sampling probabilities are then
+``p ∝ s`` — equivalently the convex program (23) is solved with importance
+weights ``w_i = s_i²`` (since its solution satisfies ``p_i ∝ sqrt(w_i)``).
+"Squared" proxy variants (paper §4.2 last paragraph) use ``w_i = s_i⁴``.
+
+Scores accumulate in fp32 regardless of input dtype.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["column_scores", "SCORE_METHODS"]
+
+
+def _f32(x):
+    return x.astype(jnp.float32)
+
+
+def _l1(G, W):
+    # Alg. 6: s_j = ||G[:, j]||_1  (the paper's default proxy).
+    return jnp.sum(jnp.abs(_f32(G)), axis=0)
+
+
+def _l2(G, W):
+    return jnp.sqrt(jnp.sum(jnp.square(_f32(G)), axis=0))
+
+
+def _var(G, W):
+    return jnp.var(_f32(G), axis=0)
+
+
+def _ds(G, W):
+    # Lemma 3.4 / "Diagonal Sketches": a_i = (Γ_B)_ii (JᵀJ)_ii with J = Wᵀ,
+    # so (JᵀJ)_ii = ||W[i, :]||². Optimal p ∝ sqrt(a) ⇒ proxy s = sqrt(a).
+    if W is None:
+        raise ValueError("DS score requires the layer weight W.")
+    gamma_diag = jnp.mean(jnp.square(_f32(G)), axis=0)  # (Γ_B)_ii
+    w_row_sq = jnp.sum(jnp.square(_f32(W)), axis=-1)  # ||W[i,:]||², shape [d_out]
+    return jnp.sqrt(gamma_diag * w_row_sq)
+
+
+def _gsv(G, W):
+    # "G-SV": importance from the SVD of the batch gradient matrix G.
+    # We use spectrally-weighted right-singular leverage:
+    #     s_i = Σ_k σ_k v_{k,i}²
+    # which interpolates between ℓ2² column energy (σ_k² weighting) and plain
+    # leverage (uniform weighting). See DESIGN.md §3 for the interpretation.
+    Gf = _f32(G)
+    n = Gf.shape[-1]
+    gram = Gf.T @ Gf  # [n, n]; eigvecs = right singular vectors, eigvals = σ²
+    evals, evecs = jnp.linalg.eigh(gram)
+    sing = jnp.sqrt(jnp.maximum(evals, 0.0))
+    return jnp.einsum("k,ik->i", sing, jnp.square(evecs))
+
+
+_BASE = {
+    "l1": _l1,
+    "l2": _l2,
+    "var": _var,
+    "ds": _ds,
+    "gsv": _gsv,
+}
+
+SCORE_METHODS = tuple(_BASE.keys()) + tuple(f"{k}_sq" for k in _BASE)
+
+
+def column_scores(method: str, G: jax.Array, W: jax.Array | None = None) -> jax.Array:
+    """Proxy scores ``s`` (shape ``[d_out]``); probabilities will be ``p ∝ s``.
+
+    ``method`` may carry the ``_sq`` suffix for the squared proxy variant.
+    """
+    squared = method.endswith("_sq")
+    base = method[:-3] if squared else method
+    if base not in _BASE:
+        raise ValueError(f"unknown score method {method!r}; choose from {SCORE_METHODS}")
+    s = _BASE[base](G, W)
+    return jnp.square(s) if squared else s

@@ -1,0 +1,292 @@
+"""Tensor-parallel compact sketching with compressed gradient collectives.
+
+The pjit-auto compact path breaks down under TP: gathering sketched columns of
+a model-sharded G and scattering dW rows with data-dependent indices forces
+XLA to replicate full fp32 buffers (measured in EXPERIMENTS.md §Perf). This
+module is the TP-native realisation (DESIGN.md §3):
+
+  * the column budget is split per model shard (r_loc = r / n_mp), planned
+    *locally* inside ``shard_map`` — static shapes, no score all-gather;
+    still exactly unbiased (unbiasedness is per-coordinate for any p > 0);
+  * dX: local compact matmul + the SAME psum over the model axis a dense TP
+    backward needs — no extra collectives;
+  * dW: the compact [r_loc, d_in] block is reduce-scattered over the data
+    axis BEFORE scattering into the full gradient — the DP gradient
+    collective moves ≈ budget × the dense volume. This is the compressed
+    all-reduce enabled by the paper's batch-shared sketch (R shared across
+    the minibatch ⇒ the step key is shared across DP replicas ⇒ identical
+    index sets on every data shard).
+
+Applies to sites whose d_out is TP-sharded (attn q/k/v, mlp in/gate); other
+sites keep the paper-faithful mask backend. See ``nn.common.dense``.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core.sketching import SketchConfig, column_plan, effective_cfg
+
+__all__ = ["tp_sketched_linear", "tp_applicable"]
+
+
+def tp_applicable(ctx, cfg, d_out: int) -> bool:
+    if ctx.mesh is None or not getattr(ctx, "tp_sketch", False) or cfg is None:
+        return False
+    if cfg.backend not in ("compact", "pallas") or cfg.is_noop:
+        return False
+    n_mp = 1
+    for a in ctx.model_axes:
+        n_mp *= ctx.mesh.shape[a]
+    if d_out % n_mp != 0:
+        return False
+    n_loc = d_out // n_mp
+    from repro.core.sketching import static_rank, static_block_rank
+    if cfg.block > 1:
+        return n_loc % cfg.block == 0 and static_block_rank(cfg, n_loc) >= 1
+    return static_rank(cfg, n_loc) >= 1
+
+
+def tp_sketched_linear(x, w, ctx, cfg: SketchConfig, key):
+    """x: [B, S, d_in]; w: [n, d_in] with n TP-sharded. Returns [B, S, n]."""
+    mesh = ctx.mesh
+    dp = tuple(ctx.data_axes)
+    mp = ctx.model_axes[0]
+    fn = _build(cfg, mesh, dp, mp, x.shape, w.shape)
+    return fn(x, w, key)
+
+
+def _build(cfg, mesh, dp, mp, x_shape, w_shape):
+    B, S, din = x_shape
+    n, _ = w_shape
+    n_dp = 1
+    for a in dp:
+        n_dp *= mesh.shape[a]
+    n_mp = mesh.shape[mp]
+    scatter_axis = dp[-1] if dp else None
+    n_scatter = mesh.shape[scatter_axis] if scatter_axis else 1
+    psum_rest = tuple(a for a in dp[:-1])
+    din_ok = din % n_scatter == 0
+
+    @partial(jax.custom_vjp, nondiff_argnums=())
+    def fwd_fn(x, w, key):
+        def body(x_l, w_l):
+            return jnp.einsum("bsi,oi->bso", x_l, w_l)
+
+        return jax.shard_map(
+            body, mesh=mesh,
+            in_specs=(P(dp, None, None), P(mp, None)),
+            out_specs=P(dp, None, mp), check_vma=False)(x, w)
+
+    def fwd(x, w, key):
+        return fwd_fn(x, w, key), (x, w, key)
+
+    def bwd(res, g):
+        x, w, key = res
+
+        def body(g_l, x_l, w_l, key):
+            # per-shard local plan: fold the (DP-shared) key with the model
+            # shard index so shards sample independent column subsets
+            kk = jax.random.fold_in(key, jax.lax.axis_index(mp))
+            G2d = g_l.reshape(-1, g_l.shape[-1])
+            X2d = x_l.reshape(-1, x_l.shape[-1])
+            lcfg = effective_cfg(cfg, G2d.shape[-1])
+            plan = column_plan(lcfg, G2d, w_l, kk, want_compact=True,
+                               score_psum_axes=dp)
+            idx, scales = plan.indices, plan.scales
+            if lcfg.block > 1:
+                bs = lcfg.block
+                idx = (idx[:, None] * bs + jnp.arange(bs, dtype=idx.dtype)).reshape(-1)
+                scales = jnp.repeat(scales, bs)
+            Gc = jnp.take(G2d, idx, axis=1) * scales[None, :].astype(g_l.dtype)
+            Wc = jnp.take(w_l, idx, axis=0)
+            dx = (Gc @ Wc).reshape(x_l.shape)
+            dx = jax.lax.psum(dx, mp)  # the standard TP backward all-reduce
+            dWc = Gc.T.astype(jnp.float32) @ X2d.astype(jnp.float32)
+            if psum_rest:
+                dWc = jax.lax.psum(dWc, psum_rest)
+            if scatter_axis and din_ok:
+                # compressed DP gradient collective: reduce-scatter the
+                # COMPACT block (≈ budget × dense volume) along d_in
+                dWc = jax.lax.psum_scatter(dWc, scatter_axis, scatter_dimension=1,
+                                           tiled=True)
+                dW_l = jnp.zeros((w_l.shape[0], dWc.shape[1]), w_l.dtype)
+                dW_l = dW_l.at[idx].add(dWc.astype(w_l.dtype))
+            else:
+                if scatter_axis:
+                    dWc = jax.lax.psum(dWc, scatter_axis)
+                dW_l = jnp.zeros_like(w_l).at[idx].add(dWc.astype(w_l.dtype))
+            return dx, dW_l
+
+        out_w_spec = P(mp, dp[-1] if (scatter_axis and din_ok) else None)
+        dx, dw = jax.shard_map(
+            body, mesh=mesh,
+            in_specs=(P(dp, None, mp), P(dp, None, None), P(mp, None), P()),
+            out_specs=(P(dp, None, None), out_w_spec), check_vma=False)(
+                g, x, w, key)
+        return dx, dw, None
+
+    fwd_fn.defvjp(fwd, bwd)
+    return fwd_fn
+
+
+def tp_row_applicable(ctx, cfg, d_in: int) -> bool:
+    """Row-parallel sites (attn_o / mlp_out / ssm_out): d_in is TP-sharded,
+    d_out is the (unsharded) residual width."""
+    if ctx.mesh is None or not getattr(ctx, "tp_sketch", False) or cfg is None:
+        return False
+    if cfg.backend not in ("compact", "pallas") or cfg.is_noop:
+        return False
+    n_mp = 1
+    for a in ctx.model_axes:
+        n_mp *= ctx.mesh.shape[a]
+    return d_in % n_mp == 0
+
+
+def tp_row_sketched_linear(x, w, ctx, cfg: SketchConfig, key):
+    """x: [B, S, d_in] (d_in TP-sharded); w: [n, d_in]. Returns [B, S, n].
+
+    Megatron row-parallel: forward computes local partials + psum(mp).
+    Backward sketches columns of the (mp-replicated) output gradient — the
+    plan is identical on every shard (same key, scores psum'ed over dp), so
+    dX stays local (ff-sharded) and the compact dW block reduce-scatters
+    over dp as in the column-parallel path.
+    """
+    mesh = ctx.mesh
+    dp = tuple(ctx.data_axes)
+    mp = ctx.model_axes[0]
+    fn = _build_row(cfg, mesh, dp, mp, x.shape, w.shape)
+    return fn(x, w, key)
+
+
+def _build_row(cfg, mesh, dp, mp, x_shape, w_shape):
+    n = w_shape[0]
+    scatter_axis = dp[-1] if dp else None
+    n_scatter = mesh.shape[scatter_axis] if scatter_axis else 1
+    psum_rest = tuple(a for a in dp[:-1])
+    n_mp = mesh.shape[mp]
+    din_loc = w_shape[1] // n_mp
+    din_ok = din_loc % n_scatter == 0
+
+    @partial(jax.custom_vjp, nondiff_argnums=())
+    def fwd_fn(x, w, key):
+        def body(x_l, w_l):
+            y_part = jnp.einsum("bsi,oi->bso", x_l, w_l)
+            return jax.lax.psum(y_part, mp)
+
+        return jax.shard_map(
+            body, mesh=mesh,
+            in_specs=(P(dp, None, mp), P(None, mp)),
+            out_specs=P(dp, None, None), check_vma=False)(x, w)
+
+    def fwd(x, w, key):
+        return fwd_fn(x, w, key), (x, w, key)
+
+    def bwd(res, g):
+        x, w, key = res
+
+        def body(g_l, x_l, w_l, key):
+            # g is mp-replicated: plan once with the shared key (NO mp fold)
+            G2d = g_l.reshape(-1, g_l.shape[-1])
+            X2d = x_l.reshape(-1, x_l.shape[-1])
+            lcfg = effective_cfg(cfg, G2d.shape[-1])
+            plan = column_plan(lcfg, G2d, w_l, key, want_compact=True,
+                               score_psum_axes=dp)
+            idx, scales = plan.indices, plan.scales
+            if lcfg.block > 1:
+                bs = lcfg.block
+                idx = (idx[:, None] * bs + jnp.arange(bs, dtype=idx.dtype)).reshape(-1)
+                scales = jnp.repeat(scales, bs)
+            Gc = jnp.take(G2d, idx, axis=1) * scales[None, :].astype(g_l.dtype)
+            Wc = jnp.take(w_l, idx, axis=0)  # [r, din_loc]
+            dx = (Gc @ Wc).reshape(x_l.shape)  # stays ff-local: no collective
+            dWc = Gc.T.astype(jnp.float32) @ X2d.astype(jnp.float32)
+            if psum_rest:
+                dWc = jax.lax.psum(dWc, psum_rest)
+            if scatter_axis and din_ok:
+                dWc = jax.lax.psum_scatter(dWc, scatter_axis, scatter_dimension=1,
+                                           tiled=True)
+                dW_l = jnp.zeros((w_l.shape[0], dWc.shape[1]), w_l.dtype)
+                dW_l = dW_l.at[idx].add(dWc.astype(w_l.dtype))
+            else:
+                if scatter_axis:
+                    dWc = jax.lax.psum(dWc, scatter_axis)
+                dW_l = jnp.zeros_like(w_l).at[idx].add(dWc.astype(w_l.dtype))
+            return dx, dW_l
+
+        out_w_spec = P(None, (mp, scatter_axis) if (scatter_axis and din_ok) else mp)
+        dx, dw = jax.shard_map(
+            body, mesh=mesh,
+            in_specs=(P(dp, None, None), P(dp, None, mp), P(None, mp), P()),
+            out_specs=(P(dp, None, mp), out_w_spec), check_vma=False)(
+                g, x, w, key)
+        return dx, dw, None
+
+    fwd_fn.defvjp(fwd, bwd)
+    return fwd_fn
+
+
+def tp_exact_linear(x, w, ctx, key=None):
+    """Explicit Megatron column-parallel linear with EXACT backward.
+
+    Used for sites excluded from sketching (e.g. the vocabulary head, which
+    the paper keeps exact): same shard_map structure as the sketched path so
+    the dW einsum never hits the pjit sharding conflict that replicates
+    full fp32 weight gradients (EXPERIMENTS.md §Perf It.3).
+    """
+    mesh = ctx.mesh
+    dp = tuple(ctx.data_axes)
+    mp = ctx.model_axes[0]
+    fn = _build_exact(mesh, dp, mp, w.shape)
+    return fn(x, w)
+
+
+def _build_exact(mesh, dp, mp, w_shape):
+    scatter_axis = dp[-1] if dp else None
+    n_scatter = mesh.shape[scatter_axis] if scatter_axis else 1
+    psum_rest = tuple(a for a in dp[:-1])
+    din_ok = w_shape[1] % n_scatter == 0
+
+    @partial(jax.custom_vjp, nondiff_argnums=())
+    def fwd_fn(x, w):
+        def body(x_l, w_l):
+            return jnp.einsum("bsi,oi->bso", x_l, w_l)
+
+        return jax.shard_map(body, mesh=mesh,
+                             in_specs=(P(dp, None, None), P(mp, None)),
+                             out_specs=P(dp, None, mp), check_vma=False)(x, w)
+
+    def fwd(x, w):
+        return fwd_fn(x, w), (x, w)
+
+    def bwd(res, g):
+        x, w = res
+
+        def body(g_l, x_l, w_l):
+            G2d = g_l.reshape(-1, g_l.shape[-1])
+            X2d = x_l.reshape(-1, x_l.shape[-1])
+            dx = (G2d @ w_l).reshape(x_l.shape)
+            dx = jax.lax.psum(dx, mp)
+            dW = jax.lax.dot_general(G2d.astype(jnp.float32), X2d.astype(jnp.float32),
+                                     (((0,), (0,)), ((), ())))
+            if psum_rest:
+                dW = jax.lax.psum(dW, psum_rest)
+            if scatter_axis and din_ok:
+                dW = jax.lax.psum_scatter(dW, scatter_axis, scatter_dimension=1,
+                                          tiled=True)
+            elif scatter_axis:
+                dW = jax.lax.psum(dW, scatter_axis)
+            return dx, dW.astype(w_l.dtype)
+
+        out_w_spec = P(mp, scatter_axis if (scatter_axis and din_ok) else None)
+        dx, dw = jax.shard_map(body, mesh=mesh,
+                               in_specs=(P(dp, None, mp), P(dp, None, None), P(mp, None)),
+                               out_specs=(P(dp, None, None), out_w_spec),
+                               check_vma=False)(g, x, w)
+        return dx, dw
+
+    fwd_fn.defvjp(fwd, bwd)
+    return fwd_fn

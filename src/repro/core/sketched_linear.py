@@ -1,0 +1,134 @@
+"""Linear layer with an unbiased sketched backward pass (paper App. C).
+
+Forward (practical convention):  ``y = x @ W.T (+ b)`` with ``x: [..., d_in]``,
+``W: [d_out, d_in]``. The *backward* replaces the exact VJP by the configured
+unbiased estimator:
+
+* mask backend      — Alg. 3 / 4 / 5 / 6 verbatim (dense masked matmuls),
+* compact backend   — gather the r kept columns, reduced-shape matmuls,
+                      scatter dW rows (TPU-native realisation of the same
+                      estimator; bit-identical in expectation, and *exactly*
+                      identical to mask for the same key),
+* pallas backend    — compact semantics, Pallas gather-matmul kernels.
+
+The RNG key rides through the forward as a regular argument and is consumed
+only in the backward (stored in residuals), so a jitted ``grad`` of a model
+containing many sketched layers stays a pure function of ``(params, batch,
+step_key)``.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sketching import SketchConfig, column_plan, sketch_dense
+
+__all__ = ["sketched_linear", "linear"]
+
+
+def _flatten_leading(x):
+    lead = x.shape[:-1]
+    return x.reshape((-1, x.shape[-1])), lead
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _sketched_linear(cfg: SketchConfig, x, w, b, key):
+    y = jnp.einsum("...i,oi->...o", x, w)
+    if b is not None:
+        y = y + b
+    return y
+
+
+def _fwd(cfg: SketchConfig, x, w, b, key):
+    y = _sketched_linear(cfg, x, w, b, key)
+    return y, (x, w, key, b is not None)
+
+
+def _bwd(cfg: SketchConfig, res, g):
+    x, w, key, has_b = res
+    G2d, lead = _flatten_leading(g)
+    X2d, _ = _flatten_leading(x)
+    n = G2d.shape[-1]
+
+    if cfg.method == "per_element":
+        # Alg. 3: independent element masks on W (for dX) and X (for dW);
+        # bias gradient stays exact.
+        kw, kx = jax.random.split(key)
+        p = cfg.budget
+        mw = jax.random.bernoulli(kw, p, w.shape).astype(w.dtype)
+        mx = jax.random.bernoulli(kx, p, X2d.shape).astype(x.dtype)
+        dX = (G2d @ (w * mw)) / p
+        dW = (G2d.T @ (X2d * mx)) / p
+        db = jnp.sum(G2d, axis=0) if has_b else None
+        return _pack(dX.reshape(x.shape), dW.astype(w.dtype), db, g.dtype, has_b)
+
+    use_compact = cfg.backend in ("compact", "pallas") and not cfg.is_noop
+    if use_compact:
+        from repro.core.sketching import effective_cfg
+
+        cfg = effective_cfg(cfg, n)
+        plan = column_plan(cfg, G2d, w, key, want_compact=True)
+        idx, scales = plan.indices, plan.scales
+        if cfg.block > 1:
+            if cfg.backend == "pallas":
+                from repro.kernels import ops as kops
+
+                dX2d = kops.block_gather_matmul(G2d, idx, scales, w, block=cfg.block)
+                dWc = kops.block_gather_matmul_dw(G2d, idx, scales, X2d, block=cfg.block)
+            # expand block plan to per-column indices for the XLA paths below
+            bs = cfg.block
+            cols = (idx[:, None] * bs + jnp.arange(bs, dtype=idx.dtype)[None, :]).reshape(-1)
+            col_scales = jnp.repeat(scales, bs)
+            idx, scales = cols, col_scales
+            if cfg.backend == "pallas":
+                dW = jnp.zeros_like(w).at[idx].add(dWc.reshape(-1, w.shape[1]).astype(w.dtype))
+                db = None
+                if has_b:
+                    db_c = (jnp.take(G2d, idx, axis=1) * scales[None, :].astype(g.dtype)).sum(0)
+                    db = jnp.zeros((n,), g.dtype).at[idx].add(db_c)
+                return _pack(dX2d.reshape(x.shape), dW, db, g.dtype, has_b)
+        if cfg.backend == "pallas":
+            from repro.kernels import ops as kops
+
+            dX2d = kops.gather_cols_matmul(G2d, idx, scales, w)
+            dWc = kops.gather_cols_matmul_dw(G2d, idx, scales, X2d)
+        else:
+            Gc = jnp.take(G2d, idx, axis=1) * scales[None, :].astype(g.dtype)
+            Wc = jnp.take(w, idx, axis=0)
+            dX2d = Gc @ Wc
+            dWc = Gc.T @ X2d
+        dW = jnp.zeros_like(w).at[idx].add(dWc.astype(w.dtype))
+        db = None
+        if has_b:
+            db_c = (jnp.take(G2d, idx, axis=1) * scales[None, :].astype(g.dtype)).sum(0)
+            db = jnp.zeros((n,), g.dtype).at[idx].add(db_c)
+        return _pack(dX2d.reshape(x.shape), dW, db, g.dtype, has_b)
+
+    # Dense mask backend (paper-faithful), incl. per_sample / rcs / none.
+    Ghat = sketch_dense(cfg, G2d, w, key)
+    dX = Ghat @ w
+    dW = Ghat.T @ X2d
+    db = jnp.sum(Ghat, axis=0) if has_b else None
+    return _pack(dX.reshape(x.shape), dW.astype(w.dtype), db, g.dtype, has_b)
+
+
+def _pack(dx, dw, db, gdtype, has_b):
+    return (dx, dw, db if has_b else None, None)
+
+
+_sketched_linear.defvjp(_fwd, _bwd)
+
+
+def sketched_linear(x, w, b=None, *, key=None, cfg: Optional[SketchConfig] = None):
+    """Public entry point. ``cfg=None`` (or noop cfg / no key) = exact linear."""
+    if cfg is None or cfg.is_noop or key is None:
+        y = jnp.einsum("...i,oi->...o", x, w)
+        return y + b if b is not None else y
+    return _sketched_linear(cfg, x, w, b, key)
+
+
+# Alias used across the nn substrate.
+linear = sketched_linear

@@ -1,0 +1,116 @@
+"""Optimal sampling probabilities and correlated exact-r sampling.
+
+Implements the paper's Algorithm 1 (water-filling solution of the convex program
+
+    min_p  sum_i w_i / p_i   s.t.  sum_i p_i <= r,  p_i in (0, 1]
+
+whose KKT solution is p_i* = min(1, t_i / sqrt(lambda)) with t_i = sqrt(w_i)),
+and Algorithm 2 (systematic sampling of correlated Bernoulli variables with
+fixed sum r, as required by Lemma 3.1 / Proposition 3.3).
+
+Everything here is jittable with static ``r``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "optimal_probabilities",
+    "sample_exact_r",
+    "sample_independent",
+    "expected_distortion",
+]
+
+
+def optimal_probabilities(weights: jax.Array, r: int, *, eps: float = 1e-12) -> jax.Array:
+    """Water-filling solution of the paper's convex program (Eq. 23 / Alg. 1).
+
+    Args:
+      weights: non-negative importance weights ``w_i`` (shape ``[n]``). The
+        optimal probabilities are ``p_i = min(1, sqrt(w_i)/sqrt(lambda))``.
+      r: expected/exact budget (number of kept coordinates), ``1 <= r <= n``.
+      eps: relative floor added to the weights so that every coordinate keeps
+        a strictly positive probability (required for unbiasedness when a
+        proxy score underestimates a coordinate that still carries signal —
+        see DESIGN.md §3).
+
+    Returns:
+      ``p`` of shape ``[n]`` with ``p_i in (0, 1]`` and ``sum(p) == r`` (up to
+      float error), matching the thresholding structure of the KKT conditions.
+    """
+    n = weights.shape[-1]
+    if r >= n:
+        return jnp.ones_like(weights)
+    w = jnp.asarray(weights, jnp.float32)
+    w = jnp.maximum(w, 0.0)
+    mean_w = jnp.mean(w)
+    # Relative floor: keeps p_i > 0. If all weights vanish, fall back to uniform.
+    w = jnp.where(mean_w > 0, w + eps * mean_w, jnp.ones_like(w))
+
+    t = jnp.sqrt(w)
+    t_sorted = jnp.sort(t)[::-1]  # descending
+    # suffix[k] = sum_{i >= k} t_sorted[i]  (0-indexed), k in [0, n-1]
+    suffix = jnp.cumsum(t_sorted[::-1])[::-1]
+    k = jnp.arange(n, dtype=jnp.float32)
+    denom = jnp.float32(r) - k  # remaining budget if k entries saturate at 1
+    valid_budget = denom > 0
+    sqrt_lam_k = jnp.where(valid_budget, suffix / jnp.maximum(denom, 1.0), jnp.inf)
+    # k is feasible iff the k saturated entries really exceed the water level
+    # and the (k+1)-th does not:  t_(k-1) >= sqrt(lam_k) >= t_(k).
+    t_prev = jnp.concatenate([jnp.array([jnp.inf], t_sorted.dtype), t_sorted[:-1]])
+    feasible = valid_budget & (t_prev >= sqrt_lam_k) & (t_sorted <= sqrt_lam_k)
+    # The smallest feasible k is the water-filling threshold.
+    k_star = jnp.argmax(feasible)  # first True (argmax of bool)
+    any_feasible = jnp.any(feasible)
+    sqrt_lam = jnp.where(any_feasible, sqrt_lam_k[k_star], t_sorted[r - 1] if r >= 1 else 0.0)
+    sqrt_lam = jnp.maximum(sqrt_lam, eps)
+    p = jnp.minimum(1.0, t / sqrt_lam)
+    # Exact renormalisation to sum(p) == r by a short fixed-point water-fill:
+    # rescale the unsaturated block to absorb the remaining budget, clip, and
+    # repeat (clipping can re-saturate entries; a one-shot rescale would leave
+    # sum(p) < r and WARP THE SAMPLER'S MARGINALS -> bias).
+    def refill(p, _):
+        sat = p >= 1.0 - 1e-7
+        n_sat = jnp.sum(sat)
+        rest = jnp.sum(jnp.where(sat, 0.0, p))
+        scale = jnp.where(rest > 0, (r - n_sat) / jnp.maximum(rest, eps), 1.0)
+        return jnp.where(sat, 1.0, jnp.minimum(p * scale, 1.0)), None
+
+    p, _ = jax.lax.scan(refill, p, None, length=8)
+    return p
+
+
+def sample_exact_r(key: jax.Array, p: jax.Array, r: int) -> jax.Array:
+    """Correlated Bernoulli sampling with sum == r (paper Alg. 2).
+
+    Systematic sampling: marginals are exactly ``p_i`` and exactly ``r``
+    *distinct* indices are returned (requires ``p_i <= 1`` and ``sum p = r``).
+
+    Returns indices of shape ``[r]`` (int32, ascending).
+    """
+    n = p.shape[-1]
+    cum = jnp.cumsum(p.astype(jnp.float64) if jax.config.read("jax_enable_x64") else p.astype(jnp.float32))
+    cum = cum.at[-1].set(jnp.float32(r))  # numerical safety (Alg. 2 line 3)
+    u = jax.random.uniform(key, (), minval=jnp.finfo(jnp.float32).tiny, maxval=1.0)
+    targets = u + jnp.arange(r, dtype=jnp.float32)
+    idx = jnp.searchsorted(cum, targets, side="left")
+    return jnp.clip(idx, 0, n - 1).astype(jnp.int32)
+
+
+def sample_independent(key: jax.Array, p: jax.Array) -> jax.Array:
+    """Independent Bernoulli gates z_i ~ B(p_i) (Lemma 3.4 setting).
+
+    Returns a float mask of shape ``[n]`` (0/1). Expected count is sum(p).
+    """
+    return jax.random.bernoulli(key, p).astype(jnp.float32)
+
+
+def expected_distortion(weights: jax.Array, p: jax.Array) -> jax.Array:
+    """E-distortion  sum_i w_i (1/p_i - 1)  of a mask-and-rescale sketch.
+
+    This is the objective of Eq. (23) minus its constant part (Lemma 3.4,
+    Eq. 49): used by tests and by the variance diagnostics.
+    """
+    safe_p = jnp.maximum(p, 1e-20)
+    return jnp.sum(jnp.where(weights > 0, weights * (1.0 / safe_p - 1.0), 0.0))

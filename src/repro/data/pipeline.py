@@ -1,0 +1,42 @@
+"""Host data pipeline: background prefetch + device placement.
+
+Multi-host note: each process feeds its own addressable shard of the global
+batch (``jax.make_array_from_process_local_data``); on single-process meshes
+(tests, CPU dry-run hosts) ``device_put`` against the batch sharding suffices.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+
+import jax
+
+__all__ = ["prefetch", "shard_batch"]
+
+
+def shard_batch(batch: dict, shardings: dict | None):
+    if shardings is None:
+        return batch
+    return {k: jax.device_put(v, shardings[k]) if k in shardings else jax.device_put(v)
+            for k, v in batch.items()}
+
+
+def prefetch(it, size: int = 2, shardings: dict | None = None):
+    """Background-thread prefetch with device placement overlap."""
+    q: queue.Queue = queue.Queue(maxsize=size)
+    _END = object()
+
+    def worker():
+        try:
+            for item in it:
+                q.put(shard_batch(item, shardings))
+        finally:
+            q.put(_END)
+
+    t = threading.Thread(target=worker, daemon=True)
+    t.start()
+    while True:
+        item = q.get()
+        if item is _END:
+            return
+        yield item

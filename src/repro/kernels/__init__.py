@@ -1,0 +1,3 @@
+"""Pallas TPU kernels (block-sketched backward matmuls, column scores, flash
+attention) + jnp oracles. See EXAMPLE.md for the kernel/ops/ref convention."""
+from repro.kernels import ops, ref  # noqa: F401

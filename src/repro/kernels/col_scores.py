@@ -1,0 +1,59 @@
+"""Pallas TPU kernel: fp32 column score reduction (ℓ1 / ℓ2²) over G.
+
+The score pass reads G once ([N, n] in HBM) and emits a tiny [n] fp32 vector —
+purely memory-bound, so the kernel's job is simply to stream G through VMEM in
+lane-aligned tiles with fp32 accumulation (bf16 inputs must not accumulate in
+bf16: at N = 10⁶ rows the ulp error would swamp small scores and distort the
+sampling probabilities).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["col_l1_scores"]
+
+
+def _kernel(g_ref, o_ref, acc_ref, *, n_i: int, mode: str):
+    i = pl.program_id(1)
+
+    @pl.when(i == 0)
+    def _():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    g = g_ref[...].astype(jnp.float32)
+    v = jnp.abs(g) if mode == "l1" else jnp.square(g)
+    acc_ref[...] += jnp.sum(v, axis=0, keepdims=True)
+
+    @pl.when(i == n_i - 1)
+    def _():
+        o_ref[...] = acc_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "tile_n", "tile_c", "interpret"))
+def col_l1_scores(G, *, mode: str = "l1", tile_n: int = 512, tile_c: int = 512,
+                  interpret: bool = False):
+    """Column scores: ℓ1 (sum |G|) or ℓ2² (sum G²). G: [N, n] -> [n] f32."""
+    N, n = G.shape
+    tn = min(tile_n, max(8, N))
+    tc = min(tile_c, n)
+    Np = -(-N // tn) * tn
+    np_ = -(-n // tc) * tc
+    if (Np, np_) != (N, n):
+        G = jnp.pad(G, ((0, Np - N), (0, np_ - n)))
+    grid = (np_ // tc, Np // tn)
+    out = pl.pallas_call(
+        functools.partial(_kernel, n_i=Np // tn, mode=mode),
+        grid=grid,
+        in_specs=[pl.BlockSpec((tn, tc), lambda j, i: (i, j))],
+        out_specs=pl.BlockSpec((1, tc), lambda j, i: (0, j)),
+        scratch_shapes=[pltpu.VMEM((1, tc), jnp.float32)],
+        out_shape=jax.ShapeDtypeStruct((1, np_), jnp.float32),
+        interpret=interpret,
+        name="col_l1_scores",
+    )(G)
+    return out[0, :n]

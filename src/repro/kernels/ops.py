@@ -1,0 +1,68 @@
+"""Jitted wrappers around the Pallas kernels with backend selection.
+
+On TPU the real kernels run; on CPU (this container) they run in
+``interpret=True`` mode — the kernel bodies execute in Python per grid step,
+which validates correctness but is slow, so wrappers fall back to the jnp
+oracle unless ``REPRO_FORCE_INTERPRET=1`` (tests set it or pass explicitly).
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as kref
+from repro.kernels.col_scores import col_l1_scores as _col_l1_pallas
+from repro.kernels.flash_attention import flash_attention as _flash_pallas
+from repro.kernels.sketch_matmul import (block_gather_matmul as _bgm_pallas,
+                                         block_gather_matmul_dw as _bgm_dw_pallas)
+
+__all__ = ["on_tpu", "block_gather_matmul", "block_gather_matmul_dw",
+           "gather_cols_matmul", "gather_cols_matmul_dw", "col_l1_scores",
+           "flash_attention"]
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _use_pallas() -> bool:
+    return on_tpu() or os.environ.get("REPRO_FORCE_INTERPRET") == "1"
+
+
+def block_gather_matmul(G, block_idx, scales, W, *, block: int = 128):
+    if _use_pallas():
+        return _bgm_pallas(G, block_idx, scales, W, block=block, interpret=not on_tpu())
+    return kref.block_gather_matmul_ref(G, block_idx, scales, W, block=block)
+
+
+def block_gather_matmul_dw(G, block_idx, scales, X, *, block: int = 128):
+    if _use_pallas():
+        return _bgm_dw_pallas(G, block_idx, scales, X, block=block, interpret=not on_tpu())
+    return kref.block_gather_matmul_dw_ref(G, block_idx, scales, X, block=block)
+
+
+def gather_cols_matmul(G, idx, scales, W):
+    """Per-column compact dX. Arbitrary (unblocked) column gathers do not map
+    onto BlockSpec index maps, so this stays an XLA gather + matmul; the
+    Pallas fast path is the block-granular variant (SketchConfig.block=128)."""
+    return kref.gather_cols_matmul_ref(G, idx, scales, W)
+
+
+def gather_cols_matmul_dw(G, idx, scales, X):
+    return kref.gather_cols_matmul_dw_ref(G, idx, scales, X)
+
+
+def col_l1_scores(G, *, mode: str = "l1"):
+    if _use_pallas():
+        return _col_l1_pallas(G, mode=mode, interpret=not on_tpu())
+    if mode == "l1":
+        return kref.col_l1_scores_ref(G)
+    return jnp.sum(jnp.square(G.astype(jnp.float32)), axis=0)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window=None):
+    if _use_pallas():
+        return _flash_pallas(q, k, v, causal=causal, window=window, interpret=not on_tpu())
+    return kref.flash_attention_ref(q, k, v, causal=causal, window=window)

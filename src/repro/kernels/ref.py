@@ -1,0 +1,71 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose references)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["block_gather_matmul_ref", "block_gather_matmul_dw_ref",
+           "gather_cols_matmul_ref", "gather_cols_matmul_dw_ref",
+           "col_l1_scores_ref", "flash_attention_ref"]
+
+
+def block_gather_matmul_ref(G, block_idx, scales, W, *, block: int):
+    """dX = Σ_k scale_k · G[:, blk_k] @ W[blk_k, :].
+
+    G: [N, n]; block_idx: [rb] (block ids); scales: [rb]; W: [n, d].
+    """
+    N, n = G.shape
+    nb = n // block
+    Gb = G.reshape(N, nb, block)
+    Wb = W.reshape(nb, block, -1)
+    Gc = jnp.take(Gb, block_idx, axis=1).astype(jnp.float32) * scales[None, :, None]
+    Wc = jnp.take(Wb, block_idx, axis=0)  # [rb, bs, d]
+    return jnp.einsum("nrb,rbd->nd", Gc, Wc.astype(jnp.float32)).astype(G.dtype)
+
+
+def block_gather_matmul_dw_ref(G, block_idx, scales, X, *, block: int):
+    """dWc[k] = scale_k · G[:, blk_k]ᵀ @ X  -> [rb, block, d_in]."""
+    N, n = G.shape
+    nb = n // block
+    Gb = G.reshape(N, nb, block)
+    Gc = jnp.take(Gb, block_idx, axis=1).astype(jnp.float32) * scales[None, :, None]
+    return jnp.einsum("nrb,nd->rbd", Gc, X.astype(jnp.float32)).astype(G.dtype)
+
+
+def gather_cols_matmul_ref(G, idx, scales, W):
+    """Per-column compact backward dX (XLA reference used by backend="compact")."""
+    Gc = jnp.take(G, idx, axis=1) * scales[None, :].astype(G.dtype)
+    Wc = jnp.take(W, idx, axis=0)
+    return (Gc.astype(jnp.float32) @ Wc.astype(jnp.float32)).astype(G.dtype)
+
+
+def gather_cols_matmul_dw_ref(G, idx, scales, X):
+    Gc = jnp.take(G, idx, axis=1) * scales[None, :].astype(G.dtype)
+    return (Gc.astype(jnp.float32).T @ X.astype(jnp.float32)).astype(G.dtype)
+
+
+def col_l1_scores_ref(G):
+    """ℓ1 column scores in fp32: s_j = Σ_i |G[i, j]|."""
+    return jnp.sum(jnp.abs(G.astype(jnp.float32)), axis=0)
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window=None, scale=None):
+    """q: [B, Sq, H, dh]; k/v: [B, Skv, Kv, dh] (GQA) -> [B, Sq, H, dh]."""
+    B, Sq, H, dh = q.shape
+    Kv = k.shape[2]
+    G = H // Kv
+    qg = q.reshape(B, Sq, Kv, G, dh).astype(jnp.float32)
+    sc = scale if scale is not None else dh ** -0.5
+    s = jnp.einsum("bqkgh,bckh->bkgqc", qg, k.astype(jnp.float32)) * sc
+    qpos = jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(k.shape[1])[None, :]
+    mask = jnp.ones((Sq, k.shape[1]), bool)
+    if causal:
+        off = k.shape[1] - Sq  # right-aligned when Skv > Sq
+        mask &= (qpos + off) >= kpos
+        if window is not None:
+            mask &= (qpos + off - kpos) < window
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqc,bckh->bqkgh", p, v.astype(jnp.float32))
+    return o.reshape(B, Sq, H, dh).astype(q.dtype)

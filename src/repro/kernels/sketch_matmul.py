@@ -1,0 +1,141 @@
+"""Pallas TPU kernels for the block-sketched backward matmuls.
+
+The sketch keeps ``rb`` 128-wide column *blocks* of the output-gradient matrix
+G (see ``SketchConfig.block``). Because kept blocks are contiguous lane-aligned
+slabs, the gather is folded into the BlockSpec index map: the kernel's DMA
+engine fetches only the selected G column-blocks / W row-blocks straight from
+HBM — the compacted operands are never materialised. The MXU then runs a dense
+[N, rb·128] × [rb·128, d] matmul, i.e. the paper's element sparsity realised as
+*shape* sparsity (DESIGN.md §3).
+
+VMEM budget per grid step (defaults, bf16): G tile 256×128 (64 KiB) + W tile
+128×256 (64 KiB) + fp32 acc 256×256 (256 KiB) ≈ 0.4 MiB — far below the
+~16 MiB/core budget, leaving room for double buffering.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["block_gather_matmul", "block_gather_matmul_dw"]
+
+
+def _dx_kernel(idx_ref, scale_ref, g_ref, w_ref, o_ref, acc_ref, *, n_k: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    sc = scale_ref[k]
+    g = g_ref[...].astype(jnp.float32) * sc
+    acc_ref[...] += jax.lax.dot(g, w_ref[...].astype(jnp.float32),
+                                preferred_element_type=jnp.float32)
+
+    @pl.when(k == n_k - 1)
+    def _():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "tile_n", "tile_d", "interpret"))
+def block_gather_matmul(G, block_idx, scales, W, *, block: int = 128,
+                        tile_n: int = 256, tile_d: int = 256, interpret: bool = False):
+    """dX = Σ_k scale_k · G[:, blk_k] @ W[blk_k, :].
+
+    G: [N, n]; block_idx: [rb] int32 (ascending block ids); scales: [rb] f32;
+    W: [n, d]. Returns [N, d] in G.dtype. N, d padded internally to tiles.
+    """
+    N, n = G.shape
+    d = W.shape[1]
+    rb = block_idx.shape[0]
+    tn = min(tile_n, max(8, N))
+    td = min(tile_d, d)
+    Np = -(-N // tn) * tn
+    dp = -(-d // td) * td
+    if Np != N:
+        G = jnp.pad(G, ((0, Np - N), (0, 0)))
+    if dp != d:
+        W = jnp.pad(W, ((0, 0), (0, dp - d)))
+
+    grid = (Np // tn, dp // td, rb)
+    out = pl.pallas_call(
+        functools.partial(_dx_kernel, n_k=rb),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((tn, block), lambda i, j, k, idx, sc: (i, idx[k])),
+                pl.BlockSpec((block, td), lambda i, j, k, idx, sc: (idx[k], j)),
+            ],
+            out_specs=pl.BlockSpec((tn, td), lambda i, j, k, idx, sc: (i, j)),
+            scratch_shapes=[pltpu.VMEM((tn, td), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((Np, dp), G.dtype),
+        interpret=interpret,
+        name="block_gather_matmul_dx",
+    )(block_idx, scales.astype(jnp.float32), G, W)
+    return out[:N, :d]
+
+
+def _dw_kernel(idx_ref, scale_ref, g_ref, x_ref, o_ref, acc_ref, *, n_i: int):
+    i = pl.program_id(2)
+    k = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    g = g_ref[...].astype(jnp.float32)
+    # contract over the N tile: gᵀ @ x without an explicit transpose
+    acc_ref[...] += jax.lax.dot_general(
+        g, x_ref[...].astype(jnp.float32), (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(i == n_i - 1)
+    def _():
+        o_ref[0] = (acc_ref[...] * scale_ref[k]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "tile_n", "tile_d", "interpret"))
+def block_gather_matmul_dw(G, block_idx, scales, X, *, block: int = 128,
+                           tile_n: int = 256, tile_d: int = 256, interpret: bool = False):
+    """dWc[k] = scale_k · G[:, blk_k]ᵀ @ X  ->  [rb, block, d_in].
+
+    The caller scatters the compact rows into the full dW (indices are shared
+    across DP replicas, enabling the compressed all-reduce — DESIGN.md §3).
+    """
+    N, n = G.shape
+    din = X.shape[1]
+    rb = block_idx.shape[0]
+    tn = min(tile_n, max(8, N))
+    td = min(tile_d, din)
+    Np = -(-N // tn) * tn
+    dp = -(-din // td) * td
+    if Np != N:
+        G = jnp.pad(G, ((0, Np - N), (0, 0)))
+        X = jnp.pad(X, ((0, Np - N), (0, 0)))
+    if dp != din:
+        X = jnp.pad(X, ((0, 0), (0, dp - din)))
+
+    grid = (rb, dp // td, Np // tn)
+    out = pl.pallas_call(
+        functools.partial(_dw_kernel, n_i=Np // tn),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((tn, block), lambda k, j, i, idx, sc: (i, idx[k])),
+                pl.BlockSpec((tn, td), lambda k, j, i, idx, sc: (i, j)),
+            ],
+            out_specs=pl.BlockSpec((1, block, td), lambda k, j, i, idx, sc: (k, 0, j)),
+            scratch_shapes=[pltpu.VMEM((block, td), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((rb, block, dp), G.dtype),
+        interpret=interpret,
+        name="block_gather_matmul_dw",
+    )(block_idx, scales.astype(jnp.float32), G, X)
+    return out[:, :, :din]

@@ -1,0 +1,350 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape-cell × mesh).
+
+For each cell this produces TWO artifacts (DESIGN.md / hlo_analysis docstring):
+  * memory artifact — full-depth production program (scan-rolled):
+    ``memory_analysis()`` proves the cell fits; its HLO carries the production
+    collective schedule.
+  * cost artifacts — python-unrolled slices at small depths; FLOPs / bytes /
+    collective wire-bytes are reconstructed at full depth via the linear depth
+    model (XLA counts while bodies once, so rolled programs undercount).
+
+Results accumulate in ``results/dryrun/<arch>.<cell>.<mesh>.json`` which
+EXPERIMENTS.md §Dry-run / §Roofline and benchmarks/roofline.py consume.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch yi_6b --cell train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multipod] [--skip-cost]
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import SHAPE_CELLS, ArchConfig, ShapeCell
+from repro.configs.registry import ARCH_IDS, cells_for, get_config
+from repro.core import SketchConfig, SketchPolicy
+from repro.launch import input_specs as ispec
+from repro.launch import sharding as shard
+from repro.launch.hlo_analysis import (HW, collective_bytes, cost_summary,
+                                       fit_depth_model, predict_depth_model,
+                                       roofline_terms)
+from repro.launch.mesh import dp_axes, make_production_mesh, mp_axes
+from repro.models import lm
+from repro.nn.common import Ctx
+from repro.optim import adamw, cosine_warmup
+from repro.serve.serve_step import make_decode_step
+from repro.train.train_step import make_train_step
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+# default sketch policy for train cells: the paper's ℓ1 default at p=0.1 in
+# the TPU-compact realisation. Baseline (exact / mask) variants are produced
+# by --policy {exact, mask, compact}.
+_POLICIES = {
+    "exact": None,
+    "mask": SketchPolicy(base=SketchConfig(method="l1", budget=0.1, backend="mask")),
+    "compact": SketchPolicy(base=SketchConfig(method="l1", budget=0.1,
+                                              backend="compact", block=128)),
+    # TP-local compact sketch + compressed DP gradient reduce-scatter
+    "compact_sharded": SketchPolicy(base=SketchConfig(method="l1", budget=0.1,
+                                                      backend="compact", block=128)),
+}
+
+
+object.__setattr__(_POLICIES["compact_sharded"], "_tp_sketch", True)
+
+
+def _adjust_for_depth(cfg: ArchConfig, L: int) -> ArchConfig:
+    kw = {"n_layers": L}
+    if cfg.is_encdec:
+        kw["enc_layers"] = L
+    return cfg.replace(**kw)
+
+
+def _depth_points(cfg: ArchConfig):
+    """Cost-artifact depths: (L, n_full, rem) for the depth model."""
+    if cfg.block_kind == "zamba":
+        p = cfg.shared_attn_every
+        return [(1, 0, 1), (p, 1, 0), (2 * p, 2, 0)]
+    if cfg.local_global > 0:
+        p = cfg.local_global + 1
+        return [(1, 0, 1), (p, 1, 0), (2 * p, 2, 0)]
+    return [(1, 1, 0), (2, 2, 0)]
+
+
+def _depth_target(cfg: ArchConfig):
+    if cfg.block_kind == "zamba":
+        p = cfg.shared_attn_every
+        return cfg.n_layers // p, cfg.n_layers % p
+    if cfg.local_global > 0:
+        p = cfg.local_global + 1
+        return cfg.n_layers // p, cfg.n_layers % p
+    return cfg.n_layers, 0
+
+
+def _mesh_axes(mesh):
+    return dp_axes(mesh), mp_axes(mesh)
+
+
+def _act_sharding(mesh, batch_div, seq_len=0, sp: bool = True):
+    """Residual-stream activation sharding.
+
+    ``sp=True`` (default): Megatron-style sequence parallelism — the stream is
+    [batch→dp, seq→model, d]; XLA inserts the all-gather before attention /
+    MLP (TP) blocks and reduce-scatters after, cutting the remat carry by the
+    model-axis size. ``sp=False`` keeps the stream replicated over model
+    (the naive baseline measured in EXPERIMENTS.md §Perf).
+    """
+    dp = dp_axes(mesh)
+    mp = mp_axes(mesh)
+    seq_ax = None
+    if sp and mp and seq_len and seq_len % mesh.shape[mp[0]] == 0:
+        seq_ax = mp[0]
+    return NamedSharding(mesh, P(dp if batch_div else None, seq_ax, None))
+
+
+# gradient-accumulation microbatching for cells whose activations exceed HBM
+# at full global batch (production practice for 100B+ dense training). Cost
+# artifacts always run accum=1: total per-step FLOPs are identical, only the
+# execution order / peak memory differ.
+TRAIN_ACCUM = {"llama3_405b": 8, "nemotron_4_340b": 8, "olmoe_1b_7b": 2}
+
+
+def _build_train(cfg, cell, mesh, policy, cost_mode, sp=True):
+    dp, mp = _mesh_axes(mesh)
+    n_dp = int(np.prod([mesh.shape[a] for a in dp]))
+    opt = adamw(cosine_warmup(3e-4, 2000, 100_000), weight_decay=0.1, clip=1.0,
+                moment_dtype=jnp.bfloat16 if cfg.param_dtype == "bfloat16" else jnp.float32)
+    accum = 1 if cost_mode else TRAIN_ACCUM.get(cfg.name.replace("-", "_"), 1)
+    step = make_train_step(cfg, opt, policy, mesh=mesh,
+                           act_sharding=_act_sharding(mesh, cell.global_batch % n_dp == 0,
+                                                      cell.seq_len, sp),
+                           cost_mode=cost_mode, data_axes=dp, model_axes=mp,
+                           accum=accum, tp_sketch=getattr(policy, "_tp_sketch", False))
+
+    params_s = ispec.params_struct(cfg)
+    pspecs = shard.param_shardings(params_s, mesh)
+    opt_s = jax.eval_shape(opt.init, params_s)
+    # optimizer state is a dict of params-congruent trees -> same shardings
+    ospecs = {k: pspecs for k in opt_s}
+    batch = ispec.train_inputs(cfg, cell)
+    bspecs = {k: NamedSharding(mesh, s) for k, s in shard.batch_specs(cfg, cell, mesh).items()}
+
+    from repro.train.train_step import TrainState
+    state_struct = TrainState(params=params_s, opt_state=opt_s,
+                              step=jax.ShapeDtypeStruct((), jnp.int32))
+    state_shard = TrainState(params=pspecs, opt_state=ospecs,
+                             step=NamedSharding(mesh, P()))
+    key_struct = jax.ShapeDtypeStruct((), jax.random.key(0).dtype)
+
+    fn = jax.jit(step, in_shardings=(state_shard, bspecs, NamedSharding(mesh, P())),
+                 donate_argnums=(0,))
+    return fn, (state_struct, batch, key_struct)
+
+
+def _build_prefill(cfg, cell, mesh, cost_mode, sp=True):
+    dp, mp = _mesh_axes(mesh)
+    n_dp = int(np.prod([mesh.shape[a] for a in dp]))
+    from repro.serve.serve_step import make_prefill
+    fn = make_prefill(cfg, cell.seq_len, mesh=mesh,
+                      act_sharding=_act_sharding(mesh, cell.global_batch % n_dp == 0,
+                                                 cell.seq_len, sp),
+                      data_axes=dp, model_axes=mp, cost_mode=cost_mode)
+    params_s = ispec.params_struct(cfg)
+    pspecs = shard.param_shardings(params_s, mesh)
+    batch = ispec.train_inputs(cfg, cell)
+    batch.pop("labels")
+    bspecs = {k: NamedSharding(mesh, s)
+              for k, s in shard.batch_specs(cfg, cell, mesh).items() if k in batch}
+    jfn = jax.jit(fn, in_shardings=(pspecs, bspecs))
+    return jfn, (params_s, batch)
+
+
+def _build_decode(cfg, cell, mesh, cost_mode, sp=True):
+    dp, mp = _mesh_axes(mesh)
+    n_dp = int(np.prod([mesh.shape[a] for a in dp]))
+    fn = make_decode_step(cfg, mesh=mesh,
+                          act_sharding=_act_sharding(mesh, cell.global_batch % n_dp == 0, 0, sp),
+                          data_axes=dp, model_axes=mp, cost_mode=cost_mode)
+    params_s = ispec.params_struct(cfg)
+    pspecs = shard.param_shardings(params_s, mesh)
+    dec = ispec.decode_inputs(cfg, cell)
+    cspecs = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                          shard.cache_specs(cfg, dec["caches"], mesh, cell.global_batch))
+    tok_spec = NamedSharding(
+        mesh, P(dp if cell.global_batch % n_dp == 0 else None, None, None)
+        if cfg.frontend == "vision" else
+        P(dp if cell.global_batch % n_dp == 0 else None, None))
+    jfn = jax.jit(fn, in_shardings=(pspecs, cspecs, tok_spec, NamedSharding(mesh, P())),
+                  donate_argnums=(1,))
+    return jfn, (params_s, dec["caches"], dec["tokens"], dec["pos"])
+
+
+def _builder(cfg, cell, mesh, policy, cost_mode, sp=True):
+    if cost_mode and cfg.block_kind in ("zamba", "mamba", "rwkv"):
+        # cost artifacts unroll the SSM chunk loops in python; enlarge chunks
+        # to bound HLO size. RWKV: FLOP-neutral (sequential recurrence).
+        # Mamba/SSD: the intra-chunk term grows with Q — ≤ ~2 % total FLOP
+        # inflation at Q=1024 for the assigned configs (documented in
+        # EXPERIMENTS.md §Methodology).
+        cfg = cfg.replace(ssm_chunk=max(cfg.ssm_chunk, 1024))
+    if cell.kind == "train":
+        return _build_train(cfg, cell, mesh, policy, cost_mode, sp)
+    if cell.kind == "prefill":
+        return _build_prefill(cfg, cell, mesh, cost_mode, sp)
+    return _build_decode(cfg, cell, mesh, cost_mode, sp)
+
+
+def _lower_compile(fn, args):
+    t0 = time.time()
+    lowered = fn.lower(*args)
+    compiled = lowered.compile()
+    return compiled, time.time() - t0
+
+
+def run_cell(arch: str, cell_name: str, *, multi_pod: bool, policy_name: str = "compact",
+             skip_cost: bool = False, sp: bool = True, hw: HW = HW()) -> dict:
+    cfg = get_config(arch)
+    cell = SHAPE_CELLS[cell_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = int(np.prod(list(mesh.shape.values())))
+    policy = _POLICIES[policy_name] if cell.kind == "train" else None
+    rec = {"arch": arch, "cell": cell_name, "mesh": "x".join(map(str, mesh.shape.values())),
+           "chips": chips, "kind": cell.kind, "policy": policy_name if cell.kind == "train" else "n/a",
+           "status": "ok"}
+
+    rec["sp"] = sp
+    # ---- memory artifact: full depth, rolled scans -------------------------
+    fn, args = _builder(cfg, cell, mesh, policy, cost_mode=False, sp=sp)
+    compiled, dt = _lower_compile(fn, args)
+    ma = compiled.memory_analysis()
+    rec["compile_s"] = round(dt, 2)
+    rec["memory"] = {
+        "argument_GB_per_dev": ma.argument_size_in_bytes / 1e9,
+        "output_GB_per_dev": ma.output_size_in_bytes / 1e9,
+        "temp_GB_per_dev": ma.temp_size_in_bytes / 1e9,
+        "alias_GB_per_dev": ma.alias_size_in_bytes / 1e9,
+        "peak_GB_per_dev": (ma.argument_size_in_bytes + ma.output_size_in_bytes
+                            + ma.temp_size_in_bytes - ma.alias_size_in_bytes) / 1e9,
+        "fits_hbm": (ma.argument_size_in_bytes + ma.output_size_in_bytes
+                     + ma.temp_size_in_bytes - ma.alias_size_in_bytes) < hw.hbm_bytes,
+    }
+    rec["rolled_cost"] = cost_summary(compiled)
+    rec["rolled_collectives"] = collective_bytes(compiled.as_text())
+    del compiled, fn, args
+
+    # ---- cost artifacts: unrolled depth slices -----------------------------
+    if not skip_cost:
+        pts = []
+        for L, n_full, rem in _depth_points(cfg):
+            cfg_L = _adjust_for_depth(cfg, L)
+            fn, args = _builder(cfg_L, cell, mesh, policy, cost_mode=True, sp=sp)
+            compiled, dtL = _lower_compile(fn, args)
+            c = cost_summary(compiled)
+            c["coll_bytes"] = collective_bytes(compiled.as_text())["total"]
+            c["compile_s"] = dtL
+            pts.append((n_full, rem, c))
+            del compiled, fn, args
+        coefs = fit_depth_model(pts)
+        n_full_t, rem_t = _depth_target(cfg)
+        full = predict_depth_model(coefs, n_full_t, rem_t)
+        rec["cost_points"] = [
+            {"n_full": nf, "rem": rm, **{k: v for k, v in c.items()}} for nf, rm, c in pts]
+        rec["cost_full_depth"] = full
+        rec["roofline"] = roofline_terms(full["flops"], full["bytes"],
+                                         full["coll_bytes"], chips, hw)
+        # MODEL_FLOPS (6·N_active·D train, 2·N_active·D inference) and ratio
+        params_s = ispec.params_struct(cfg)
+        n_total = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params_s))
+        n_active = _active_params(params_s, cfg)
+        tokens = cell.global_batch * (cell.seq_len if cell.kind != "decode" else 1)
+        mf = (6 if cell.kind == "train" else 2) * n_active * tokens
+        rec["model_flops"] = mf
+        rec["n_params"] = n_total
+        rec["n_active_params"] = n_active
+        hlo_flops_global = full["flops"] * chips
+        rec["model_flops_ratio"] = mf / hlo_flops_global if hlo_flops_global else None
+    return rec
+
+
+def _active_params(params_s, cfg):
+    total = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params_s))
+    if cfg.n_experts == 0:
+        return total
+    e = 0
+    for seg in params_s["segments"]:
+        for sub in seg:
+            if isinstance(sub, dict) and "moe" in sub:
+                for k in ("wi", "wo", "wg"):
+                    if k in sub["moe"]:
+                        e += int(np.prod(sub["moe"][k].shape))
+    return total - e + int(e * cfg.top_k / cfg.n_experts)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--cell", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--policy", default="mask", choices=list(_POLICIES))
+    ap.add_argument("--skip-cost", action="store_true")
+    ap.add_argument("--no-sp", action="store_true", help="disable sequence-parallel activations")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--out", default=RESULTS_DIR)
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    jobs = []
+    archs = ARCH_IDS if (args.all or args.arch is None) else [args.arch]
+    for a in archs:
+        cfg = get_config(a)
+        cells = [c.name for c in cells_for(cfg)]
+        if args.cell:
+            cells = [args.cell] if args.cell in cells else []
+        jobs += [(a, c) for c in cells]
+
+    for a, c in jobs:
+        tag = f"{a}.{c}.{'2x16x16' if args.multipod else '16x16'}.{args.policy}"
+        if args.no_sp:
+            tag += ".nosp"
+        out_path = os.path.join(args.out, tag + ".json")
+        if args.skip_existing and os.path.exists(out_path):
+            try:
+                with open(out_path) as f:
+                    if json.load(f).get("status") == "ok":
+                        print(f"=== {tag} === (cached)", flush=True)
+                        continue
+            except Exception:
+                pass
+        print(f"=== {tag} ===", flush=True)
+        try:
+            rec = run_cell(a, c, multi_pod=args.multipod, policy_name=args.policy,
+                           skip_cost=args.skip_cost, sp=not args.no_sp)
+            mem = rec["memory"]
+            print(f"  peak/dev: {mem['peak_GB_per_dev']:.2f} GB (fits={mem['fits_hbm']}) "
+                  f"compile: {rec['compile_s']}s")
+            if "roofline" in rec:
+                r = rec["roofline"]
+                print(f"  roofline: compute {r['compute_s']:.4f}s | memory {r['memory_s']:.4f}s "
+                      f"| collective {r['collective_s']:.4f}s -> {r['dominant']}-bound")
+        except Exception as e:  # noqa: BLE001 — record failures, keep sweeping
+            rec = {"arch": a, "cell": c, "status": "error",
+                   "error": f"{type(e).__name__}: {e}",
+                   "traceback": traceback.format_exc()[-4000:]}
+            print(f"  FAILED: {rec['error']}")
+        with open(out_path, "w") as f:
+            json.dump(rec, f, indent=1, default=str)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,149 @@
+"""HLO artifact analysis: collective bytes, cost extraction, roofline terms.
+
+Methodology (EXPERIMENTS.md §Roofline):
+  * ``compiled.cost_analysis()`` supplies HLO FLOPs / bytes of the PER-DEVICE
+    partitioned program — but XLA counts while-loop bodies ONCE, so scan-based
+    production programs undercount by ~n_layers. The dry-run therefore lowers
+    *cost artifacts*: python-unrolled (``cost_mode``) slices at small layer
+    counts, and reconstructs full-depth cost by solving the linear model
+    cost(L) = intercept + n_full_periods(L)·per_period + rem_layers(L)·per_layer.
+  * collective bytes are not in cost_analysis: we parse the post-SPMD HLO text
+    and sum wire-cost-weighted operand sizes of every collective op
+    (ring model: all-reduce 2(n-1)/n·size, all-gather/reduce-scatter/all-to-all
+    (n-1)/n·size (size = full logical buffer), collective-permute 1·size).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+import numpy as np
+
+__all__ = ["HW", "collective_bytes", "cost_summary", "roofline_terms",
+           "fit_depth_model", "predict_depth_model"]
+
+
+@dataclasses.dataclass(frozen=True)
+class HW:
+    """TPU v5e (per chip)."""
+    peak_flops_bf16: float = 197e12
+    hbm_bw: float = 819e9
+    ici_link_bw: float = 50e9  # per link per direction
+    ici_links: int = 2  # links usable per collective ring (bidirectional)
+    hbm_bytes: float = 16e9
+
+    @property
+    def ici_bw(self) -> float:
+        return self.ici_link_bw * self.ici_links
+
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16}
+
+_SHAPE_RE = re.compile(r"(\w+?)\[([\d,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*((?:\([^)]*\)|\S+))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(", )
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len([t for t in m.group(1).split(",") if t.strip() != ""])
+    return 1
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Wire bytes per collective kind (per device), ring cost model."""
+    out = {k: 0.0 for k in ("all-reduce", "all-gather", "reduce-scatter",
+                            "all-to-all", "collective-permute")}
+    counts = {k: 0 for k in out}
+    for line in hlo_text.splitlines():
+        if "-done(" in line:
+            continue  # async pair: count the -start only
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        result_type, kind = m.group(1), m.group(2)
+        size = _shape_bytes(result_type)
+        n = max(2, _group_size(line))
+        if kind == "all-reduce":
+            wire = 2.0 * size * (n - 1) / n
+        elif kind == "all-gather":
+            wire = size * (n - 1) / n  # size = gathered output
+        elif kind == "reduce-scatter":
+            wire = size * (n - 1)  # size = scattered output; input = n·size
+        elif kind == "all-to-all":
+            wire = size * (n - 1) / n
+        else:  # collective-permute
+            wire = float(size)
+        out[kind] += wire
+        counts[kind] += 1
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    out["counts"] = counts
+    return out
+
+
+def cost_summary(compiled) -> dict:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    return {"flops": float(ca.get("flops", 0.0)),
+            "bytes": float(ca.get("bytes accessed", 0.0))}
+
+
+def fit_depth_model(points):
+    """points: [(n_full, rem, cost_dict)] -> coefficient dict per metric.
+
+    Linear model: cost = I + n_full·PPC + rem·M (least squares; exact when the
+    design matrix has full column rank).
+    """
+    keys = set()
+    for _, _, c in points:
+        keys |= set(k for k, v in c.items() if isinstance(v, (int, float)))
+    A = np.array([[1.0, nf, rem] for nf, rem, _ in points])
+    coefs = {}
+    for k in keys:
+        y = np.array([c.get(k, 0.0) for _, _, c in points])
+        sol, *_ = np.linalg.lstsq(A, y, rcond=None)
+        coefs[k] = sol  # [I, PPC, M]
+    return coefs
+
+
+def predict_depth_model(coefs, n_full: int, rem: int) -> dict:
+    return {k: float(max(0.0, c[0] + c[1] * n_full + c[2] * rem))
+            for k, c in coefs.items()}
+
+
+def roofline_terms(flops: float, bytes_hbm: float, coll_bytes: float,
+                   chips: int, hw: HW = HW(), *, per_device: bool = True) -> dict:
+    """Three roofline terms in seconds. Inputs are per-device unless noted."""
+    if not per_device:
+        flops, bytes_hbm, coll_bytes = (x / chips for x in (flops, bytes_hbm, coll_bytes))
+    t_c = flops / hw.peak_flops_bf16
+    t_m = bytes_hbm / hw.hbm_bw
+    t_x = coll_bytes / hw.ici_bw
+    dom = max((t_c, "compute"), (t_m, "memory"), (t_x, "collective"))[1]
+    return {"compute_s": t_c, "memory_s": t_m, "collective_s": t_x,
+            "dominant": dom, "bound_s": max(t_c, t_m, t_x)}

@@ -1,0 +1,53 @@
+"""ShapeDtypeStruct stand-ins for every (arch × shape-cell) input.
+
+Weak-type-correct, shardable, zero allocation — the dry-run lowers against
+these. Modality frontends are stubs per the assignment: `vision` feeds
+precomputed patch/text embeddings + M-RoPE position streams; `audio` feeds
+frame embeddings to the encoder.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeCell
+from repro.models import lm
+
+__all__ = ["train_inputs", "decode_inputs", "params_struct", "cache_struct"]
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def train_inputs(cfg: ArchConfig, cell: ShapeCell) -> dict:
+    """Batch structs for train/prefill cells ({tokens|embeds, labels, ...})."""
+    B, S = cell.global_batch, cell.seq_len
+    batch = {"labels": _sds((B, S), jnp.int32)}
+    if cfg.frontend == "vision":
+        batch["embeds"] = _sds((B, S, cfg.d_model), jnp.dtype(cfg.dtype))
+        batch["positions"] = _sds((3, B, S), jnp.int32)
+    else:
+        batch["tokens"] = _sds((B, S), jnp.int32)
+    if cfg.is_encdec:
+        batch["src_embeds"] = _sds((B, S, cfg.d_model), jnp.dtype(cfg.dtype))
+    return batch
+
+
+def decode_inputs(cfg: ArchConfig, cell: ShapeCell) -> dict:
+    """One-token decode structs: new token + KV/SSM caches at seq_len."""
+    B, S = cell.global_batch, cell.seq_len
+    tok = (_sds((B, 1, cfg.d_model), jnp.dtype(cfg.dtype))
+           if cfg.frontend == "vision" else _sds((B, 1), jnp.int32))
+    return {"tokens": tok, "pos": _sds((), jnp.int32),
+            "caches": cache_struct(cfg, B, S)}
+
+
+def params_struct(cfg: ArchConfig):
+    return jax.eval_shape(lambda k: lm.init_params(k, cfg), jax.random.key(0))
+
+
+def cache_struct(cfg: ArchConfig, batch: int, max_len: int):
+    return jax.eval_shape(
+        lambda: lm.init_cache(cfg, batch, max_len,
+                              enc_len=max_len if cfg.is_encdec else 0))

@@ -1,0 +1,40 @@
+"""Production meshes.
+
+Defined as FUNCTIONS (never module-level constants) so importing this module
+never touches jax device state — the dry-run must set XLA_FLAGS before any
+device initialisation.
+
+Mesh layout (TPU v5e pods):
+  single-pod:  (16, 16)        axes ("data", "model")   = 256 chips
+  multi-pod:   (2, 16, 16)     axes ("pod", "data", "model") = 512 chips
+
+``pod`` composes with ``data`` for data parallelism by default; the pipeline
+launcher (repro/launch/pipeline.py) can remap it to pipeline stages.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_mesh", "dp_axes", "mp_axes"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_mesh(shape, axes):
+    """Arbitrary mesh (tests use small fake-device meshes)."""
+    return jax.make_mesh(tuple(shape), tuple(axes),
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def dp_axes(mesh) -> tuple:
+    """Axes that carry data parallelism (pod folds into DP by default)."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def mp_axes(mesh) -> tuple:
+    return tuple(a for a in mesh.axis_names if a == "model")

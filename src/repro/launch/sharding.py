@@ -1,0 +1,183 @@
+"""Sharding rules: parameter / optimizer / batch / cache PartitionSpecs.
+
+Strategy (DESIGN.md §4):
+  * batch over (pod, data); TP over model (heads / d_ff / vocab); EP: experts
+    over model; FSDP: the non-TP dim of every large weight is sharded over
+    (pod, data) — ZeRO-3-style, optimizer state inherits the same specs.
+  * rules match parameter *paths*; a rule's spec covers the TRAILING dims of
+    the leaf and is left-padded with None (covers scan-stacked [L, ...] leaves).
+  * dims that do not divide evenly by their mesh axis fall back to None (XLA
+    requires divisibility for Auto axes); the fallback is logged by dryrun.
+"""
+from __future__ import annotations
+
+import re
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeCell
+from repro.launch.mesh import dp_axes, mp_axes
+
+__all__ = ["param_specs", "param_shardings", "batch_specs", "cache_specs",
+           "logical_rules"]
+
+# (path regex, spec for trailing dims). "dp"/"mp" are placeholders resolved
+# against the mesh axis names.
+_RULES = [
+    # embed: vocab replicated, d over model — a vocab-sharded table would turn
+    # the token-gather backward into an unpartitionable scatter (XLA would
+    # replicate a full fp32 dEmbed per device). lm_head is pure matmul, so it
+    # keeps the vocab-parallel layout.
+    (r"(^|/)embed$", (None, "mp")),
+    (r"/lm_head/w$", ("mp", "dp")),
+    (r"/(attn|cross)/(q|k|v)/w$", ("mp", "dp")),
+    (r"/(attn|cross)/o/w$", ("dp", "mp")),
+    (r"/mlp/(in|gate)/w$", ("mp", "dp")),
+    (r"/mlp/out/w$", ("dp", "mp")),
+    (r"/moe/router/w$", (None, None)),
+    (r"/moe/(wi|wg)$", ("mp", None, "dp")),
+    (r"/moe/wo$", ("mp", "dp", None)),
+    (r"/mamba/(in_x|in_z)/w$", ("mp", "dp")),
+    (r"/mamba/(in_B|in_C|in_dt)/w$", (None, "dp")),
+    (r"/mamba/out/w$", ("dp", "mp")),
+    (r"/mamba/conv$", (None, "mp")),
+    (r"/rwkv/(r|k|v|g|cm_k|cm_r)/w$", ("mp", "dp")),
+    (r"/rwkv/(out|cm_v)/w$", ("dp", "mp")),
+    (r"/rwkv/(w1|w2)/w$", (None, None)),
+]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/" + "/".join(parts)
+
+
+def _resolve(tag, mesh):
+    if tag == "dp":
+        return dp_axes(mesh)
+    if tag == "mp":
+        ax = mp_axes(mesh)
+        return ax[0] if len(ax) == 1 else ax
+    return tag
+
+
+def _axis_size(mesh, tag) -> int:
+    ax = _resolve(tag, mesh)
+    if ax is None:
+        return 1
+    if isinstance(ax, tuple):
+        return int(np.prod([mesh.shape[a] for a in ax])) if ax else 1
+    return mesh.shape[ax]
+
+
+_MOE_TPX = {  # fallback when n_experts doesn't divide the model axis:
+    # shard the expert hidden dim instead (tensor-parallel experts, cf. moe.py)
+    r"/moe/(wi|wg)$": (None, "mp", "dp"),
+    r"/moe/wo$": (None, "dp", "mp"),
+}
+
+
+def _spec_for(path_s: str, shape, mesh) -> P:
+    for pat, trailing in _RULES:
+        if re.search(pat, path_s):
+            # MoE: if experts don't divide the model axis, use the TPX layout
+            for tpat, ttrail in _MOE_TPX.items():
+                if re.search(tpat, path_s):
+                    e_dim = shape[-3]
+                    if e_dim % _axis_size(mesh, "mp") != 0:
+                        trailing = ttrail
+                    break
+            spec = [None] * (len(shape) - len(trailing)) + list(trailing)
+            resolved = []
+            for dim, tag in zip(shape, spec):
+                if tag is None:
+                    resolved.append(None)
+                    continue
+                size = _axis_size(mesh, tag)
+                resolved.append(_resolve(tag, mesh) if dim % size == 0 else None)
+            return P(*resolved)
+    return P()  # small leaves (norms, scalars, biases, mu/u/...) replicate
+
+
+def param_specs(params_shape, mesh):
+    """PartitionSpecs for a params pytree (works on ShapeDtypeStructs too)."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _spec_for(_path_str(path), leaf.shape, mesh), params_shape)
+
+
+def param_shardings(params_shape, mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), param_specs(params_shape, mesh))
+
+
+def batch_specs(cfg: ArchConfig, cell: ShapeCell, mesh) -> dict:
+    """PartitionSpecs for the input batch of a shape cell."""
+    dp = dp_axes(mesh)
+    n_dp = int(np.prod([mesh.shape[a] for a in dp]))
+    bspec = dp if cell.global_batch % n_dp == 0 else None
+    row = P(bspec, None)
+    specs = {"labels": row}
+    if cfg.frontend == "vision":
+        specs["embeds"] = P(bspec, None, None)
+        specs["positions"] = P(None, bspec, None)
+    else:
+        specs["tokens"] = row
+    if cfg.is_encdec:
+        specs["src_embeds"] = P(bspec, None, None)
+    return specs
+
+
+def cache_specs(cfg: ArchConfig, cache_shape, mesh, global_batch: int):
+    """Decode-cache PartitionSpecs.
+
+    KV caches [L, B, S, kv, hd]: batch over dp when divisible; the *sequence*
+    dim over model (flash-decoding style — partial softmax stats are combined
+    by XLA-inserted all-reduces). SSM/conv/shift states: batch over dp only.
+    """
+    dp = dp_axes(mesh)
+    mp = mp_axes(mesh)
+    n_dp = int(np.prod([mesh.shape[a] for a in dp]))
+    bax = dp if global_batch % n_dp == 0 else None
+    mp1 = mp[0] if mp else None
+
+    def spec_for(path, leaf):
+        s = _path_str(path)
+        shape = leaf.shape
+        if s.endswith("/k") or s.endswith("/v"):
+            # [L, B, S, kv, hd] (stacked) or [B, S, kv, hd] (cross, stacked->5)
+            seq_dim_size = shape[-3]
+            seq_ok = mp1 is not None and seq_dim_size % mesh.shape[mp1] == 0
+            lead = [None] * (len(shape) - 4)
+            return P(*lead, bax, mp1 if seq_ok else None, None, None)
+        if s.endswith("/ssm"):  # [L, B, H, P, N]
+            lead = [None] * (len(shape) - 4)
+            return P(*lead, bax, None, None, None)
+        if s.endswith("/wkv"):  # [L, B, H, P, P]
+            lead = [None] * (len(shape) - 4)
+            return P(*lead, bax, None, None, None)
+        if s.endswith("/conv") or "shift" in s:  # [L, B, K-1, C] / [L, B, 1, d]
+            lead = [None] * (len(shape) - 3)
+            return P(*lead, bax, None, None)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(spec_for, cache_shape)
+
+
+def logical_rules(mesh) -> dict:
+    """Activation constraint specs used by train/serve steps."""
+    dp = dp_axes(mesh)
+    mp = mp_axes(mesh)
+    mp1 = mp[0] if mp else None
+    return {
+        "activations": P(dp, None, None),
+        "logits": P(dp, None, mp1),
+    }

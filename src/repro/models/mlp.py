@@ -1,0 +1,44 @@
+"""The paper's §5 MLP: 784 -> 64 -> 64 -> 10, cross-entropy, SGD, clip 1.0.
+
+Every linear layer is a sketched VJP site (role "mlp_in"); the location study
+(App. B.1, Fig. 4) uses the policy's first/last/all placement with *static*
+layer indices (no scan), exactly as the paper applies it.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.common import Ctx, dense, dense_init
+
+__all__ = ["mlp_init", "mlp_apply", "mlp_loss"]
+
+
+def mlp_init(key, sizes=(784, 64, 64, 10), dtype=jnp.float32):
+    ks = jax.random.split(key, len(sizes) - 1)
+    return [dense_init(k, a, b, dtype, bias=True)
+            for k, a, b in zip(ks, sizes[:-1], sizes[1:])]
+
+
+def mlp_apply(params, x, ctx: Ctx):
+    import dataclasses
+
+    L = len(params)
+    for i, p in enumerate(params):
+        # static layer index -> the location policy (first/last/all) applies
+        lctx = dataclasses.replace(ctx.for_layer(ctx.key, i), layer_index=i, n_layers=L)
+        role = "lm_head" if i == L - 1 else "mlp_in"
+        x = dense(p, x, lctx, role)
+        if i < L - 1:
+            x = jax.nn.relu(x)
+    return x
+
+
+def mlp_loss(params, batch, ctx: Ctx):
+    logits = mlp_apply(params, batch["x"], ctx)
+    labels = batch["y"]
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    true = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    loss = jnp.mean(lse - true)
+    acc = jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
+    return loss, acc

@@ -1,0 +1,153 @@
+"""Paper §5 larger architectures: ViT (Dosovitskiy 2021) and a BagNet-17-style
+1×1-conv network (Brendel & Bethge 2019), sized per App. B.2.
+
+BagNet's 1×1 convolutions "we assimilate as linear layers and sketch" (paper):
+here they literally ARE sketched linear sites applied over the spatial grid
+(a 1×1 conv ≡ dense over channels at every pixel). A few 3×3 stages reduce
+resolution (exact backprop, matching the paper's exclusion of non-1×1 convs).
+ViT sketches attention projections and MLP layers, excluding the classifier.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.attention import AttnCfg, attention, attn_init
+from repro.nn.common import Ctx, dense, dense_init, layernorm, layernorm_init
+from repro.nn.mlp import mlp as mlp_block, mlp_init
+
+__all__ = ["vit_init", "vit_apply", "bagnet_init", "bagnet_apply", "cls_loss"]
+
+
+# ---------------------------------------------------------------------------
+# ViT — paper App. B.2: d=192, mlp 1024, depth 9, heads 12, patch 4 (CIFAR).
+# ---------------------------------------------------------------------------
+
+
+def vit_init(key, *, img=32, patch=4, d=192, depth=9, heads=12, d_ff=1024,
+             n_classes=10, dtype=jnp.float32):
+    ks = jax.random.split(key, depth + 4)
+    n_tok = (img // patch) ** 2
+    acfg = AttnCfg(n_heads=heads, n_kv=heads, d_head=d // heads, causal=False,
+                   rope="none", impl="einsum")
+    layers = []
+    for i in range(depth):
+        lk = jax.random.split(ks[i], 2)
+        layers.append({
+            "ln1": layernorm_init(d, dtype), "attn": attn_init(lk[0], d, acfg, dtype),
+            "ln2": layernorm_init(d, dtype), "mlp": mlp_init(lk[1], d, d_ff, "gelu", dtype),
+        })
+    return {
+        "patch": dense_init(ks[depth], patch * patch * 3, d, dtype, bias=True),
+        "pos": jax.random.normal(ks[depth + 1], (1, n_tok + 1, d)) * 0.02,
+        "cls": jnp.zeros((1, 1, d), dtype),
+        "layers": layers,
+        "ln_f": layernorm_init(d, dtype),
+        "head": dense_init(ks[depth + 2], d, n_classes, dtype, bias=True),
+    }
+
+
+def _patchify(x, patch):
+    B, H, W, C = x.shape
+    x = x.reshape(B, H // patch, patch, W // patch, patch, C)
+    x = x.transpose(0, 1, 3, 2, 4, 5)
+    return x.reshape(B, (H // patch) * (W // patch), patch * patch * C)
+
+
+def vit_apply(params, x, ctx: Ctx, *, heads: int = 12):
+    """x: [B, 32, 32, 3] images -> [B, n_classes] logits.
+
+    ``heads`` is static config (params carry only arrays so they stay
+    differentiable / optimizer-friendly); patch size derives from shapes.
+    """
+    patch = int(round((params["patch"]["w"].shape[1] // 3) ** 0.5))
+    d = params["pos"].shape[-1]
+    acfg = AttnCfg(n_heads=heads, n_kv=heads, d_head=d // heads, causal=False,
+                   rope="none", impl="einsum")
+    t = dense(params["patch"], _patchify(x, patch), ctx, "input_proj")
+    B, n_tok, _ = t.shape
+    cls = jnp.broadcast_to(params["cls"], (B, 1, d)).astype(t.dtype)
+    t = jnp.concatenate([cls, t], axis=1) + params["pos"].astype(t.dtype)
+    positions = jnp.broadcast_to(jnp.arange(t.shape[1])[None], (B, t.shape[1]))
+    L = len(params["layers"])
+    for i, lp in enumerate(params["layers"]):
+        lctx = dataclasses.replace(ctx.for_layer(ctx.key, i), layer_index=i, n_layers=L)
+        t = t + attention(lp["attn"], layernorm(lp["ln1"], t), lctx, acfg, positions)
+        t = t + mlp_block(lp["mlp"], layernorm(lp["ln2"], t), lctx, "gelu")
+    t = layernorm(params["ln_f"], t)
+    return dense(params["head"], t[:, 0], ctx, "lm_head")
+
+
+# ---------------------------------------------------------------------------
+# BagNet-17-style: mostly 1×1 convs (= sketched linears over pixels) with a
+# few exact 3×3/stride stages, ResNet-ish residual blocks.
+# ---------------------------------------------------------------------------
+
+
+def bagnet_init(key, *, width=64, n_blocks=(2, 2, 2), n_classes=10, dtype=jnp.float32):
+    ks = iter(jax.random.split(key, 64))
+    params = {"stem": _conv_init(next(ks), 3, width, 3, dtype)}
+    blocks = []
+    w = width
+    for si, n in enumerate(n_blocks):
+        stage = []
+        for bi in range(n):
+            stage.append({
+                "c1": dense_init(next(ks), w, w, dtype, bias=True),      # 1x1 (sketched)
+                "c2": _conv_init(next(ks), w, w, 3, dtype),              # 3x3 (exact)
+                "c3": dense_init(next(ks), w, w * 2 if bi == n - 1 and si < 2 else w,
+                                 dtype, bias=True),                       # 1x1 (sketched)
+            })
+        blocks.append(stage)
+        if si < 2:
+            w *= 2
+    params["blocks"] = blocks
+    params["head"] = dense_init(next(ks), w, n_classes, dtype, bias=True)
+    return params
+
+
+def _conv_init(key, cin, cout, k, dtype):
+    return {"w": (jax.random.normal(key, (k, k, cin, cout)) * (k * k * cin) ** -0.5).astype(dtype),
+            "b": jnp.zeros((cout,), dtype)}
+
+
+def _conv(p, x, stride=1):
+    y = jax.lax.conv_general_dilated(x, p["w"], (stride, stride), "SAME",
+                                     dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return y + p["b"]
+
+
+def bagnet_apply(params, x, ctx: Ctx):
+    """x: [B, 32, 32, 3] -> logits. 1×1 convs are sketched dense sites."""
+    x = jax.nn.relu(_conv(params["stem"], x, stride=1))
+    li = 0
+    n_layers = sum(len(s) for s in params["blocks"])
+    for si, stage in enumerate(params["blocks"]):
+        for bi, bp in enumerate(stage):
+            lctx = dataclasses.replace(ctx.for_layer(ctx.key, li),
+                                       layer_index=li, n_layers=n_layers)
+            li += 1
+            h = jax.nn.relu(dense(bp["c1"], x, lctx, "mlp_in"))
+            h = jax.nn.relu(_conv(bp["c2"], h))
+            h = dense(bp["c3"], h, lctx, "mlp_out")
+            if h.shape[-1] == x.shape[-1]:
+                x = jax.nn.relu(x + h)
+            else:
+                x = jax.nn.relu(h)
+        if si < len(params["blocks"]) - 1:
+            x = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max, (1, 2, 2, 1),
+                                      (1, 2, 2, 1), "VALID")
+    x = jnp.mean(x, axis=(1, 2))
+    return dense(params["head"], x, ctx, "lm_head")
+
+
+def cls_loss(apply_fn, params, batch, ctx: Ctx):
+    logits = apply_fn(params, batch["x"], ctx)
+    labels = batch["y"]
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    true = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    loss = jnp.mean(lse - true)
+    acc = jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
+    return loss, acc

@@ -1,0 +1,168 @@
+"""Shared NN substrate: context object, norms, activations, init helpers.
+
+The substrate is pure JAX (no flax): every module is an ``init(key, ...) ->
+params`` / ``apply(params, x, ctx, ...)`` pair over plain nested dicts.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import SketchPolicy, linear
+from repro.core.policy import ROLES
+
+__all__ = ["Ctx", "dense", "dense_init", "rmsnorm", "rmsnorm_init", "layernorm",
+           "layernorm_init", "ACTIVATIONS", "trunc_normal"]
+
+_ROLE_IDS = {r: i for i, r in enumerate(ROLES)}
+
+
+@dataclasses.dataclass
+class Ctx:
+    """Per-call context threaded through every module.
+
+    ``key`` is the *per-layer* RNG key (already folded with the layer index);
+    per-site keys are derived from it with the static role id, so two sketched
+    sites in one layer never share randomness.
+    """
+
+    policy: Optional[SketchPolicy] = None
+    key: Optional[jax.Array] = None
+    layer_index: Any = 0  # may be a tracer inside lax.scan
+    n_layers: int = 1
+    mesh: Optional[Any] = None  # jax Mesh for explicit-collective paths (EP)
+    model_axes: tuple = ("model",)  # mesh axis name(s) carrying TP/EP shards
+    data_axes: tuple = ("data",)
+    cost_mode: bool = False  # python-unrolled loops (HLO cost artifacts)
+    decode: bool = False
+    act_sharding: Optional[Any] = None  # NamedSharding constraint on activations
+    tp_sketch: bool = False  # TP-local compact sketching (core.sharded_sketch)
+
+    def constrain(self, x):
+        if self.act_sharding is not None and x.ndim == 3:
+            return jax.lax.with_sharding_constraint(x, self.act_sharding)
+        return x
+
+    def constrain_heads(self, x):
+        """Pin [B, S, H, dh] attention tensors to (dp, None, model, None)."""
+        if self.act_sharding is None or self.mesh is None or x.ndim != 4:
+            return x
+        from jax.sharding import NamedSharding, PartitionSpec
+
+        mesh = self.mesh
+        n_mp = 1
+        for a in self.model_axes:
+            n_mp *= mesh.shape[a]
+        n_dp = 1
+        for a in self.data_axes:
+            n_dp *= mesh.shape[a]
+        bax = self.data_axes if x.shape[0] % n_dp == 0 else None
+        hax = self.model_axes[0] if (self.model_axes and x.shape[2] % n_mp == 0) else None
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, PartitionSpec(bax, None, hax, None)))
+
+    def site_key(self, role: str) -> Optional[jax.Array]:
+        if self.key is None:
+            return None
+        return jax.random.fold_in(self.key, _ROLE_IDS[role])
+
+    def cfg_for(self, role: str):
+        if self.policy is None:
+            return None
+        # location-based policies need a static layer index (MLP/ViT models);
+        # scan-based models use location="all" where layer_index may be traced.
+        li = self.layer_index if isinstance(self.layer_index, int) else 0
+        return self.policy.config_for(role, li, self.n_layers)
+
+    def for_layer(self, step_key, layer_index):
+        """Child ctx for one layer of a stack (folds the RNG key)."""
+        key = None if step_key is None else jax.random.fold_in(step_key, layer_index)
+        return dataclasses.replace(self, key=key, layer_index=layer_index)
+
+
+def trunc_normal(key, shape, scale, dtype=jnp.float32):
+    """Truncated-normal init with stddev ``scale`` (fan-in handled by caller)."""
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * scale).astype(dtype)
+
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32, *, scale: float | None = None,
+               bias: bool = False):
+    w = trunc_normal(key, (d_out, d_in), scale if scale is not None else d_in ** -0.5, dtype)
+    p = {"w": w}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+_TP_OUT_ROLES = frozenset({"attn_q", "attn_k", "attn_v", "mlp_in", "mlp_gate",
+                           "cross_q", "cross_k", "cross_v", "ssm_in"})
+_TP_ROW_ROLES = frozenset({"attn_o", "mlp_out", "ssm_out", "cross_o"})
+
+
+def dense(params, x, ctx: Ctx, role: str):
+    """Linear site; sketched iff the policy covers ``role``.
+
+    Under ``ctx.tp_sketch``, sites whose d_out is TP-sharded use the
+    shard_map compact path with compressed gradient collectives; everything
+    else keeps the configured (mask) backend.
+    """
+    cfg = ctx.cfg_for(role)
+    if (cfg is not None and role in _TP_OUT_ROLES and x.ndim == 3
+            and params.get("b") is None and ctx.key is not None):
+        from repro.core.sharded_sketch import tp_applicable, tp_sketched_linear
+
+        if tp_applicable(ctx, cfg, params["w"].shape[0]):
+            return tp_sketched_linear(x, params["w"], ctx, cfg, ctx.site_key(role))
+    if (cfg is not None and role in _TP_ROW_ROLES and x.ndim == 3
+            and params.get("b") is None and ctx.key is not None):
+        from repro.core.sharded_sketch import tp_row_applicable, tp_row_sketched_linear
+
+        if tp_row_applicable(ctx, cfg, params["w"].shape[1]):
+            return tp_row_sketched_linear(x, params["w"], ctx, cfg, ctx.site_key(role))
+    if (cfg is not None and ctx.tp_sketch and cfg.backend in ("compact", "pallas")):
+        # TP-incompatible site (e.g. kv heads < model axis): fall back to the
+        # dense-mask estimator rather than the scatter-hostile compact path.
+        import dataclasses as _dc
+
+        cfg = _dc.replace(cfg, backend="mask", block=0)
+    return linear(x, params["w"], params.get("b"), key=ctx.site_key(role), cfg=cfg)
+
+
+def rmsnorm_init(d: int, dtype=jnp.float32):
+    return {"g": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * params["g"].astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm_init(d: int, dtype=jnp.float32):
+    return {"g": jnp.ones((d,), dtype), "b": jnp.zeros((d,), dtype)}
+
+
+def layernorm(params, x, eps: float = 1e-6):
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * params["g"].astype(jnp.float32) + params["b"].astype(jnp.float32)).astype(x.dtype)
+
+
+def _relu_sq(x):
+    r = jax.nn.relu(x)
+    return r * r
+
+
+ACTIVATIONS = {
+    "gelu": jax.nn.gelu,
+    "silu": jax.nn.silu,
+    "relu": jax.nn.relu,
+    "relu_sq": _relu_sq,  # Nemotron-4 squared ReLU
+    "tanh": jnp.tanh,
+}

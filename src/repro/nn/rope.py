@@ -1,0 +1,56 @@
+"""Rotary position embeddings: standard RoPE and Qwen2-VL M-RoPE.
+
+M-RoPE (arXiv:2409.12191) splits the head dimension into three sections
+rotated by (temporal, height, width) position streams; for the text-only /
+stub-frontend path all three streams coincide, recovering standard RoPE.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["rope_freqs", "apply_rope", "apply_mrope"]
+
+
+def rope_freqs(d_head: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2, dtype=jnp.float32) / d_head))
+
+
+def _rotate(x, cos, sin):
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [B, S, H, d_head]; positions: [B, S] (int)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)  # [d/2]
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # [B, S, d/2]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    return _rotate(x.astype(jnp.float32), cos, sin).astype(x.dtype)
+
+
+def apply_mrope(x: jax.Array, positions3: jax.Array, theta: float,
+                sections=(2, 1, 1)) -> jax.Array:
+    """M-RoPE. x: [B, S, H, d_head]; positions3: [3, B, S] (t, h, w).
+
+    ``sections`` gives the relative split of the d/2 frequency slots across
+    the three position streams (Qwen2-VL uses 16/24/24 of 64 ⇒ ratios 2:3:3;
+    we parameterise and default to a t-heavy split normalised to d/2).
+    """
+    d = x.shape[-1]
+    half = d // 2
+    total = sum(sections)
+    sizes = [half * s // total for s in sections]
+    sizes[-1] = half - sizes[0] - sizes[1]
+    freqs = rope_freqs(d, theta)  # [half]
+    pos_per_slot = jnp.concatenate([
+        jnp.broadcast_to(positions3[i][..., None].astype(jnp.float32),
+                         positions3.shape[1:] + (sizes[i],))
+        for i in range(3)
+    ], axis=-1)  # [B, S, half]
+    ang = pos_per_slot * freqs  # [B, S, half]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    return _rotate(x.astype(jnp.float32), cos, sin).astype(x.dtype)

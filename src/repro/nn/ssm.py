@@ -1,0 +1,329 @@
+"""State-space sequence mixers: Mamba2 (SSD) and RWKV6 (Finch).
+
+Both keep the *recurrence core* exact (the paper sketches linear VJPs; the
+in/out projections — which dominate FLOPs — are sketched sites). Training uses
+chunked forms whose outer chunk loop is a ``lax.scan`` (rolled) or a python
+loop (``ctx.cost_mode``); decode is a single-step state update.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.common import Ctx, dense, dense_init, rmsnorm, rmsnorm_init
+
+__all__ = ["MambaCfg", "mamba_init", "mamba_block", "mamba_decode", "mamba_state_init",
+           "RWKVCfg", "rwkv_init", "rwkv_time_mix", "rwkv_channel_mix", "rwkv_state_init"]
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 (SSD) — arXiv:2405.21060, scalar-decay-per-head chunked form.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MambaCfg:
+    d_model: int
+    d_state: int = 64
+    expand: int = 2
+    head_dim: int = 64
+    d_conv: int = 4
+    chunk: int = 256
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_inner // self.head_dim
+
+
+def mamba_init(key, cfg: MambaCfg, dtype=jnp.float32):
+    """Projections are split (z/x/B/C/dt) instead of fused so each one has a
+    clean TP sharding (the fused layout would slice across the model axis);
+    the short causal conv runs on x only (B/C un-convolved — a documented
+    simplification vs. the official Mamba2, see DESIGN.md)."""
+    ks = jax.random.split(key, 7)
+    di, N, H = cfg.d_inner, cfg.d_state, cfg.n_heads
+    return {
+        "in_z": dense_init(ks[0], cfg.d_model, di, dtype),
+        "in_x": dense_init(ks[1], cfg.d_model, di, dtype),
+        "in_B": dense_init(ks[2], cfg.d_model, N, dtype),
+        "in_C": dense_init(ks[3], cfg.d_model, N, dtype),
+        "in_dt": dense_init(ks[4], cfg.d_model, H, dtype),
+        "conv": (jax.random.normal(ks[5], (cfg.d_conv, di), jnp.float32) * 0.1).astype(dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H, dtype=jnp.float32)),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.full((H,), -2.0, jnp.float32),
+        "norm": rmsnorm_init(di, dtype),
+        "out": dense_init(ks[6], di, cfg.d_model, dtype, scale=di ** -0.5),
+    }
+
+
+def _causal_conv(x, w, state=None):
+    """Depthwise causal conv. x: [B,S,C], w: [K,C]. state: [B,K-1,C] or None."""
+    K = w.shape[0]
+    if state is None:
+        pad = jnp.zeros(x.shape[:1] + (K - 1,) + x.shape[2:], x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i][None, None, :] for i in range(K))
+    new_state = xp[:, -(K - 1):] if K > 1 else None
+    return jax.nn.silu(out.astype(jnp.float32)).astype(x.dtype), new_state
+
+
+def _ssd_chunk(state, xc, dtc, dAc, Bc, Cc):
+    """One SSD chunk. state:[B,H,P,N]; xc:[B,Q,H,P]; dtc,dAc:[B,Q,H];
+    Bc,Cc:[B,Q,N]. Returns (new_state, yc:[B,Q,H,P])."""
+    # cumulative log decay within chunk (per head)
+    la = jnp.cumsum(jnp.log(jnp.maximum(dAc, 1e-30)), axis=1)  # [B,Q,H]
+    # inter-chunk: y_i += C_i · (exp(la_i) * state)
+    decay_in = jnp.exp(la)  # [B,Q,H]
+    y_inter = jnp.einsum("bqn,bhpn,bqh->bqhp", Cc, state, decay_in)
+    # intra-chunk: y_i += Σ_{j<=i} exp(la_i - la_j) dt_j (C_i·B_j) x_j
+    CB = jnp.einsum("bqn,bpn->bqp", Cc, Bc)  # [B,Q,Q] (q=query, p=key step)
+    Q = xc.shape[1]
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    dec = jnp.exp(la[:, :, None, :] - la[:, None, :, :])  # [B,Q,Qk,H]
+    dec = jnp.where(mask[None, :, :, None], dec, 0.0)
+    y_intra = jnp.einsum("bqk,bqkh,bkh,bkhp->bqhp", CB, dec, dtc, xc)
+    # state update: state' = exp(la_Q) state + Σ_j exp(la_Q - la_j) dt_j B_j x_jᵀ
+    tot = la[:, -1]  # [B,H]
+    decay_out = jnp.exp(tot[:, None, :] - la)  # [B,Q,H]
+    state_new = state * jnp.exp(tot)[..., None, None]
+    state_new = state_new + jnp.einsum("bqh,bqh,bqhp,bqn->bhpn", decay_out, dtc, xc, Bc)
+    return state_new, y_inter + y_intra
+
+
+def _ssd(x, dt, A, B, C, cfg: MambaCfg, state0, cost_mode: bool):
+    """x:[B,S,H,P] dt:[B,S,H] A:[H] B,C:[B,S,N] -> (y, state)."""
+    Bsz, S_in, H, P = x.shape
+    Q = min(cfg.chunk, S_in)
+    S = ((S_in + Q - 1) // Q) * Q
+    if S != S_in:
+        # pad with inert steps: dt=0 ⇒ dA=1 and zero state injection
+        x = jnp.pad(x, ((0, 0), (0, S - S_in), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, S - S_in), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, S - S_in), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, S - S_in), (0, 0)))
+    dA = jnp.exp(-A[None, None, :] * dt)  # [B,S,H] decay per step
+    nC = S // Q
+
+    def chunk_fn(state, i):
+        sl = lambda t: jax.lax.dynamic_slice_in_dim(t, i * Q, Q, axis=1)
+        return _ssd_chunk(state, sl(x), sl(dt), sl(dA), sl(B), sl(C))
+
+    if cost_mode:
+        ys = []
+        state = state0
+        for i in range(nC):
+            state, yc = jax.checkpoint(chunk_fn)(state, i)
+            ys.append(yc)
+        return jnp.concatenate(ys, axis=1)[:, :S_in], state
+
+    def body(state, i):
+        state, yc = chunk_fn(state, i)
+        return state, yc
+
+    state, ys = jax.lax.scan(jax.checkpoint(body), state0, jnp.arange(nC))
+    y = jnp.moveaxis(ys, 0, 1).reshape(Bsz, S, H, P)
+    return y[:, :S_in], state
+
+
+def _mamba_pre(params, x, ctx: Ctx, cfg: MambaCfg, conv_state=None):
+    z = dense(params["in_z"], x, ctx, "ssm_in")
+    xs = dense(params["in_x"], x, ctx, "ssm_in")
+    Bc = dense(params["in_B"], x, ctx, "ssm_small")
+    Cc = dense(params["in_C"], x, ctx, "ssm_small")
+    dt = dense(params["in_dt"], x, ctx, "ssm_small")
+    xs, new_conv = _causal_conv(xs, params["conv"], conv_state)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"][None, None, :])
+    return z, xs, Bc, Cc, dt, new_conv
+
+
+def mamba_block(params, x, ctx: Ctx, cfg: MambaCfg):
+    """Training/prefill path. x: [B, S, d_model] -> [B, S, d_model]."""
+    Bsz, S, _ = x.shape
+    H, P = cfg.n_heads, cfg.head_dim
+    z, xs, Bc, Cc, dt, _ = _mamba_pre(params, x, ctx, cfg)
+    xh = xs.reshape(Bsz, S, H, P)
+    A = jnp.exp(params["A_log"])
+    state0 = jnp.zeros((Bsz, H, P, cfg.d_state), jnp.float32)
+    y, _ = _ssd(xh.astype(jnp.float32), dt, A, Bc.astype(jnp.float32),
+                Cc.astype(jnp.float32), cfg, state0, ctx.cost_mode)
+    y = y + params["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(Bsz, S, cfg.d_inner).astype(x.dtype)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    y = rmsnorm(params["norm"], y)
+    return dense(params["out"], y, ctx, "ssm_out")
+
+
+def mamba_state_init(batch: int, cfg: MambaCfg, dtype):
+    return {
+        "ssm": jnp.zeros((batch, cfg.n_heads, cfg.head_dim, cfg.d_state), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.d_conv - 1, cfg.d_inner), dtype),
+    }
+
+
+def mamba_decode(params, x, ctx: Ctx, cfg: MambaCfg, state):
+    """Single-token step. x: [B, 1, d_model]; state: see mamba_state_init."""
+    Bsz = x.shape[0]
+    H, P, N = cfg.n_heads, cfg.head_dim, cfg.d_state
+    z, xs, Bc, Cc, dt, new_conv = _mamba_pre(params, x, ctx, cfg, state["conv"])
+    xh = xs.reshape(Bsz, H, P).astype(jnp.float32)
+    A = jnp.exp(params["A_log"])
+    dt1 = dt[:, 0]  # [B,H]
+    dA = jnp.exp(-A[None, :] * dt1)  # [B,H]
+    s = state["ssm"] * dA[..., None, None] + jnp.einsum(
+        "bh,bhp,bn->bhpn", dt1, xh, Bc[:, 0].astype(jnp.float32))
+    y = jnp.einsum("bhpn,bn->bhp", s, Cc[:, 0].astype(jnp.float32))
+    y = y + params["D"][None, :, None] * xh
+    y = y.reshape(Bsz, 1, cfg.d_inner).astype(x.dtype)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    y = rmsnorm(params["norm"], y)
+    return dense(params["out"], y, ctx, "ssm_out"), {"ssm": s, "conv": new_conv}
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 (Finch) — arXiv:2404.05892. Data-dependent per-channel decay.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class RWKVCfg:
+    d_model: int
+    head_dim: int = 64
+    d_ff: int = 0  # channel-mix hidden
+    chunk: int = 64
+    decay_lora: int = 64
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_model // self.head_dim
+
+
+def rwkv_init(key, cfg: RWKVCfg, dtype=jnp.float32):
+    ks = jax.random.split(key, 10)
+    d = cfg.d_model
+    return {
+        "mu": 0.5 * jnp.ones((5, d), jnp.float32),  # shift mixes for r,k,v,g,w
+        "r": dense_init(ks[0], d, d, dtype),
+        "k": dense_init(ks[1], d, d, dtype),
+        "v": dense_init(ks[2], d, d, dtype),
+        "g": dense_init(ks[3], d, d, dtype),
+        # data-dependent decay via low-rank projection (Finch's LoRA form)
+        "w1": dense_init(ks[4], d, cfg.decay_lora, jnp.float32),
+        "w2": dense_init(ks[5], cfg.decay_lora, d, jnp.float32),
+        "w_bias": jnp.full((d,), -6.0, jnp.float32),
+        "u": (jax.random.normal(ks[6], (d,), jnp.float32) * 0.1),
+        "out": dense_init(ks[7], d, d, dtype, scale=d ** -0.5),
+        "cm_k": dense_init(ks[8], d, cfg.d_ff or (7 * d // 2), dtype),
+        "cm_v": dense_init(ks[9], cfg.d_ff or (7 * d // 2), d, dtype, scale=d ** -0.5),
+        "cm_r": dense_init(jax.random.fold_in(ks[9], 1), d, d, dtype),
+        "cm_mu": 0.5 * jnp.ones((2, d), jnp.float32),
+        "ln_x": rmsnorm_init(d, dtype),
+    }
+
+
+def _shift(x, prev=None):
+    """Token shift: x_{t-1} (zeros/state at t=0). x: [B,S,d]."""
+    if prev is None:
+        prev = jnp.zeros_like(x[:, :1])
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def _wkv_chunk(state, r, k, v, w, u, H, P):
+    """Sequential WKV over one chunk (rank-1 updates; vectorised over B,H).
+
+    state: [B,H,P,P] (key-dim × value-dim); r,k,v,w: [B,Q,H,P]; u: [H,P].
+    """
+    def step(s, inp):
+        rt, kt, vt, wt = inp  # each [B,H,P]
+        kv = jnp.einsum("bhi,bhj->bhij", kt, vt)
+        out = jnp.einsum("bhi,bhij->bhj", rt, s + u[None, :, :, None] * kv)
+        s = wt[..., None] * s + kv
+        return s, out
+
+    rs = jnp.moveaxis(r, 1, 0)
+    ks_ = jnp.moveaxis(k, 1, 0)
+    vs = jnp.moveaxis(v, 1, 0)
+    ws = jnp.moveaxis(w, 1, 0)
+    state, outs = jax.lax.scan(step, state, (rs, ks_, vs, ws))
+    return state, jnp.moveaxis(outs, 0, 1)  # [B,Q,H,P]
+
+
+def rwkv_time_mix(params, x, ctx: Ctx, cfg: RWKVCfg, state=None):
+    """x: [B,S,d] -> (y, new_state). state = {"wkv": [B,H,P,P], "shift": [B,1,d]}."""
+    Bsz, S, d = x.shape
+    H, P = cfg.n_heads, cfg.head_dim
+    prev = state["shift"] if state is not None else None
+    xp = _shift(x, prev)
+    mu = params["mu"]
+    mix = lambda i: x + mu[i][None, None, :].astype(x.dtype) * (xp - x)
+    r = dense(params["r"], mix(0), ctx, "attn_q")
+    k = dense(params["k"], mix(1), ctx, "attn_k")
+    v = dense(params["v"], mix(2), ctx, "attn_v")
+    g = dense(params["g"], mix(3), ctx, "mlp_gate")
+    # data-dependent decay w ∈ (0,1): exp(-exp(lora(x)))
+    wlog = (mix(4).astype(jnp.float32) @ params["w1"]["w"].T) @ params["w2"]["w"].T
+    w = jnp.exp(-jnp.exp(wlog + params["w_bias"][None, None, :]))
+
+    shp = (Bsz, S, H, P)
+    rh, kh, vh = (t.astype(jnp.float32).reshape(shp) for t in (r, k, v))
+    wh = w.reshape(shp)
+    u = params["u"].reshape(H, P)
+
+    wkv0 = state["wkv"] if state is not None else jnp.zeros((Bsz, H, P, P), jnp.float32)
+    Q = min(cfg.chunk, S)
+    S_pad = ((S + Q - 1) // Q) * Q
+    if S_pad != S:
+        # inert padding: w=1 (no decay), r=k=v=0 (no state change, zero output)
+        padded = ((0, 0), (0, S_pad - S), (0, 0), (0, 0))
+        rh, kh, vh = (jnp.pad(t, padded) for t in (rh, kh, vh))
+        wh = jnp.pad(wh, padded, constant_values=1.0)
+    nC = S_pad // Q
+
+    def chunk(s, i):
+        sl = lambda t: jax.lax.dynamic_slice_in_dim(t, i * Q, Q, axis=1)
+        return _wkv_chunk(s, sl(rh), sl(kh), sl(vh), sl(wh), u, H, P)
+
+    if ctx.cost_mode:
+        outs, s = [], wkv0
+        for i in range(nC):
+            s, o = jax.checkpoint(chunk)(s, i)
+            outs.append(o)
+        y = jnp.concatenate(outs, axis=1)
+    else:
+        s, ys = jax.lax.scan(jax.checkpoint(lambda c, i: chunk(c, i)), wkv0, jnp.arange(nC))
+        y = jnp.moveaxis(ys, 0, 1).reshape(Bsz, S_pad, H, P)
+    y = y[:, :S].reshape(Bsz, S, d).astype(x.dtype)
+    y = rmsnorm(params["ln_x"], y)
+    y = y * jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype)
+    y = dense(params["out"], y, ctx, "attn_o")
+    new_state = {"wkv": s, "shift": x[:, -1:]}
+    return y, new_state
+
+
+def rwkv_channel_mix(params, x, ctx: Ctx, cfg: RWKVCfg, state=None):
+    """RWKV channel mix (squared-ReLU MLP with token shift)."""
+    prev = state if state is not None else None
+    xp = _shift(x, prev)
+    mu = params["cm_mu"]
+    xk = x + mu[0][None, None, :].astype(x.dtype) * (xp - x)
+    xr = x + mu[1][None, None, :].astype(x.dtype) * (xp - x)
+    kk = dense(params["cm_k"], xk, ctx, "mlp_in")
+    kk = jnp.square(jax.nn.relu(kk.astype(jnp.float32))).astype(x.dtype)
+    rr = jax.nn.sigmoid(dense(params["cm_r"], xr, ctx, "mlp_gate").astype(jnp.float32)).astype(x.dtype)
+    return rr * dense(params["cm_v"], kk, ctx, "mlp_out"), x[:, -1:]
+
+
+def rwkv_state_init(batch: int, cfg: RWKVCfg, dtype):
+    return {
+        "wkv": jnp.zeros((batch, cfg.n_heads, cfg.head_dim, cfg.head_dim), jnp.float32),
+        "shift_tm": jnp.zeros((batch, 1, cfg.d_model), dtype),
+        "shift_cm": jnp.zeros((batch, 1, cfg.d_model), dtype),
+    }

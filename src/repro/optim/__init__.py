@@ -1,0 +1,6 @@
+"""Pure-JAX optimizers with sharded state (ZeRO-3: states inherit param specs)."""
+from repro.optim.optimizers import Optimizer, adamw, clip_by_global_norm, sgd
+from repro.optim.schedule import constant, cosine_warmup
+
+__all__ = ["Optimizer", "adamw", "sgd", "clip_by_global_norm",
+           "cosine_warmup", "constant"]

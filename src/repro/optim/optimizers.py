@@ -1,0 +1,111 @@
+"""SGD(+momentum) and AdamW as init/update function pairs (optax-style,
+implemented from scratch — optax is not vendored here).
+
+Optimizer state is a pytree congruent with params, so it shards with the same
+PartitionSpecs (ZeRO-3). ``moment_dtype`` lets 100B+ archs keep bf16 moments
+(documented HBM trade-off in DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["Optimizer", "sgd", "adamw", "clip_by_global_norm"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable  # (grads, state, params, step) -> (new_params, new_state)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = [g for g in jax.tree.leaves(grads) if hasattr(g, "astype")]
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-12))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype)
+                        if hasattr(g, "astype") else g, grads), gn
+
+
+def sgd(lr: Callable | float, momentum: float = 0.0, clip: Optional[float] = None):
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        if momentum == 0.0:
+            return {}
+        return {"m": jax.tree.map(
+            lambda p: jnp.zeros_like(p) if _is_trainable(p) else jnp.zeros(()), params)}
+
+    def update(grads, state, params, step):
+        if clip is not None:
+            grads, _ = clip_by_global_norm(grads, clip)
+        lr_t = lr_fn(step)
+        if momentum == 0.0:
+            new_params = jax.tree.map(
+                lambda p, g: (p.astype(jnp.float32) - lr_t * g.astype(jnp.float32)).astype(p.dtype)
+                if _is_trainable(p) else p,
+                params, grads)
+            return new_params, state
+        new_m = jax.tree.map(
+            lambda m, g: momentum * m + g.astype(m.dtype) if hasattr(g, "astype") and m.ndim else m,
+            state["m"], grads)
+        new_params = jax.tree.map(
+            lambda p, m: (p.astype(jnp.float32) - lr_t * m.astype(jnp.float32)).astype(p.dtype)
+            if _is_trainable(p) else p,
+            params, new_m)
+        return new_params, {"m": new_m}
+
+    return Optimizer(init, update)
+
+
+def _is_trainable(p) -> bool:
+    return hasattr(p, "dtype") and jnp.issubdtype(jnp.asarray(p).dtype, jnp.inexact)
+
+
+def adamw(lr: Callable | float, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.0, clip: Optional[float] = None,
+          moment_dtype=jnp.float32):
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        z = lambda p: jnp.zeros(p.shape, moment_dtype) if _is_trainable(p) else jnp.zeros(())
+        return {"m": jax.tree.map(z, params), "v": jax.tree.map(z, params)}
+
+    def update(grads, state, params, step):
+        if clip is not None:
+            grads, _ = clip_by_global_norm(grads, clip)
+        t = step.astype(jnp.float32) + 1.0
+        lr_t = lr_fn(step)
+        c1 = 1.0 - b1 ** t
+        c2 = 1.0 - b2 ** t
+
+        def upd(p, g, m, v):
+            if not _is_trainable(p):
+                return p, m, v  # static leaves (shapes, flags) pass through
+            g32 = g.astype(jnp.float32)
+            m_new = b1 * m.astype(jnp.float32) + (1 - b1) * g32
+            v_new = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(g32)
+            mhat = m_new / c1
+            vhat = v_new / c2
+            step_ = mhat / (jnp.sqrt(vhat) + eps)
+            p32 = p.astype(jnp.float32)
+            # decoupled weight decay on matrices only (ndim >= 2)
+            if weight_decay and p.ndim >= 2:
+                step_ = step_ + weight_decay * p32
+            return ((p32 - lr_t * step_).astype(p.dtype),
+                    m_new.astype(moment_dtype), v_new.astype(moment_dtype))
+
+        p_flat, treedef = jax.tree.flatten(params)
+        g_flat = treedef.flatten_up_to(grads)
+        m_flat = treedef.flatten_up_to(state["m"])
+        v_flat = treedef.flatten_up_to(state["v"])
+        out = [upd(p, g, m, v) for p, g, m, v in zip(p_flat, g_flat, m_flat, v_flat)]
+        new_params = jax.tree.unflatten(treedef, [o[0] for o in out])
+        new_m = jax.tree.unflatten(treedef, [o[1] for o in out])
+        new_v = jax.tree.unflatten(treedef, [o[2] for o in out])
+        return new_params, {"m": new_m, "v": new_v}
+
+    return Optimizer(init, update)

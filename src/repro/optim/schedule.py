@@ -1,0 +1,20 @@
+"""LR schedules (paper: constant for MLP/SGD, cosine for BagNet/ViT)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["constant", "cosine_warmup"]
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def cosine_warmup(peak: float, warmup: int, total: int, floor: float = 0.0):
+    def fn(step):
+        s = jnp.asarray(step, jnp.float32)
+        warm = peak * s / jnp.maximum(warmup, 1)
+        prog = jnp.clip((s - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+        cos = floor + 0.5 * (peak - floor) * (1.0 + jnp.cos(jnp.pi * prog))
+        return jnp.where(s < warmup, warm, cos)
+    return fn

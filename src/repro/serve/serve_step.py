@@ -1,0 +1,45 @@
+"""Serving steps: prefill and single-token decode (the dry-run ``serve_step``).
+
+decode cells lower ``serve_step`` — one new token against a KV/SSM cache of
+``seq_len`` — NOT ``train_step`` (task spec). The cache sharding comes from
+``repro.launch.sharding.cache_specs`` (sequence over model, batch over data).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import lm
+from repro.nn.common import Ctx
+
+__all__ = ["make_decode_step", "make_prefill", "greedy_sample"]
+
+
+def greedy_sample(logits):
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def make_decode_step(cfg: ArchConfig, *, mesh=None, act_sharding=None,
+                     data_axes=("data",), model_axes=("model",), cost_mode=False):
+    """Returns ``decode_fn(params, caches, tokens[B,1], pos) -> (logits, caches)``."""
+
+    def decode_fn(params, caches, tokens, pos):
+        ctx = Ctx(policy=None, mesh=mesh, act_sharding=act_sharding, decode=True,
+                  data_axes=data_axes, model_axes=model_axes, cost_mode=cost_mode)
+        logits, new_caches = lm.decode_step(params, caches, tokens, pos, ctx, cfg)
+        return logits, new_caches
+
+    return decode_fn
+
+
+def make_prefill(cfg: ArchConfig, max_len: int, *, mesh=None, act_sharding=None,
+                 data_axes=("data",), model_axes=("model",), cost_mode=False):
+    def prefill_fn(params, batch):
+        ctx = Ctx(policy=None, mesh=mesh, act_sharding=act_sharding,
+                  data_axes=data_axes, model_axes=model_axes, cost_mode=cost_mode)
+        return lm.prefill(params, batch, ctx, cfg, max_len)
+
+    return prefill_fn

@@ -1,0 +1,38 @@
+"""Elastic restart: re-shard a checkpoint onto a different mesh.
+
+Parameter PartitionSpecs are *rule-derived* (launch/sharding.py) rather than
+baked into checkpoints, and checkpoints store full logical arrays — so a
+cluster resize (node failure shrinking DP, or scale-up) is:
+
+    state_like  = eval_shape(init_state)
+    new_mesh    = make_mesh(new_shape, axes)
+    shardings   = param_shardings(state_like, new_mesh)
+    state, step = restore(ckpt_dir, state_like, shardings=shardings)
+
+``resume_on_mesh`` wraps exactly that. tests/test_checkpoint.py exercises a
+(4,2) -> (2,4) -> (8,) sequence on fake devices.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.launch import sharding as shardlib
+from repro.train import checkpoint as ckptlib
+from repro.train.train_step import TrainState
+
+__all__ = ["resume_on_mesh", "state_shardings"]
+
+
+def state_shardings(state_like: TrainState, mesh):
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    pspecs = shardlib.param_shardings(state_like.params, mesh)
+    ospecs = {k: pspecs for k in state_like.opt_state}
+    return TrainState(params=pspecs, opt_state=ospecs,
+                      step=NamedSharding(mesh, P()))
+
+
+def resume_on_mesh(ckpt_dir: str, state_like: TrainState, mesh):
+    """Restore the newest checkpoint, sharded for ``mesh`` (any shape)."""
+    shardings = state_shardings(state_like, mesh)
+    return ckptlib.restore(ckpt_dir, state_like, shardings=shardings)

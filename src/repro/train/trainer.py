@@ -1,0 +1,96 @@
+"""Training loop: metrics, periodic async checkpointing, straggler control,
+auto-resume, elastic restart.
+
+The loop is deliberately thin — all heavy lifting is in the jitted step — but
+production-shaped: it survives SIGTERM-style interruption (atomic checkpoints),
+resumes from the newest checkpoint (possibly onto a different mesh), and can
+switch between precompiled sketch-budget buckets per step (paper App. B.1
+straggler mitigation; see repro/train/straggler.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Iterable, Optional
+
+import jax
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core import SketchPolicy
+from repro.optim import Optimizer
+from repro.train.checkpoint import CheckpointManager
+from repro.train.straggler import StragglerController
+from repro.train.train_step import TrainState, init_state, make_train_step
+
+__all__ = ["TrainerConfig", "train"]
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    steps: int = 100
+    log_every: int = 10
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 100
+    seed: int = 0
+    straggler_budgets: tuple = ()  # e.g. (1.0, 0.5, 0.2) enables mitigation
+
+
+def train(cfg: ArchConfig, opt: Optimizer, data: Iterable, tcfg: TrainerConfig,
+          policy: Optional[SketchPolicy] = None, *, mesh=None,
+          state: Optional[TrainState] = None,
+          on_metrics: Optional[Callable] = None):
+    """Run the loop; returns (final_state, history list of metric dicts)."""
+    key = jax.random.key(tcfg.seed)
+    if state is None:
+        state = init_state(jax.random.fold_in(key, 0), cfg, opt)
+
+    ckpt = CheckpointManager(tcfg.ckpt_dir, tcfg.ckpt_every) if tcfg.ckpt_dir else None
+    if ckpt is not None:
+        restored = ckpt.restore_or_none(state)
+        if restored is not None:
+            state, step0 = restored
+            print(f"[trainer] resumed from step {step0}")
+
+    # straggler buckets: pre-built steps at descending sketch budgets
+    controller = None
+    steps_by_budget = {}
+    if tcfg.straggler_budgets and policy is not None:
+        controller = StragglerController(tcfg.straggler_budgets)
+        for b in tcfg.straggler_budgets:
+            pol_b = policy if b >= 1.0 else policy.with_budget(b)
+            steps_by_budget[b] = jax.jit(make_train_step(cfg, opt, pol_b, mesh=mesh),
+                                         donate_argnums=(0,))
+    else:
+        steps_by_budget[1.0] = jax.jit(make_train_step(cfg, opt, policy, mesh=mesh),
+                                       donate_argnums=(0,))
+
+    history = []
+    data_it = iter(data)
+    start_step = int(jax.device_get(state.step))
+    for step in range(start_step, tcfg.steps):
+        batch = next(data_it)
+        step_key = jax.random.fold_in(key, step + 1)
+        budget = controller.budget if controller else 1.0
+        fn = steps_by_budget.get(budget, steps_by_budget[max(steps_by_budget)])
+        if controller:
+            controller.step_begin()
+        state, metrics = fn(state, batch, step_key)
+        if controller:
+            jax.block_until_ready(metrics["loss"])
+            controller.step_end()
+        if step % tcfg.log_every == 0 or step == tcfg.steps - 1:
+            m = {k: float(np.asarray(jax.device_get(v))) for k, v in metrics.items()}
+            m["step"] = step
+            m["budget"] = budget
+            history.append(m)
+            if on_metrics:
+                on_metrics(m)
+            else:
+                print(f"[trainer] step {step:6d} loss {m['loss']:.4f} "
+                      f"budget {budget:.2f}")
+        if ckpt is not None:
+            ckpt.maybe_save(step + 1, state)
+    if ckpt is not None:
+        ckpt.wait()
+    return state, history

@@ -1,0 +1,13 @@
+import os
+import sys
+
+# repo-root imports (benchmarks package) in addition to PYTHONPATH=src
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import jax
+import pytest
+
+
+@pytest.fixture
+def key():
+    return jax.random.key(0)

@@ -1,0 +1,56 @@
+"""HLO collective parser + depth model + roofline terms."""
+import numpy as np
+import pytest
+
+from repro.launch.hlo_analysis import (HW, collective_bytes, fit_depth_model,
+                                       predict_depth_model, roofline_terms)
+
+FAKE_HLO = """
+  %ar = f32[128,256]{1,0} all-reduce(f32[128,256] %x), replica_groups=[32,16]<=[512], to_apply=%add
+  %ag.1 = bf16[1024,64]{1,0} all-gather(bf16[64,64] %y), replica_groups=[2,16]<=[32], dimensions={0}
+  %rs = f32[32,8]{1,0} reduce-scatter(f32[256,8] %z), replica_groups={{0,1,2,3,4,5,6,7}}, to_apply=%add
+  %cp = bf16[16,16]{0,1} collective-permute(bf16[16,16] %w), source_target_pairs={{0,1}}
+  %a2a = f32[64]{0} all-to-all(f32[64] %v), replica_groups=[8,4]<=[32]
+  %ard = f32[2,2] all-reduce-done(f32[2,2] %h)
+"""
+
+
+def test_collective_bytes_parser():
+    out = collective_bytes(FAKE_HLO)
+    # all-reduce: 128*256*4 bytes, n=16 -> 2*(15/16)*size
+    ar = 128 * 256 * 4
+    assert out["all-reduce"] == pytest.approx(2 * ar * 15 / 16)
+    ag = 1024 * 64 * 2
+    assert out["all-gather"] == pytest.approx(ag * 15 / 16)
+    rs = 32 * 8 * 4
+    assert out["reduce-scatter"] == pytest.approx(rs * 7)
+    assert out["collective-permute"] == 16 * 16 * 2
+    a2a = 64 * 4
+    assert out["all-to-all"] == pytest.approx(a2a * 3 / 4)
+    assert out["counts"]["all-reduce"] == 1  # -done line not double counted
+
+
+def test_depth_model_exact_for_linear_costs():
+    # cost(L) = 5 + 3*n_full + 2*rem
+    pts = [(0, 1, {"flops": 5 + 2}), (1, 0, {"flops": 5 + 3}), (2, 0, {"flops": 5 + 6})]
+    coefs = fit_depth_model(pts)
+    pred = predict_depth_model(coefs, 13, 3)
+    assert pred["flops"] == pytest.approx(5 + 3 * 13 + 2 * 3, rel=1e-6)
+
+
+def test_depth_model_homogeneous_two_points():
+    pts = [(1, 0, {"bytes": 10.0}), (2, 0, {"bytes": 16.0}), (4, 0, {"bytes": 28.0})]
+    coefs = fit_depth_model(pts)
+    pred = predict_depth_model(coefs, 32, 0)
+    assert pred["bytes"] == pytest.approx(4 + 6 * 32, rel=1e-6)
+
+
+def test_roofline_terms_dominance():
+    hw = HW()
+    r = roofline_terms(flops=197e12, bytes_hbm=819e9 * 0.5, coll_bytes=0.0, chips=1, hw=hw)
+    assert r["dominant"] == "compute"
+    assert r["compute_s"] == pytest.approx(1.0)
+    r2 = roofline_terms(flops=1e9, bytes_hbm=819e9 * 2, coll_bytes=0.0, chips=1, hw=hw)
+    assert r2["dominant"] == "memory"
+    r3 = roofline_terms(flops=1e9, bytes_hbm=1e6, coll_bytes=hw.ici_bw * 3, chips=1, hw=hw)
+    assert r3["dominant"] == "collective"

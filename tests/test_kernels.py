@@ -1,0 +1,76 @@
+"""Pallas kernels (interpret mode) vs pure-jnp oracles: shape/dtype sweeps."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.col_scores import col_l1_scores
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.sketch_matmul import block_gather_matmul, block_gather_matmul_dw
+
+
+def _tol(dt):
+    return 2e-2 if dt == jnp.bfloat16 else 2e-5
+
+
+@pytest.mark.parametrize("N,n,d,rb,bs,dt", [
+    (64, 512, 384, 2, 128, jnp.float32),
+    (100, 256, 130, 1, 128, jnp.float32),
+    (256, 1024, 512, 4, 128, jnp.bfloat16),
+    (32, 256, 96, 2, 64, jnp.float32),
+    (8, 128, 64, 1, 128, jnp.float32),
+])
+def test_block_gather_matmul(N, n, d, rb, bs, dt):
+    ks = jax.random.split(jax.random.key(N * n + d), 4)
+    G = jax.random.normal(ks[0], (N, n), dt)
+    W = jax.random.normal(ks[1], (n, d), dt)
+    X = jax.random.normal(ks[2], (N, d), dt)
+    nb = n // bs
+    idx = jnp.sort(jax.random.choice(ks[3], nb, (rb,), replace=False)).astype(jnp.int32)
+    sc = jax.random.uniform(ks[3], (rb,), minval=0.5, maxval=2.0)
+    got = block_gather_matmul(G, idx, sc, W, block=bs, interpret=True)
+    want = ref.block_gather_matmul_ref(G, idx, sc, W, block=bs)
+    np.testing.assert_allclose(np.asarray(got, np.float32), np.asarray(want, np.float32),
+                               rtol=_tol(dt), atol=_tol(dt))
+    got2 = block_gather_matmul_dw(G, idx, sc, X, block=bs, interpret=True)
+    want2 = ref.block_gather_matmul_dw_ref(G, idx, sc, X, block=bs)
+    np.testing.assert_allclose(np.asarray(got2, np.float32), np.asarray(want2, np.float32),
+                               rtol=_tol(dt), atol=_tol(dt))
+
+
+@pytest.mark.parametrize("N,n,dt,mode", [
+    (300, 700, jnp.float32, "l1"), (64, 128, jnp.bfloat16, "l1"),
+    (128, 384, jnp.float32, "l2"), (17, 130, jnp.float32, "l1"),
+])
+def test_col_scores(N, n, dt, mode):
+    G = jax.random.normal(jax.random.key(N + n), (N, n), dt)
+    got = col_l1_scores(G, mode=mode, interpret=True)
+    if mode == "l1":
+        want = ref.col_l1_scores_ref(G)
+    else:
+        want = jnp.sum(jnp.square(G.astype(jnp.float32)), axis=0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-2 if dt == jnp.bfloat16 else 1e-5)
+
+
+@pytest.mark.parametrize("B,Sq,Skv,H,Kv,dh,causal,window,dt", [
+    (2, 128, 128, 4, 2, 64, True, None, jnp.float32),
+    (1, 96, 96, 4, 4, 64, True, 32, jnp.float32),
+    (2, 64, 192, 4, 1, 128, True, None, jnp.float32),
+    (1, 128, 128, 2, 2, 64, False, None, jnp.float32),
+    (1, 128, 128, 4, 2, 64, True, None, jnp.bfloat16),
+    (1, 100, 100, 2, 2, 64, True, None, jnp.float32),  # ragged
+])
+def test_flash_attention(B, Sq, Skv, H, Kv, dh, causal, window, dt):
+    ks = jax.random.split(jax.random.key(B * Sq + H), 3)
+    q = jax.random.normal(ks[0], (B, Sq, H, dh), dt)
+    k = jax.random.normal(ks[1], (B, Skv, Kv, dh), dt)
+    v = jax.random.normal(ks[2], (B, Skv, Kv, dh), dt)
+    got = flash_attention(q, k, v, causal=causal, window=window, interpret=True,
+                          tile_q=64, tile_k=64)
+    want = ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    tol = 3e-2 if dt == jnp.bfloat16 else 3e-4
+    np.testing.assert_allclose(np.asarray(got, np.float32), np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)

@@ -1,0 +1,99 @@
+"""Per-arch smoke tests (assignment deliverable f): reduced configs of every
+assigned architecture run one forward + one sketched train step on CPU, with
+shape and finiteness assertions; decoder archs also verify that prefill+decode
+reproduces the full causal forward."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import ARCH_IDS, cells_for, get_config, smoke_config
+from repro.core import SketchConfig, SketchPolicy
+from repro.models import lm
+from repro.nn.common import Ctx
+
+POLICY = SketchPolicy(base=SketchConfig(method="l1", budget=0.5))
+
+
+def _batch(cfg, B=2, S=24):
+    ks = jax.random.split(jax.random.key(0), 3)
+    batch = {"labels": jax.random.randint(ks[0], (B, S), 0, cfg.vocab)}
+    if cfg.frontend == "vision":
+        batch["embeds"] = jax.random.normal(ks[1], (B, S, cfg.d_model)) * 0.02
+        batch["positions"] = jnp.broadcast_to(jnp.arange(S)[None, None], (3, B, S))
+    else:
+        batch["tokens"] = jax.random.randint(ks[1], (B, S), 0, cfg.vocab)
+    if cfg.is_encdec:
+        batch["src_embeds"] = jax.random.normal(ks[2], (B, S, cfg.d_model)) * 0.02
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_and_sketched_train_step(arch):
+    cfg = smoke_config(arch)
+    params = lm.init_params(jax.random.key(1), cfg)
+    batch = _batch(cfg)
+    B, S = batch["labels"].shape
+
+    logits, aux = lm.forward(params, batch, Ctx(), cfg)
+    assert logits.shape == (B, S, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+    loss, grads = jax.jit(lambda p, k: jax.value_and_grad(
+        lambda q: lm.lm_loss(q, batch, Ctx(policy=POLICY), cfg, k)[0])(p))(
+            params, jax.random.key(2))
+    assert np.isfinite(float(loss))
+    assert all(bool(jnp.all(jnp.isfinite(g))) for g in jax.tree.leaves(grads))
+    # at least one parameter leaf receives nonzero gradient
+    assert any(float(jnp.max(jnp.abs(g))) > 0 for g in jax.tree.leaves(grads))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_prefill_decode_consistency(arch):
+    cfg = smoke_config(arch)
+    if cfg.frontend == "vision":
+        pytest.skip("vision stub feeds embeddings; decode parity covered via tokens path")
+    params = lm.init_params(jax.random.key(1), cfg)
+    batch = _batch(cfg, S=24)
+    toks = batch["tokens"]
+    fb = {k: v for k, v in batch.items() if k != "labels"}
+    logits_full, _ = lm.forward(params, fb, Ctx(), cfg)
+    pb = dict(fb)
+    pb["tokens"] = toks[:, :-1]
+    _, caches = lm.prefill(params, pb, Ctx(), cfg, max_len=30)
+    lg_dec, new_caches = lm.decode_step(params, caches, toks[:, -1:], 23, Ctx(), cfg)
+    err = float(jnp.max(jnp.abs(lg_dec[:, 0] - logits_full[:, -1])))
+    scale = float(jnp.max(jnp.abs(logits_full[:, -1]))) + 1e-6
+    assert err / scale < 3e-5, f"decode mismatch {err} (scale {scale})"
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_full_config_struct_and_cells(arch):
+    """The FULL config builds its param structure (eval_shape, no allocation)
+    and declares the right shape cells (long_500k only for sub-quadratic)."""
+    cfg = get_config(arch)
+    struct = jax.eval_shape(lambda k: lm.init_params(k, cfg), jax.random.key(0))
+    n = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(struct))
+    expected_minimum = {
+        "olmoe_1b_7b": 5e9, "mixtral_8x22b": 1e11, "qwen2_vl_2b": 1e9,
+        "seamless_m4t_large_v2": 8e8, "nemotron_4_340b": 2.5e11, "gemma3_1b": 7e8,
+        "yi_6b": 5e9, "llama3_405b": 3.5e11, "zamba2_7b": 5e9, "rwkv6_3b": 2e9,
+    }[arch]
+    assert n > expected_minimum, f"{arch}: {n:.3g} params"
+    cells = {c.name for c in cells_for(cfg)}
+    assert {"train_4k", "prefill_32k", "decode_32k"} <= cells
+    if arch in ("mixtral_8x22b", "gemma3_1b", "zamba2_7b", "rwkv6_3b"):
+        assert "long_500k" in cells
+    else:
+        assert "long_500k" not in cells
+
+
+def test_zamba_shared_block_actually_shared():
+    cfg = smoke_config("zamba2_7b")
+    params = lm.init_params(jax.random.key(0), cfg)
+    assert "shared" in params
+    # grads flow into the shared block from multiple applications
+    batch = _batch(cfg)
+    g = jax.grad(lambda p: lm.lm_loss(p, batch, Ctx(), cfg)[0])(params)
+    gn = sum(float(jnp.sum(jnp.abs(x))) for x in jax.tree.leaves(g["shared"]))
+    assert gn > 0

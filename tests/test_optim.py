@@ -1,0 +1,61 @@
+"""Optimizers: convergence on a quadratic, clipping, dtype handling."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim import adamw, clip_by_global_norm, constant, cosine_warmup, sgd
+
+
+def _quad_target(opt, steps=200):
+    target = jnp.asarray([1.0, -2.0, 3.0])
+    params = {"w": jnp.zeros(3)}
+    state = opt.init(params)
+    for i in range(steps):
+        g = {"w": 2 * (params["w"] - target)}
+        params, state = opt.update(g, state, params, jnp.asarray(i))
+    return float(jnp.max(jnp.abs(params["w"] - target)))
+
+
+def test_sgd_converges():
+    assert _quad_target(sgd(0.1)) < 1e-3
+
+
+def test_sgd_momentum_converges():
+    assert _quad_target(sgd(0.05, momentum=0.9)) < 1e-3
+
+
+def test_adamw_converges():
+    assert _quad_target(adamw(0.1), steps=400) < 1e-2
+
+
+def test_adamw_bf16_moments():
+    opt = adamw(0.1, moment_dtype=jnp.bfloat16)
+    params = {"w": jnp.zeros(3)}
+    state = opt.init(params)
+    assert state["m"]["w"].dtype == jnp.bfloat16
+    assert _quad_target(opt, steps=400) < 5e-2
+
+
+def test_clip_global_norm():
+    g = {"a": jnp.ones(4) * 10.0}
+    clipped, gn = clip_by_global_norm(g, 1.0)
+    assert float(gn) == 20.0
+    np.testing.assert_allclose(float(jnp.linalg.norm(clipped["a"])), 1.0, rtol=1e-5)
+
+
+def test_weight_decay_applies_to_matrices_only():
+    opt = adamw(0.1, weight_decay=0.5)
+    params = {"w": jnp.ones((2, 2)), "b": jnp.ones((2,))}
+    state = opt.init(params)
+    g = {"w": jnp.zeros((2, 2)), "b": jnp.zeros((2,))}
+    new_params, _ = opt.update(g, state, params, jnp.asarray(0))
+    assert float(jnp.max(new_params["w"])) < 1.0  # decayed
+    assert float(jnp.max(new_params["b"])) == 1.0  # not decayed
+
+
+def test_schedules():
+    f = cosine_warmup(1.0, 10, 100)
+    assert float(f(0)) == 0.0
+    np.testing.assert_allclose(float(f(10)), 1.0, rtol=1e-5)
+    assert float(f(100)) < 1e-3
+    np.testing.assert_allclose(float(constant(0.3)(77)), 0.3, rtol=1e-6)

@@ -1,0 +1,87 @@
+"""Optimality properties: Lemma 3.1 (rank-r sketch), Lemma 3.4 (diagonal)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import SketchConfig, solver
+from repro.core.sketching import apply_rcs
+
+
+def _lemma31_sketch_error(M, r, key, n_mc=300):
+    """E||M - S||_F² for the Lemma 3.1 optimal sketch of M."""
+    u, s, vt = np.linalg.svd(M, full_matrices=False)
+    p = np.asarray(solver.optimal_probabilities(jnp.asarray(s ** 2), r))
+    errs = []
+    for i in range(n_mc):
+        idx = np.asarray(solver.sample_exact_r(jax.random.fold_in(key, i),
+                                               jnp.asarray(p), r))
+        S = (u[:, idx] * (s[idx] / p[idx])) @ vt[idx]
+        errs.append(np.sum((M - S) ** 2))
+    return np.mean(errs)
+
+
+def test_lemma31_matches_closed_form(key):
+    """E||M-S||² should equal Σσ²/p − ||M||² (tightness of the lower bound)."""
+    rng = np.random.default_rng(0)
+    M = rng.normal(size=(12, 9)) @ np.diag(rng.uniform(0.1, 2.0, 9))
+    r = 4
+    s = np.linalg.svd(M, compute_uv=False)
+    p = np.asarray(solver.optimal_probabilities(jnp.asarray(s ** 2), r))
+    closed = float((s ** 2 / p).sum() - (s ** 2).sum())
+    emp = _lemma31_sketch_error(M, r, key, n_mc=2000)
+    assert emp == pytest.approx(closed, rel=0.15)
+
+
+def test_lemma31_beats_uniform_direction_sampling(key):
+    rng = np.random.default_rng(1)
+    # decaying spectrum -> optimal allocation clearly beats uniform
+    M = (rng.normal(size=(16, 16)) * (0.5 ** np.arange(16))[None, :])
+    r = 4
+    s = np.linalg.svd(M, compute_uv=False)
+    p_opt = np.asarray(solver.optimal_probabilities(jnp.asarray(s ** 2), r))
+    closed_opt = float((s ** 2 / p_opt).sum() - (s ** 2).sum())
+    p_unif = np.full(16, r / 16)
+    closed_unif = float((s ** 2 / p_unif).sum() - (s ** 2).sum())
+    assert closed_opt < 0.7 * closed_unif
+
+
+def test_lemma34_diagonal_weights_optimal(key):
+    """DS probabilities minimise Σ a_i/p_i vs random alternatives."""
+    rng = np.random.default_rng(2)
+    a = rng.uniform(size=20) ** 2
+    r = 5
+    p_opt = np.asarray(solver.optimal_probabilities(jnp.asarray(a), r))
+    obj_opt = (a / p_opt).sum()
+    for i in range(30):
+        q = rng.uniform(0.01, 1.0, 20)
+        q = q / q.sum() * r
+        q = np.clip(q, 1e-6, 1.0)
+        if q.sum() > r + 1e-6:
+            continue
+        assert obj_opt <= (a / q).sum() * (1 + 1e-3)
+
+
+def test_rcs_lower_distortion_than_per_column(key):
+    """Prop. 3.3 sketch should have lower E||J(I-R)g||² than diagonal masks."""
+    rng = np.random.default_rng(3)
+    n, m, B, r = 16, 12, 32, 4
+    W = rng.normal(size=(n, m)) * (0.5 ** np.arange(m))[None, :]  # J = Wᵀ-ish
+    G = rng.normal(size=(B, n)) * (0.7 ** np.arange(n))[None, :]
+    Gj = jnp.asarray(G, jnp.float32)
+    Wj = jnp.asarray(W, jnp.float32)
+    cfg = SketchConfig(method="rcs", budget=r / n, ridge=1e-6)
+    exact = G @ W
+
+    def dist(ghat):
+        return np.sum((np.asarray(ghat, np.float64) @ W - exact) ** 2)
+
+    d_rcs, d_col = 0.0, 0.0
+    n_mc = 400
+    from repro.core.sketching import sketch_dense
+    cfg_col = SketchConfig(method="per_column", budget=r / n)
+    for i in range(n_mc):
+        k = jax.random.fold_in(key, i)
+        d_rcs += dist(apply_rcs(cfg, Gj, Wj, k)) / n_mc
+        d_col += dist(sketch_dense(cfg_col, Gj, Wj, k)) / n_mc
+    assert d_rcs < d_col

@@ -1,0 +1,95 @@
+"""Hypothesis property tests on the system's core invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import SketchConfig, solver, static_rank
+from repro.core.sketching import COLUMN_METHODS, column_plan, sketch_dense
+
+_settings = dict(max_examples=25, deadline=None)
+
+
+@given(n=st.integers(4, 80), r_frac=st.floats(0.05, 0.95),
+       seed=st.integers(0, 1000))
+@settings(**_settings)
+def test_solver_invariants(n, r_frac, seed):
+    """p ∈ (0,1], Σp == r, monotone: larger weight ⇒ p no smaller."""
+    r = max(1, min(n - 1, int(r_frac * n)))
+    w = np.random.default_rng(seed).uniform(size=n).astype(np.float32) ** 2
+    p = np.asarray(solver.optimal_probabilities(jnp.asarray(w), r))
+    assert np.all(p > 0) and np.all(p <= 1.0 + 1e-6)
+    assert abs(p.sum() - r) < 1e-2
+    order = np.argsort(w)
+    assert np.all(np.diff(p[order]) >= -1e-4)
+
+
+@given(n=st.integers(4, 60), r_frac=st.floats(0.1, 0.9), seed=st.integers(0, 500))
+@settings(**_settings)
+def test_sampler_exact_count(n, r_frac, seed):
+    r = max(1, min(n - 1, int(r_frac * n)))
+    w = np.random.default_rng(seed).uniform(size=n).astype(np.float32)
+    p = solver.optimal_probabilities(jnp.asarray(w), r)
+    idx = np.asarray(solver.sample_exact_r(jax.random.key(seed), p, r))
+    assert len(np.unique(idx)) == r
+    assert idx.min() >= 0 and idx.max() < n
+
+
+@given(method=st.sampled_from([m for m in COLUMN_METHODS if m != "per_column"]),
+       n_rows=st.integers(2, 24), n_cols=st.integers(4, 32),
+       budget=st.floats(0.1, 0.9), seed=st.integers(0, 100))
+@settings(**_settings)
+def test_gate_expectation_identity(method, n_rows, n_cols, budget, seed):
+    """For any column plan, gate = z/p with marginals p ⇒ per-draw identity:
+    gate_i * p_i ∈ {0, 1} and E[gate]≈1 follows from exact-r marginals."""
+    G = jax.random.normal(jax.random.key(seed), (n_rows, n_cols))
+    W = jax.random.normal(jax.random.key(seed + 1), (n_cols, 8))
+    cfg = SketchConfig(method=method, budget=budget)
+    plan = column_plan(cfg, G, W, jax.random.key(seed + 2), want_compact=False)
+    gp = np.asarray(plan.gate) * np.asarray(plan.probs)
+    assert np.all((np.abs(gp) < 1e-4) | (np.abs(gp - 1.0) < 1e-3))
+    r = static_rank(cfg, n_cols)
+    assert int((np.asarray(plan.gate) > 0).sum()) == r
+
+
+@given(budget=st.floats(0.05, 1.0), n=st.integers(2, 512),
+       round_to=st.sampled_from([1, 8, 128]))
+@settings(**_settings)
+def test_static_rank_bounds(budget, n, round_to):
+    cfg = SketchConfig(method="l1", budget=budget, round_to=round_to)
+    r = static_rank(cfg, n)
+    assert 1 <= r <= n
+    if round_to <= n and r < n:
+        assert r % round_to == 0
+    assert r >= min(n, int(round(budget * n)))  # rounding never undershoots
+
+
+@given(seed=st.integers(0, 200), budget=st.floats(0.2, 1.0))
+@settings(**_settings)
+def test_sketch_preserves_row_space(seed, budget):
+    """Column sketches only zero/rescale columns — never mix rows."""
+    G = jax.random.normal(jax.random.key(seed), (6, 12))
+    cfg = SketchConfig(method="l1", budget=budget)
+    ghat = np.asarray(sketch_dense(cfg, G, None, jax.random.key(seed + 1)))
+    g = np.asarray(G)
+    ratio = np.where(np.abs(g) > 1e-6, ghat / np.where(np.abs(g) > 1e-6, g, 1.0), np.nan)
+    for j in range(12):
+        col = ratio[:, j]
+        col = col[~np.isnan(col)]
+        if len(col):
+            assert np.allclose(col, col[0], rtol=1e-4)  # per-column scalar
+
+
+@given(seed=st.integers(0, 100))
+@settings(max_examples=10, deadline=None)
+def test_checkpoint_roundtrip_property(seed, tmp_path_factory):
+    from repro.train import checkpoint as ck
+
+    rng = np.random.default_rng(seed)
+    tree = {"x": rng.normal(size=(3, 2)).astype(np.float32),
+            "y": [rng.integers(0, 5, size=4)]}
+    d = tmp_path_factory.mktemp(f"ck{seed}")
+    ck.save(str(d), seed, jax.tree.map(jnp.asarray, tree))
+    out, step = ck.restore(str(d), jax.tree.map(lambda a: jnp.zeros_like(jnp.asarray(a)), tree))
+    assert step == seed
+    np.testing.assert_allclose(np.asarray(out["x"]), tree["x"])

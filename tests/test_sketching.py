@@ -1,0 +1,132 @@
+"""Unbiasedness + backend equivalence for every sketch method."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import SketchConfig, column_plan, sketch_dense, sketched_linear, static_rank
+
+N, DIN, DOUT = 48, 24, 40
+
+
+@pytest.fixture(scope="module")
+def problem():
+    ks = jax.random.split(jax.random.key(0), 3)
+    x = jax.random.normal(ks[0], (4, 12, DIN))
+    w = jax.random.normal(ks[1], (DOUT, DIN)) / np.sqrt(DIN)
+    b = jax.random.normal(ks[2], (DOUT,)) * 0.1
+    return x, w, b
+
+
+def _loss(x, w, b, key, cfg):
+    return jnp.sum(jnp.sin(sketched_linear(x, w, b, key=key, cfg=cfg)))
+
+
+def _exact(problem):
+    x, w, b = problem
+    return jax.grad(_loss, argnums=(0, 1, 2))(x, w, b, None, None)
+
+
+# (method, backend, block, budget). RCS tests at budget 0.75: its spectral
+# water-filling assigns some directions p ~ 1e-6 at 0.5 — mathematically
+# optimal but uncertifiable by an 800-sample MC (rare-event tails; the
+# direct apply_rcs unbiasedness check at moderate p lives in
+# tests/test_optimality.py).
+ALL = [("per_element", "mask", 0, 0.5), ("per_sample", "mask", 0, 0.5),
+       ("per_column", "mask", 0, 0.5), ("l1", "mask", 0, 0.5),
+       ("l1", "compact", 0, 0.5), ("l2", "mask", 0, 0.5), ("var", "mask", 0, 0.5),
+       ("ds", "mask", 0, 0.5), ("ds", "compact", 0, 0.5), ("gsv", "mask", 0, 0.5),
+       ("rcs", "mask", 0, 0.75), ("l1_sq", "mask", 0, 0.5),
+       ("l1", "compact", 8, 0.5), ("l1", "pallas", 8, 0.5)]
+
+
+@pytest.mark.parametrize("method,backend,block,budget", ALL)
+def test_unbiased(problem, method, backend, block, budget):
+    x, w, b = problem
+    exact = _exact(problem)
+    cfg = SketchConfig(method=method, budget=budget, backend=backend, block=block)
+    gfn = jax.jit(lambda k: jax.grad(_loss, argnums=(0, 1, 2))(x, w, b, k, cfg))
+    keys = jax.random.split(jax.random.key(7), 800)
+    gs = jax.lax.map(gfn, keys, batch_size=100)
+    for got, want in zip(gs, exact):
+        mean = np.asarray(got.mean(0))
+        std = np.asarray(got.std(0))
+        want = np.asarray(want)
+        scale = np.max(np.abs(want)) + 1e-9
+        det = std < 1e-6 * scale  # deterministic coords (e.g. Alg.3 exact db)
+        np.testing.assert_allclose(mean[det], want[det], rtol=1e-3, atol=1e-4 * scale)
+        if det.all():
+            continue
+        # scale-aware floor: rare-event coords (tiny p) have skewed finite-n
+        # distributions where the CLT t-stat misleads; the floor bounds the
+        # detectable bias at ~0.5% of the gradient scale (the 12k-sample
+        # sweep in EXPERIMENTS verified mean|t| < 0.5 without the floor)
+        se = std[~det] / np.sqrt(len(keys)) + 1e-3 * scale
+        t = np.abs(mean[~det] - want[~det]) / se
+        # unbiased ⇒ t ≈ |N(0,1)| up to finite-n skew of the 1/p-scaled
+        # estimators (a 12k-sample sweep gives mean|t| ≈ 0.45 for every
+        # method; at n=800 the empirical std underestimates heavy-tailed σ,
+        # inflating t ~1.4×). Thresholds sized for n=800 with that skew.
+        assert np.mean(t) < 2.2, f"mean|t|={np.mean(t)}"
+        assert np.percentile(t, 95) < 5.0
+
+
+@pytest.mark.parametrize("method", ["l1", "ds", "per_column"])
+def test_compact_equals_mask_same_key(problem, method):
+    x, w, b = problem
+    key = jax.random.key(3)
+    gm = jax.grad(_loss, argnums=(0, 1, 2))(
+        x, w, b, key, SketchConfig(method=method, budget=0.3, backend="mask"))
+    gc = jax.grad(_loss, argnums=(0, 1, 2))(
+        x, w, b, key, SketchConfig(method=method, budget=0.3, backend="compact"))
+    for a, c in zip(gm, gc):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(c), rtol=2e-5, atol=2e-5)
+
+
+def test_block_backends_agree(problem):
+    x, w, b = problem
+    key = jax.random.key(9)
+    outs = []
+    for backend in ("mask", "compact", "pallas"):
+        cfg = SketchConfig(method="l1", budget=0.5, backend=backend, block=8)
+        outs.append(jax.grad(_loss, argnums=(0, 1, 2))(x, w, b, key, cfg))
+    for other in outs[1:]:
+        for a, c in zip(outs[0], other):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(c), rtol=2e-5, atol=2e-5)
+
+
+def test_budget_one_equals_exact(problem):
+    x, w, b = problem
+    exact = _exact(problem)
+    for method in ("l1", "per_column", "per_sample", "per_element"):
+        g = jax.grad(_loss, argnums=(0, 1, 2))(
+            x, w, b, jax.random.key(1), SketchConfig(method=method, budget=1.0))
+        for a, e in zip(g, exact):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(e), rtol=1e-5, atol=1e-6)
+
+
+def test_static_rank_round_to():
+    cfg = SketchConfig(method="l1", budget=0.1, round_to=128)
+    assert static_rank(cfg, 1000) == 128
+    assert static_rank(cfg, 4096) == 512
+    cfg2 = SketchConfig(method="l1", budget=0.1)
+    assert static_rank(cfg2, 1000) == 100
+
+
+def test_column_plan_probs_sum(problem):
+    x, w, _ = problem
+    G = jax.random.normal(jax.random.key(2), (N, DOUT))
+    cfg = SketchConfig(method="l1", budget=0.25)
+    plan = column_plan(cfg, G, w, jax.random.key(0), want_compact=True)
+    r = static_rank(cfg, DOUT)
+    assert plan.indices.shape == (r,)
+    assert float(jnp.sum(plan.probs)) == pytest.approx(r, abs=1e-2)
+
+
+def test_sketch_dense_zero_columns_stay_zero():
+    """ℓ1 score 0 ⇔ column identically 0 ⇒ dropping it is exact."""
+    G = jnp.zeros((16, 10)).at[:, :3].set(1.0)
+    cfg = SketchConfig(method="l1", budget=0.3)
+    for i in range(5):
+        ghat = sketch_dense(cfg, G, None, jax.random.key(i))
+        np.testing.assert_allclose(np.asarray(ghat[:, 3:]), 0.0)

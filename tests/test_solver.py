@@ -1,0 +1,108 @@
+"""Water-filling solver (Alg. 1) + correlated exact-r sampler (Alg. 2)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import solver
+
+
+def brute_force_probs(w, r, iters=20000):
+    """Bisection on sqrt(lambda) for min Σ w/p s.t. Σp=r, p∈(0,1]."""
+    t = np.sqrt(np.maximum(w, 1e-30))
+    lo, hi = 1e-12, t.max() * len(w)
+    for _ in range(200):
+        mid = 0.5 * (lo + hi)
+        s = np.minimum(1.0, t / mid).sum()
+        if s > r:
+            lo = mid
+        else:
+            hi = mid
+    return np.minimum(1.0, t / hi)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+@pytest.mark.parametrize("n,r", [(32, 4), (100, 20), (64, 63)])
+def test_waterfilling_matches_bruteforce(seed, n, r):
+    w = np.random.default_rng(seed).uniform(size=n) ** 3
+    p = np.asarray(solver.optimal_probabilities(jnp.asarray(w), r))
+    p_ref = brute_force_probs(w, r)
+    assert abs(p.sum() - r) < 1e-3
+    obj = (w / np.maximum(p, 1e-12)).sum()
+    obj_ref = (w / np.maximum(p_ref, 1e-12)).sum()
+    assert obj <= obj_ref * (1 + 1e-3)
+
+
+def test_waterfilling_kkt_structure():
+    w = np.array([100.0, 50.0, 1.0, 0.5, 0.1, 0.01])
+    p = np.asarray(solver.optimal_probabilities(jnp.asarray(w), 3))
+    # saturated large entries, p ∝ sqrt(w) below threshold
+    assert p[0] == pytest.approx(1.0, abs=1e-5)
+    unsat = p < 1.0 - 1e-6
+    ratio = p[unsat] / np.sqrt(w[unsat])
+    assert np.allclose(ratio, ratio[0], rtol=1e-3)
+
+
+def test_waterfilling_full_budget():
+    p = solver.optimal_probabilities(jnp.ones(8), 8)
+    assert np.allclose(np.asarray(p), 1.0)
+
+
+def test_waterfilling_zero_weights_uniform():
+    p = np.asarray(solver.optimal_probabilities(jnp.zeros(10), 4))
+    assert p.sum() == pytest.approx(4.0, abs=1e-3)
+
+
+def test_sampler_exact_count_and_distinct(key):
+    w = jnp.asarray(np.random.default_rng(0).uniform(size=50) ** 2)
+    p = solver.optimal_probabilities(w, 12)
+    for i in range(20):
+        idx = np.asarray(solver.sample_exact_r(jax.random.fold_in(key, i), p, 12))
+        assert len(idx) == 12
+        assert len(np.unique(idx)) == 12
+        assert np.all(np.diff(idx) > 0)  # ascending
+
+
+def test_sampler_marginals(key):
+    n, r, n_mc = 24, 6, 4000
+    w = jnp.asarray(np.random.default_rng(1).uniform(size=n) ** 2)
+    p = solver.optimal_probabilities(w, r)
+    counts = np.zeros(n)
+    for i in range(n_mc):
+        idx = np.asarray(solver.sample_exact_r(jax.random.fold_in(key, i), p, r))
+        counts[idx] += 1
+    emp = counts / n_mc
+    se = np.sqrt(np.asarray(p) * (1 - np.asarray(p)) / n_mc) + 1e-4
+    assert np.all(np.abs(emp - np.asarray(p)) < 6 * se)
+
+
+def test_expected_distortion_decreases_with_budget():
+    w = jnp.asarray(np.random.default_rng(2).uniform(size=40))
+    d = [float(solver.expected_distortion(w, solver.optimal_probabilities(w, r)))
+         for r in (4, 10, 20, 39)]
+    assert all(a >= b - 1e-5 for a, b in zip(d, d[1:]))
+
+
+def test_waterfilling_concentrated_weights_sum_exact():
+    """Regression: concentrated weights used to leave sum(p) < r after a
+    one-shot renormalise+clip, biasing the systematic sampler's marginals."""
+    for seed in range(20):
+        rng = np.random.default_rng(seed)
+        w = rng.uniform(size=8) ** 6  # heavy concentration
+        for r in (2, 4, 6):
+            p = np.asarray(solver.optimal_probabilities(jnp.asarray(w), r))
+            assert abs(p.sum() - r) < 1e-3, (seed, r, p.sum())
+            assert p.max() <= 1.0 + 1e-6
+
+
+def test_sampler_marginals_concentrated(key):
+    n, r, n_mc = 8, 4, 8000
+    w = jnp.asarray(np.random.default_rng(7).uniform(size=n) ** 6)
+    p = solver.optimal_probabilities(w, r)
+    counts = np.zeros(n)
+    for i in range(n_mc):
+        idx = np.asarray(solver.sample_exact_r(jax.random.fold_in(key, i), p, r))
+        counts[idx] += 1
+    emp = counts / n_mc
+    se = np.sqrt(np.asarray(p) * (1 - np.asarray(p)) / n_mc) + 1e-4
+    assert np.all(np.abs(emp - np.asarray(p)) < 6 * se), (emp, np.asarray(p))

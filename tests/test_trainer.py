@@ -1,0 +1,59 @@
+"""Trainer loop: learnability (exact + sketched), resume, straggler control."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import ArchConfig
+from repro.core import SketchConfig, SketchPolicy
+from repro.data.synthetic import LMStream
+from repro.optim import adamw, cosine_warmup
+from repro.train.straggler import StragglerController
+from repro.train.trainer import TrainerConfig, train
+
+TINY = ArchConfig(name="tiny", family="dense", n_layers=2, d_model=64, n_heads=4,
+                  n_kv=2, d_ff=128, vocab=128, q_chunk=32, kv_chunk=32)
+
+
+def _run(policy, steps=30, ckpt=None, start_state=None):
+    opt = adamw(cosine_warmup(3e-3, 5, steps), clip=1.0)
+    data = LMStream(vocab=TINY.vocab, seed=0).batches(4, 32)
+    tcfg = TrainerConfig(steps=steps, log_every=max(1, steps // 10),
+                         ckpt_dir=ckpt, ckpt_every=10)
+    return train(TINY, opt, data, tcfg, policy, state=start_state,
+                 on_metrics=lambda m: None)
+
+
+def test_exact_training_reduces_loss():
+    _, hist = _run(None)
+    assert hist[-1]["loss"] < hist[0]["loss"] - 0.2
+
+
+def test_sketched_training_reduces_loss():
+    pol = SketchPolicy(base=SketchConfig(method="l1", budget=0.3))
+    _, hist = _run(pol)
+    assert hist[-1]["loss"] < hist[0]["loss"] - 0.15
+
+
+def test_resume_from_checkpoint(tmp_path):
+    d = str(tmp_path)
+    state1, hist1 = _run(None, steps=10, ckpt=d)
+    # new trainer picks up at step 10 and continues to 20
+    state2, hist2 = _run(None, steps=20, ckpt=d)
+    assert hist2[0]["step"] >= 10
+    assert hist2[-1]["step"] == 19
+
+
+def test_straggler_controller_drops_and_recovers():
+    c = StragglerController((1.0, 0.5, 0.2), window=4, target_step_s=1.0)
+    for _ in range(4):
+        c.observe(1.0)
+    assert c.budget == 1.0
+    for _ in range(4):
+        c.observe(2.0)  # slow regime -> drop budget
+    assert c.budget == 0.5
+    for _ in range(4):
+        c.observe(2.0)
+    assert c.budget == 0.2
+    for _ in range(6):
+        c.observe(0.9)  # recovered -> climb back
+    assert c.budget >= 0.5
