@@ -1,0 +1,122 @@
+"""Distributed sketched-backprop benchmark (in-process, 8 fake host devices).
+
+Measures, for one sharded train step of a small dense LM on a (2, 4)
+(data, model) mesh:
+
+  * wall time per step (median of ``reps``) for exact / mask / compact /
+    block backends — the compact ones via the TP-local sketch with the
+    compressed DP gradient reduce-scatter (core/sharded_sketch.py);
+  * HLO collective wire bytes per step (launch/hlo_analysis.py parser), the
+    quantity the paper's batch-shared sketch shrinks: the compact dW block
+    moves ≈ budget × the dense gradient volume over the data axis.
+
+Fake CPU devices share one host, so wall time is not a hardware claim — the
+collective-bytes column is the structural result; timings sanity-check that
+the compact path lowers and runs end to end.
+
+Usage: PYTHONPATH=src python -m benchmarks.bench_distributed [--budget 0.25]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from benchmarks.common import save_result
+from repro import compat
+from repro.configs.base import ArchConfig
+from repro.core import SketchConfig, SketchPolicy
+from repro.launch import sharding as shard
+from repro.launch.hlo_analysis import collective_bytes
+from repro.launch.mesh import make_mesh
+from repro.optim import sgd
+from repro.train.train_step import TrainState, init_state, make_train_step
+
+
+def _variants(budget: float) -> dict:
+    cfg = dict(method="l1", budget=budget)
+    return {
+        "exact": (None, False),
+        "mask": (SketchPolicy(base=SketchConfig(backend="mask", **cfg)), False),
+        "compact": (SketchPolicy(base=SketchConfig(backend="compact", **cfg)), True),
+        "block": (SketchPolicy(base=SketchConfig(backend="compact", block=4, **cfg)), True),
+    }
+
+
+def run(quick: bool = True, budget: float = 0.25, reps: int = 5) -> dict:
+    # Requesting fake devices only works before the backend initializes —
+    # when invoked from benchmarks/run.py, run.py isolates this job in a
+    # subprocess so the other benchmarks keep the default single device.
+    compat.ensure_host_devices(8)
+    if jax.device_count() < 8:
+        print("bench_distributed: needs 8 fake host devices, but the JAX "
+              "backend already initialized with fewer — run standalone "
+              "(python -m benchmarks.bench_distributed); skipping")
+        return {}
+    mesh = make_mesh((2, 4), ("data", "model"))
+    arch = ArchConfig(name="bench", family="dense", n_layers=2, d_model=64,
+                      n_heads=4, n_kv=2, d_ff=128, vocab=128,
+                      q_chunk=32, kv_chunk=32)
+    opt = sgd(0.1)
+    state = init_state(compat.prng_key(0), arch, opt)
+    toks = jax.random.randint(compat.prng_key(1), (16, 32), 0, arch.vocab)
+    batch = {"tokens": toks, "labels": toks}
+    key = compat.prng_key(2)
+
+    pspecs = shard.param_shardings(state.params, mesh)
+    sshard = TrainState(params=pspecs,
+                        opt_state={k: pspecs for k in state.opt_state},
+                        step=NamedSharding(mesh, P()))
+    act = NamedSharding(mesh, P(("data",), None, None))
+    bspec = {k: NamedSharding(mesh, P("data", None)) for k in batch}
+
+    out = {"mesh": "2x4", "budget": budget, "variants": {}}
+    for name, (policy, tp) in _variants(budget).items():
+        step = make_train_step(arch, opt, policy, mesh=mesh, act_sharding=act,
+                               data_axes=("data",), model_axes=("model",),
+                               tp_sketch=tp)
+        fn = jax.jit(step, in_shardings=(sshard, bspec, NamedSharding(mesh, P())))
+        compiled = fn.lower(state, batch, key).compile()
+        coll = collective_bytes(compiled.as_text())
+        s, m = fn(state, batch, key)  # warmup (also caches the executable)
+        jax.block_until_ready(m["loss"])
+        times = []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            s2, m2 = fn(state, batch, key)
+            jax.block_until_ready(m2["loss"])
+            times.append(time.perf_counter() - t0)
+        rec = {
+            "step_ms": float(np.median(times) * 1e3),
+            "loss": float(m["loss"]),
+            "coll_bytes_total": coll["total"],
+            "coll_bytes": {k: v for k, v in coll.items()
+                           if k not in ("total", "counts")},
+        }
+        out["variants"][name] = rec
+        print(f"  {name:8s} step {rec['step_ms']:8.2f} ms   "
+              f"collective bytes {rec['coll_bytes_total']:>12,.0f}   "
+              f"loss {rec['loss']:.4f}")
+
+    ex = out["variants"].get("exact", {}).get("coll_bytes_total") or None
+    if ex:
+        for name, rec in out["variants"].items():
+            rec["coll_ratio_vs_exact"] = rec["coll_bytes_total"] / ex
+    save_result("distributed", out)
+    return out
+
+
+def main():
+    compat.ensure_host_devices(8)
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--budget", type=float, default=0.25)
+    ap.add_argument("--reps", type=int, default=5)
+    args = ap.parse_args()
+    run(budget=args.budget, reps=args.reps)
+
+
+if __name__ == "__main__":
+    main()

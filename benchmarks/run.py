@@ -3,8 +3,20 @@
 One benchmark per paper table/figure — see DESIGN.md §6 for the index.
 """
 import argparse
+import subprocess
+import sys
 import time
 import traceback
+
+
+def _run_distributed(quick: bool = True):
+    """Isolate the distributed benchmark in a fresh interpreter: it needs 8
+    fake host devices forced before JAX backend init, which must not re-size
+    the backend the other benchmarks run (and time) on."""
+    r = subprocess.run([sys.executable, "-m", "benchmarks.bench_distributed"],
+                       text=True)
+    if r.returncode != 0:
+        raise RuntimeError(f"bench_distributed exited {r.returncode}")
 
 
 def main():
@@ -29,6 +41,7 @@ def main():
         "variance_eq6": bench_variance.run,
         "cost_backends": bench_cost.run,
         "block_granularity": bench_block_granularity.run,
+        "distributed": _run_distributed,
     }
     failures = 0
     for name, fn in jobs.items():

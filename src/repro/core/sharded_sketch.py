@@ -28,6 +28,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
+
 from repro.core.sketching import SketchConfig, column_plan, effective_cfg
 
 __all__ = ["tp_sketched_linear", "tp_applicable"]
@@ -76,10 +78,10 @@ def _build(cfg, mesh, dp, mp, x_shape, w_shape):
         def body(x_l, w_l):
             return jnp.einsum("bsi,oi->bso", x_l, w_l)
 
-        return jax.shard_map(
+        return compat.shard_map(
             body, mesh=mesh,
             in_specs=(P(dp, None, None), P(mp, None)),
-            out_specs=P(dp, None, mp), check_vma=False)(x, w)
+            out_specs=P(dp, None, mp))(x, w)
 
     def fwd(x, w, key):
         return fwd_fn(x, w, key), (x, w, key)
@@ -122,10 +124,10 @@ def _build(cfg, mesh, dp, mp, x_shape, w_shape):
             return dx, dW_l
 
         out_w_spec = P(mp, dp[-1] if (scatter_axis and din_ok) else None)
-        dx, dw = jax.shard_map(
+        dx, dw = compat.shard_map(
             body, mesh=mesh,
             in_specs=(P(dp, None, mp), P(dp, None, None), P(mp, None), P()),
-            out_specs=(P(dp, None, None), out_w_spec), check_vma=False)(
+            out_specs=(P(dp, None, None), out_w_spec))(
                 g, x, w, key)
         return dx, dw, None
 
@@ -177,10 +179,10 @@ def _build_row(cfg, mesh, dp, mp, x_shape, w_shape):
             y_part = jnp.einsum("bsi,oi->bso", x_l, w_l)
             return jax.lax.psum(y_part, mp)
 
-        return jax.shard_map(
+        return compat.shard_map(
             body, mesh=mesh,
             in_specs=(P(dp, None, mp), P(None, mp)),
-            out_specs=P(dp, None, None), check_vma=False)(x, w)
+            out_specs=P(dp, None, None))(x, w)
 
     def fwd(x, w, key):
         return fwd_fn(x, w, key), (x, w, key)
@@ -218,10 +220,10 @@ def _build_row(cfg, mesh, dp, mp, x_shape, w_shape):
             return dx, dW_l
 
         out_w_spec = P(None, (mp, scatter_axis) if (scatter_axis and din_ok) else mp)
-        dx, dw = jax.shard_map(
+        dx, dw = compat.shard_map(
             body, mesh=mesh,
             in_specs=(P(dp, None, None), P(dp, None, mp), P(None, mp), P()),
-            out_specs=(P(dp, None, mp), out_w_spec), check_vma=False)(
+            out_specs=(P(dp, None, mp), out_w_spec))(
                 g, x, w, key)
         return dx, dw, None
 
@@ -255,9 +257,9 @@ def _build_exact(mesh, dp, mp, w_shape):
         def body(x_l, w_l):
             return jnp.einsum("bsi,oi->bso", x_l, w_l)
 
-        return jax.shard_map(body, mesh=mesh,
+        return compat.shard_map(body, mesh=mesh,
                              in_specs=(P(dp, None, None), P(mp, None)),
-                             out_specs=P(dp, None, mp), check_vma=False)(x, w)
+                             out_specs=P(dp, None, mp))(x, w)
 
     def fwd(x, w):
         return fwd_fn(x, w), (x, w)
@@ -282,10 +284,10 @@ def _build_exact(mesh, dp, mp, w_shape):
             return dx, dW.astype(w_l.dtype)
 
         out_w_spec = P(mp, scatter_axis if (scatter_axis and din_ok) else None)
-        dx, dw = jax.shard_map(body, mesh=mesh,
+        dx, dw = compat.shard_map(body, mesh=mesh,
                                in_specs=(P(dp, None, mp), P(dp, None, None), P(mp, None)),
                                out_specs=(P(dp, None, None), out_w_spec),
-                               check_vma=False)(g, x, w)
+                               )(g, x, w)
         return dx, dw
 
     fwd_fn.defvjp(fwd, bwd)

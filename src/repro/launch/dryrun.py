@@ -1,5 +1,11 @@
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+from repro import compat
+
+# 512 fake host devices for full production meshes. ensure_host_devices never
+# clobbers an existing forced count (the test suite forces 8 via conftest), so
+# importing this module inside pytest no longer silently re-sizes the backend.
+compat.ensure_host_devices(512)
 
 """Multi-pod dry-run: lower + compile every (arch × shape-cell × mesh).
 
@@ -144,7 +150,7 @@ def _build_train(cfg, cell, mesh, policy, cost_mode, sp=True):
                               step=jax.ShapeDtypeStruct((), jnp.int32))
     state_shard = TrainState(params=pspecs, opt_state=ospecs,
                              step=NamedSharding(mesh, P()))
-    key_struct = jax.ShapeDtypeStruct((), jax.random.key(0).dtype)
+    key_struct = jax.ShapeDtypeStruct((), compat.key_dtype())
 
     fn = jax.jit(step, in_shardings=(state_shard, bspecs, NamedSharding(mesh, P())),
                  donate_argnums=(0,))
@@ -178,7 +184,7 @@ def _build_decode(cfg, cell, mesh, cost_mode, sp=True):
     params_s = ispec.params_struct(cfg)
     pspecs = shard.param_shardings(params_s, mesh)
     dec = ispec.decode_inputs(cfg, cell)
-    cspecs = jax.tree.map(lambda s: NamedSharding(mesh, s),
+    cspecs = compat.tree_map(lambda s: NamedSharding(mesh, s),
                           shard.cache_specs(cfg, dec["caches"], mesh, cell.global_batch))
     tok_spec = NamedSharding(
         mesh, P(dp if cell.global_batch % n_dp == 0 else None, None, None)
@@ -264,7 +270,7 @@ def run_cell(arch: str, cell_name: str, *, multi_pod: bool, policy_name: str = "
                                          full["coll_bytes"], chips, hw)
         # MODEL_FLOPS (6·N_active·D train, 2·N_active·D inference) and ratio
         params_s = ispec.params_struct(cfg)
-        n_total = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params_s))
+        n_total = sum(int(np.prod(x.shape)) for x in compat.tree_leaves(params_s))
         n_active = _active_params(params_s, cfg)
         tokens = cell.global_batch * (cell.seq_len if cell.kind != "decode" else 1)
         mf = (6 if cell.kind == "train" else 2) * n_active * tokens
@@ -277,7 +283,7 @@ def run_cell(arch: str, cell_name: str, *, multi_pod: bool, policy_name: str = "
 
 
 def _active_params(params_s, cfg):
-    total = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params_s))
+    total = sum(int(np.prod(x.shape)) for x in compat.tree_leaves(params_s))
     if cfg.n_experts == 0:
         return total
     e = 0

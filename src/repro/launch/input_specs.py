@@ -10,6 +10,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.configs.base import ArchConfig, ShapeCell
 from repro.models import lm
 
@@ -44,7 +45,7 @@ def decode_inputs(cfg: ArchConfig, cell: ShapeCell) -> dict:
 
 
 def params_struct(cfg: ArchConfig):
-    return jax.eval_shape(lambda k: lm.init_params(k, cfg), jax.random.key(0))
+    return jax.eval_shape(lambda k: lm.init_params(k, cfg), compat.prng_key(0))
 
 
 def cache_struct(cfg: ArchConfig, batch: int, max_len: int):

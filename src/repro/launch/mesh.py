@@ -10,10 +10,13 @@ Mesh layout (TPU v5e pods):
 
 ``pod`` composes with ``data`` for data parallelism by default; the pipeline
 launcher (repro/launch/pipeline.py) can remap it to pipeline stages.
+
+All mesh construction goes through ``repro.compat`` — the only module allowed
+to touch version-gated JAX mesh APIs.
 """
 from __future__ import annotations
 
-import jax
+from repro import compat
 
 __all__ = ["make_production_mesh", "make_mesh", "dp_axes", "mp_axes"]
 
@@ -21,14 +24,12 @@ __all__ = ["make_production_mesh", "make_mesh", "dp_axes", "mp_axes"]
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return compat.make_mesh(shape, axes)
 
 
 def make_mesh(shape, axes):
     """Arbitrary mesh (tests use small fake-device meshes)."""
-    return jax.make_mesh(tuple(shape), tuple(axes),
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return compat.make_mesh(shape, axes)
 
 
 def dp_axes(mesh) -> tuple:

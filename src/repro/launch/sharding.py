@@ -14,9 +14,10 @@ from __future__ import annotations
 import re
 from typing import Optional
 
-import jax
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import compat
 
 from repro.configs.base import ArchConfig, ShapeCell
 from repro.launch.mesh import dp_axes, mp_axes
@@ -111,12 +112,12 @@ def _spec_for(path_s: str, shape, mesh) -> P:
 
 def param_specs(params_shape, mesh):
     """PartitionSpecs for a params pytree (works on ShapeDtypeStructs too)."""
-    return jax.tree_util.tree_map_with_path(
+    return compat.tree_map_with_path(
         lambda path, leaf: _spec_for(_path_str(path), leaf.shape, mesh), params_shape)
 
 
 def param_shardings(params_shape, mesh):
-    return jax.tree.map(lambda s: NamedSharding(mesh, s), param_specs(params_shape, mesh))
+    return compat.tree_map(lambda s: NamedSharding(mesh, s), param_specs(params_shape, mesh))
 
 
 def batch_specs(cfg: ArchConfig, cell: ShapeCell, mesh) -> dict:
@@ -169,7 +170,7 @@ def cache_specs(cfg: ArchConfig, cache_shape, mesh, global_batch: int):
             return P(*lead, bax, None, None)
         return P()
 
-    return jax.tree_util.tree_map_with_path(spec_for, cache_shape)
+    return compat.tree_map_with_path(spec_for, cache_shape)
 
 
 def logical_rules(mesh) -> dict:

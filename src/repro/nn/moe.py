@@ -7,7 +7,7 @@ router weights.
 
 Two execution modes share the same body:
   * local  — single device / pjit-auto sharding (tests, smoke).
-  * EP     — ``jax.shard_map`` over the mesh: activations are sharded over the
+  * EP     — ``shard_map`` (via repro.compat) over the mesh: activations are sharded over the
              data axes and *replicated* over ``model``; experts are sharded
              over ``model``; each model shard processes its own experts for
              the whole local batch and the outputs are ``psum``-combined over
@@ -23,6 +23,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.nn.common import Ctx, dense_init
 from repro.core import linear
 
@@ -191,13 +192,12 @@ def moe_ffn(params, x, ctx: Ctx, cfg: MoECfg):
         wo_spec = P(None, None, mp[0])  # [E, d, F] -> shard F
         wg_spec = P(None, mp[0], None)
 
-    key_arg = ctx.key if has_key else jax.random.key(0)
-    f = jax.shard_map(
+    key_arg = ctx.key if has_key else compat.prng_key(0)
+    f = compat.shard_map(
         body, mesh=mesh,
         in_specs=(P(None, None), wi_spec, wg_spec if has_gate else P(),
                   wo_spec, P(dp, None), P()),
-        out_specs=(P(dp, None), P(), P()),
-        check_vma=False)
+        out_specs=(P(dp, None), P(), P()))
     wg_arg = wg if has_gate else jnp.zeros((), x.dtype)
     y2d, me, disp = f(params["router"]["w"], params["wi"], wg_arg, params["wo"], x2d, key_arg)
     aux = E * jnp.sum(me * disp) * cfg.aux_coef

@@ -26,13 +26,15 @@ import threading
 import jax
 import numpy as np
 
+from repro import compat
+
 __all__ = ["save", "save_async", "restore", "latest_step", "CheckpointManager"]
 
 _SEP = "__"
 
 
 def _flatten(tree):
-    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    flat = compat.tree_flatten_with_path(tree)[0]
     out = {}
     for path, leaf in flat:
         key = _SEP.join(_part(p) for p in path)
@@ -50,13 +52,13 @@ def _part(p):
 
 def save(ckpt_dir: str, step: int, tree, *, keep: int = 3):
     """Synchronous atomic save."""
-    host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+    host_tree = compat.tree_map(lambda x: np.asarray(jax.device_get(x)), tree)
     _write(ckpt_dir, step, host_tree, keep)
 
 
 def save_async(ckpt_dir: str, step: int, tree, *, keep: int = 3) -> threading.Thread:
     """Snapshot to host, write in background. Returns the writer thread."""
-    host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+    host_tree = compat.tree_map(lambda x: np.asarray(jax.device_get(x)), tree)
     t = threading.Thread(target=_write, args=(ckpt_dir, step, host_tree, keep),
                          daemon=True)
     t.start()
@@ -117,11 +119,11 @@ def restore(ckpt_dir: str, tree_like, *, step=None, shardings=None):
     d = os.path.join(ckpt_dir, f"step_{step:012d}")
     keys = _flatten(tree_like)
     loaded = {k: np.load(os.path.join(d, k + ".npy")) for k in keys}
-    treedef = jax.tree_util.tree_structure(tree_like)
+    treedef = compat.tree_structure(tree_like)
     ordered = [loaded[k] for k in _flatten(tree_like)]
-    out = jax.tree_util.tree_unflatten(treedef, ordered)
+    out = compat.tree_unflatten(treedef, ordered)
     if shardings is not None:
-        out = jax.tree.map(lambda x, s: jax.device_put(x, s), out, shardings)
+        out = compat.tree_map(lambda x, s: jax.device_put(x, s), out, shardings)
     return out, step
 
 

@@ -14,8 +14,6 @@ cluster resize (node failure shrinking DP, or scale-up) is:
 """
 from __future__ import annotations
 
-import jax
-
 from repro.launch import sharding as shardlib
 from repro.train import checkpoint as ckptlib
 from repro.train.train_step import TrainState

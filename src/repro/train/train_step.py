@@ -24,6 +24,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.configs.base import ArchConfig
 from repro.core import SketchPolicy
 from repro.models import lm
@@ -33,7 +34,7 @@ from repro.optim import Optimizer
 __all__ = ["TrainState", "make_train_step", "init_state"]
 
 
-@jax.tree_util.register_dataclass
+@compat.register_dataclass
 @dataclasses.dataclass
 class TrainState:
     params: dict
@@ -77,7 +78,7 @@ def make_train_step(cfg: ArchConfig, opt: Optimizer, policy: Optional[SketchPoli
                 loss, metrics, grads = one_micro(state.params, mb, mkey)
                 acc_loss, acc_grads = carry
                 return (acc_loss + loss / accum,
-                        jax.tree.map(lambda a, g: a + g / accum, acc_grads, grads)), metrics
+                        compat.tree_map(lambda a, g: a + g / accum, acc_grads, grads)), metrics
 
             def to_micro(name, x):
                 ax = 1 if name == "positions" else 0  # M-RoPE positions: [3, B, S]
@@ -88,9 +89,9 @@ def make_train_step(cfg: ArchConfig, opt: Optimizer, policy: Optional[SketchPoli
 
             mbs = {k: to_micro(k, v) for k, v in batch.items()}
             keys = jax.random.split(key, accum)
-            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+            zeros = compat.tree_map(lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
             (loss, grads), metrics = jax.lax.scan(micro, (jnp.zeros(()), zeros), (mbs, keys))
-            metrics = jax.tree.map(lambda m: m[-1], metrics)
+            metrics = compat.tree_map(lambda m: m[-1], metrics)
         new_params, new_opt = opt.update(grads, state.opt_state, state.params, state.step)
         new_state = TrainState(params=new_params, opt_state=new_opt, step=state.step + 1)
         metrics = dict(metrics, loss=loss,
@@ -102,4 +103,4 @@ def make_train_step(cfg: ArchConfig, opt: Optimizer, policy: Optional[SketchPoli
 
 def _global_norm(tree):
     return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
-                        for g in jax.tree.leaves(tree)))
+                        for g in compat.tree_leaves(tree)))

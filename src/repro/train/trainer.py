@@ -16,6 +16,7 @@ from typing import Callable, Iterable, Optional
 import jax
 import numpy as np
 
+from repro import compat
 from repro.configs.base import ArchConfig
 from repro.core import SketchPolicy
 from repro.optim import Optimizer
@@ -38,10 +39,18 @@ class TrainerConfig:
 
 def train(cfg: ArchConfig, opt: Optimizer, data: Iterable, tcfg: TrainerConfig,
           policy: Optional[SketchPolicy] = None, *, mesh=None,
+          act_sharding=None, data_axes=("data",), model_axes=("model",),
+          tp_sketch: bool = False,
           state: Optional[TrainState] = None,
           on_metrics: Optional[Callable] = None):
-    """Run the loop; returns (final_state, history list of metric dicts)."""
-    key = jax.random.key(tcfg.seed)
+    """Run the loop; returns (final_state, history list of metric dicts).
+
+    With ``mesh`` set, the distributed kwargs (``act_sharding``, axis names,
+    ``tp_sketch``) are forwarded to every compiled step so the trainer drives
+    the same sharded sketched path as launch/dryrun — including the TP-local
+    compact sketch with the compressed DP gradient reduce-scatter.
+    """
+    key = compat.prng_key(tcfg.seed)
     if state is None:
         state = init_state(jax.random.fold_in(key, 0), cfg, opt)
 
@@ -55,14 +64,16 @@ def train(cfg: ArchConfig, opt: Optimizer, data: Iterable, tcfg: TrainerConfig,
     # straggler buckets: pre-built steps at descending sketch budgets
     controller = None
     steps_by_budget = {}
+    step_kw = dict(mesh=mesh, act_sharding=act_sharding, data_axes=data_axes,
+                   model_axes=model_axes, tp_sketch=tp_sketch)
     if tcfg.straggler_budgets and policy is not None:
         controller = StragglerController(tcfg.straggler_budgets)
         for b in tcfg.straggler_budgets:
             pol_b = policy if b >= 1.0 else policy.with_budget(b)
-            steps_by_budget[b] = jax.jit(make_train_step(cfg, opt, pol_b, mesh=mesh),
+            steps_by_budget[b] = jax.jit(make_train_step(cfg, opt, pol_b, **step_kw),
                                          donate_argnums=(0,))
     else:
-        steps_by_budget[1.0] = jax.jit(make_train_step(cfg, opt, policy, mesh=mesh),
+        steps_by_budget[1.0] = jax.jit(make_train_step(cfg, opt, policy, **step_kw),
                                        donate_argnums=(0,))
 
     history = []

@@ -2,12 +2,23 @@ import os
 import sys
 
 # repo-root imports (benchmarks package) in addition to PYTHONPATH=src
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+sys.path.insert(0, ROOT)
+sys.path.insert(0, os.path.join(ROOT, "src"))
 
-import jax
-import pytest
+# The distributed tests run IN-PROCESS on fake host devices, so the device
+# count must be forced before the JAX backend initializes — i.e. before any
+# test module (or conftest) triggers a computation. pyproject.toml documents
+# this; pytest has no built-in env mechanism, so the suite-wide setting lives
+# here, ahead of the first jax import.
+from repro import compat  # noqa: E402
+
+compat.ensure_host_devices(8)
+
+import jax  # noqa: E402
+import pytest  # noqa: E402
 
 
 @pytest.fixture
 def key():
-    return jax.random.key(0)
+    return compat.prng_key(0)

@@ -1,8 +1,15 @@
-"""Hypothesis property tests on the system's core invariants."""
+"""Hypothesis property tests on the system's core invariants.
+
+hypothesis is an optional test dependency (pyproject.toml `[test]` extra);
+the module skips cleanly where it is absent.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import SketchConfig, solver, static_rank
 from repro.core.sketching import COLUMN_METHODS, column_plan, sketch_dense

@@ -74,21 +74,31 @@ def test_variance_decreases_with_budget(key):
 
 def test_data_dependent_beats_uniform_variance(key):
     """ℓ1 probabilities give lower gradient variance than uniform per-column
-    at the same budget (the mechanism behind Fig. 1b)."""
+    at the same budget (the mechanism behind Fig. 1b).
+
+    The sketch acts on the *output* gradient G = ∂L/∂y, so heterogeneity must
+    live in G's columns — scaling the columns of x (as the seed test did)
+    leaves G ≈ cos(y) homogeneous and the comparison at the noise floor.
+    Weighting the loss per output coordinate makes G's column norms span
+    several orders of magnitude; importance sampling must then win by a wide
+    relative margin, robustly across seeds.
+    """
     rng = np.random.default_rng(3)
     W = jnp.asarray(rng.normal(size=(24, 24)) / 5, jnp.float32)
-    # strongly heterogeneous column scales -> importance sampling wins clearly
-    x = jnp.asarray(rng.normal(size=(16, 24)) * (0.35 ** np.arange(24))[None, :],
-                    jnp.float32)
+    x = jnp.asarray(rng.normal(size=(16, 24)), jnp.float32)
+    col_w = jnp.asarray(0.45 ** np.arange(24), jnp.float32)
     from repro.core import sketched_linear
 
-    exact = jax.grad(lambda xx: jnp.sum(jnp.sin(sketched_linear(xx, W))))(x)
-    keys = jax.random.split(jax.random.key(6), 400)
+    def loss(xx, k=None, cfg=None):
+        return jnp.sum(jnp.sin(sketched_linear(xx, W, key=k, cfg=cfg)) * col_w[None, :])
+
+    exact = jax.grad(loss)(x)
+    keys = jax.random.split(jax.random.key(6), 600)
 
     def V(method):
         cfg = SketchConfig(method=method, budget=0.25)
-        g = jax.jit(lambda k: jax.grad(lambda xx: jnp.sum(
-            jnp.sin(sketched_linear(xx, W, key=k, cfg=cfg))))(x))
+        g = jax.jit(lambda k: jax.grad(lambda xx: loss(xx, k, cfg))(x))
         return float(mc_gradient_variance(g, exact, keys)["variance"])
 
-    assert V("l1") < V("per_column")
+    v_l1, v_uniform = V("l1"), V("per_column")
+    assert v_l1 < 0.7 * v_uniform, (v_l1, v_uniform)
