@@ -1,0 +1,267 @@
+"""One-pass fused backward + compact-gradient pipeline benchmark.
+
+Two measurements (both CPU-assertable — no TPU required):
+
+1. **G-pass accounting** (single device, XLA): compile the backward of one
+   block-sketched linear site and read ``cost_analysis()`` bytes-accessed.
+   Subtracting the analytically known non-G IO (W, X, dX, compact dW/db,
+   plan) leaves the bytes attributable to the gradient matrix G; dividing by
+   ``|G|`` gives the number of HBM passes over G. The fused backward (shared
+   single gather feeding dX / dW / db + one score pass) must come in at
+   ≤ 2 passes; the pre-PR shape (per-column expansion, separate db gather,
+   densify-scatter) is measured from an inline replica for comparison.
+
+2. **Train-step timing** (in-process 2×4 fake-device mesh): one sharded
+   train step of the same small LM as bench_distributed, comparing the
+   pre-PR compact path (tp_sketch, dW scattered inside shard_map, dense SGD)
+   against the compact-gradient path (``compact_grads=True``: CompactGrad
+   out of the backward, reduce-scattered rows, sparse-row optimizer update).
+   Fake CPU devices share one host so times are not a hardware claim, but
+   the *ratio* pre/fused on identical math is the PR's acceptance number.
+
+Usage: PYTHONPATH=src python -m benchmarks.bench_backward_fusion [--budget 0.25]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import save_result
+from repro import compat
+from repro.core import SketchConfig, SketchPolicy
+from repro.core.sketching import column_plan, effective_cfg
+
+# ---------------------------------------------------------------------------
+# Part 1: G-pass accounting on a single sketched site
+# ---------------------------------------------------------------------------
+
+
+def _fused_site_bwd(cfg, G2d, X2d, w, key):
+    """Post-PR backward for one block-sketched site, compact-gradient form:
+    score+plan (one pass over G), then the single-gather fused dX/dW/db —
+    the weight gradient stays (rows, cols), no densify-scatter."""
+    from repro.kernels import ref as kref
+
+    lcfg = effective_cfg(cfg, G2d.shape[-1])
+    plan = column_plan(lcfg, G2d, w, key, want_compact=True)
+    dX, dWc, db_blk = kref.block_gather_matmul_fused_ref(
+        G2d, plan.indices, plan.scales, w, X2d, block=lcfg.block)
+    bs = lcfg.block
+    cols = (plan.indices[:, None] * bs + jnp.arange(bs, dtype=plan.indices.dtype)).reshape(-1)
+    return dX, dWc.reshape(-1, w.shape[1]), cols, db_blk.reshape(-1)
+
+
+def _unfused_site_bwd(cfg, G2d, X2d, w, key):
+    """Pre-PR backward shape: block plan expanded to per-column indices,
+    per-column gathers for dX/dW, a second db gather, densify-scatter."""
+    lcfg = effective_cfg(cfg, G2d.shape[-1])
+    plan = column_plan(lcfg, G2d, w, key, want_compact=True)
+    idx, scales = plan.indices, plan.scales
+    bs = lcfg.block
+    cols = (idx[:, None] * bs + jnp.arange(bs, dtype=idx.dtype)).reshape(-1)
+    col_scales = jnp.repeat(scales, bs)
+    Gc = jnp.take(G2d, cols, axis=1) * col_scales[None, :].astype(G2d.dtype)
+    Wc = jnp.take(w, cols, axis=0)
+    dX = Gc @ Wc
+    dWc = Gc.T @ X2d
+    dW = jnp.zeros_like(w).at[cols].add(dWc.astype(w.dtype))
+    db_c = (jnp.take(G2d, cols, axis=1) * col_scales[None, :].astype(G2d.dtype)).sum(0)
+    db = jnp.zeros((G2d.shape[-1],), G2d.dtype).at[cols].add(db_c)
+    return dX, dW, db
+
+
+def _g_reader_ops(hlo_text: str, N: int, n: int) -> int:
+    """Number of instructions that read THE G entry parameter in the
+    optimized HLO. Each reader is at most one HBM pass over G (gathers of
+    kept columns read less), so the count upper-bounds the true pass count."""
+    import re
+
+    shape = re.escape(f"f32[{N},{n}]")
+    # only the ENTRY computation: nested fusion/call bodies re-declare their
+    # operands as parameters and would double count
+    entry = hlo_text.split("\nENTRY ", 1)[-1]
+    entry = entry.split("\n}", 1)[0]
+    g_syms = set()
+    for m in re.finditer(rf"(%\S+)\s*=\s*{shape}\S*\s+parameter\(", entry):
+        g_syms.add(m.group(1))
+    readers = 0
+    for line in entry.splitlines():
+        line = line.strip()
+        m = re.match(r"(?:ROOT\s+)?(%\S+)\s*=\s*\S+\s+(\S+)\((.*)", line)
+        if not m:
+            continue
+        sym, op, operands = m.groups()
+        if op in ("parameter", "copy", "bitcast", "get-tuple-element", "tuple"):
+            continue
+        if any(g + "," in operands or g + ")" in operands or g + " " in operands
+               for g in g_syms):
+            readers += 1
+    return readers
+
+
+def g_pass_accounting(budget: float, *, N=2048, n=1024, d=256, block=128) -> dict:
+    """How many times does the backward stream the gradient matrix G from
+    HBM? Counted as HLO instructions reading a G-shaped buffer in the
+    compiled backward (the cost-model bytes are also recorded, but XLA:CPU
+    charges gathers for their full operand and splits reductions into
+    reduce-window stages, so the op count is the faithful pass metric).
+    The fused backward must be ≤ 2 readers: the score/plan reduction plus
+    the single shared gather feeding dX / compact dW / compact db."""
+    cfg = SketchConfig(method="l1", budget=budget, backend="compact", block=block)
+    ks = jax.random.split(compat.prng_key(0), 4)
+    x = jax.random.normal(ks[0], (N, d), jnp.float32)
+    w = jax.random.normal(ks[1], (n, d), jnp.float32) / np.sqrt(d)
+    G = jax.random.normal(ks[2], (N, n), jnp.float32)
+    key = ks[3]
+
+    c_fused = jax.jit(lambda G, x, w, k: _fused_site_bwd(cfg, G, x, w, k)) \
+        .lower(G, x, w, key).compile()
+    c_unfused = jax.jit(lambda G, x, w, k: _unfused_site_bwd(cfg, G, x, w, k)) \
+        .lower(G, x, w, key).compile()
+
+    def stats(compiled):
+        ca = compiled.cost_analysis()
+        if isinstance(ca, list):
+            ca = ca[0]
+        return (_g_reader_ops(compiled.as_text(), N, n),
+                float(ca.get("bytes accessed", 0.0)))
+
+    readers_fused, bytes_fused = stats(c_fused)
+    readers_unfused, bytes_unfused = stats(c_unfused)
+    rec = {
+        "shape": {"N": N, "n": n, "d": d, "block": block, "budget": budget},
+        "g_bytes": N * n * 4,
+        "g_passes_fused": readers_fused,
+        "g_passes_unfused": readers_unfused,
+        "bytes_accessed_fused_bwd": bytes_fused,
+        "bytes_accessed_unfused_bwd": bytes_unfused,
+    }
+    print(f"  G readers (HBM passes over G): fused {readers_fused} "
+          f"(bytes model {bytes_fused/1e6:.1f} MB)  vs pre-PR shape "
+          f"{readers_unfused} ({bytes_unfused/1e6:.1f} MB)")
+    return rec
+
+
+# ---------------------------------------------------------------------------
+# Part 2: sharded train step, pre-PR compact vs compact-gradient pipeline
+# ---------------------------------------------------------------------------
+
+
+def _mesh_step_time(budget: float, reps: int, tiny: bool) -> dict:
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.configs.base import ArchConfig
+    from repro.launch import sharding as shard
+    from repro.launch.mesh import make_mesh
+    from repro.optim import sgd
+    from repro.train.train_step import TrainState, init_state, make_train_step
+
+    if jax.device_count() < 8:
+        print("bench_backward_fusion: needs 8 fake host devices; skipping "
+              "mesh timing (run standalone: python -m benchmarks.bench_backward_fusion)")
+        return {}
+    mesh = make_mesh((2, 4), ("data", "model"))
+    if tiny:
+        arch = ArchConfig(name="bench", family="dense", n_layers=1, d_model=32,
+                          n_heads=4, n_kv=2, d_ff=64, vocab=64,
+                          q_chunk=16, kv_chunk=16)
+        B, S, blk = 8, 16, 4
+    else:
+        # wide enough that backward matmul arithmetic dominates the fixed
+        # per-step overheads (planning, collectives) even on CPU — the regime
+        # the sketch targets; bench_distributed keeps the historical tiny
+        # config for comparability with the pre-PR artifact.
+        arch = ArchConfig(name="bench", family="dense", n_layers=2, d_model=256,
+                          n_heads=8, n_kv=4, d_ff=1024, vocab=1024,
+                          q_chunk=64, kv_chunk=64)
+        B, S, blk = 16, 64, 64
+    opt = sgd(0.1)
+    state = init_state(compat.prng_key(0), arch, opt)
+    toks = jax.random.randint(compat.prng_key(1), (B, S), 0, arch.vocab)
+    batch = {"tokens": toks, "labels": toks}
+    key = compat.prng_key(2)
+
+    pspecs = shard.param_shardings(state.params, mesh)
+    sshard = TrainState(params=pspecs,
+                        opt_state={k: pspecs for k in state.opt_state},
+                        step=NamedSharding(mesh, P()))
+    act = NamedSharding(mesh, P(("data",), None, None))
+    bspec = {k: NamedSharding(mesh, P("data", None)) for k in batch}
+
+    policy = SketchPolicy(base=SketchConfig(method="l1", budget=budget,
+                                            backend="compact"))
+    policy_blk = SketchPolicy(base=SketchConfig(method="l1", budget=budget,
+                                                backend="compact", block=blk))
+    variants = {
+        "exact": dict(policy=None, tp_sketch=False, compact_grads=False),
+        "compact_pre": dict(policy=policy, tp_sketch=True, compact_grads=False),
+        "compact_fused": dict(policy=policy, tp_sketch=True, compact_grads=True),
+        "block_pre": dict(policy=policy_blk, tp_sketch=True, compact_grads=False),
+        "block_fused": dict(policy=policy_blk, tp_sketch=True, compact_grads=True),
+    }
+    out = {}
+    for name, kw in variants.items():
+        step = make_train_step(arch, opt, kw["policy"], mesh=mesh, act_sharding=act,
+                               data_axes=("data",), model_axes=("model",),
+                               tp_sketch=kw["tp_sketch"],
+                               compact_grads=kw["compact_grads"])
+        fn = jax.jit(step, in_shardings=(sshard, bspec, NamedSharding(mesh, P())))
+        s, m = fn(state, batch, key)  # warmup / compile
+        jax.block_until_ready(m["loss"])
+        times = []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            s2, m2 = fn(state, batch, key)
+            jax.block_until_ready(m2["loss"])
+            times.append(time.perf_counter() - t0)
+        out[name] = {"step_ms": float(np.median(times) * 1e3),
+                     "loss": float(m["loss"])}
+        print(f"  {name:14s} step {out[name]['step_ms']:8.2f} ms   "
+              f"loss {out[name]['loss']:.4f}")
+    for pre, fused in [("compact_pre", "compact_fused"), ("block_pre", "block_fused")]:
+        if pre in out and fused in out:
+            out[fused]["speedup_vs_pre"] = out[pre]["step_ms"] / out[fused]["step_ms"]
+            print(f"  {fused}: {out[fused]['speedup_vs_pre']:.2f}x vs {pre}")
+    if "exact" in out:
+        for name in ("compact_pre", "compact_fused", "block_pre", "block_fused"):
+            if name in out:
+                out[name]["speedup_vs_exact"] = (out["exact"]["step_ms"]
+                                                 / out[name]["step_ms"])
+    return out
+
+
+def run(quick: bool = True, budget: float = 0.25, reps: int = 20,
+        tiny: bool = False) -> dict:
+    compat.ensure_host_devices(8)
+    out = {"budget": budget, "mesh": "2x4"}
+    if tiny:
+        out["g_passes"] = g_pass_accounting(budget, N=256, n=256, d=64, block=64)
+    else:
+        out["g_passes"] = g_pass_accounting(budget)
+    out["train_step"] = _mesh_step_time(budget, reps=(3 if tiny else reps), tiny=tiny)
+    # pre-PR committed artifact, for the before/after record (the historical
+    # tiny config refreshed by bench_distributed; see docs/perf.md)
+    out["pre_pr_recorded"] = {
+        "source": "results/bench/distributed.json @ 373b4b7 (2-layer d_model=64)",
+        "exact_ms": 112.07, "compact_ms": 120.71, "block_ms": 205.85,
+    }
+    if not tiny:
+        save_result("backward_fusion", out)
+    return out
+
+
+def main():
+    compat.ensure_host_devices(8)
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--budget", type=float, default=0.25)
+    ap.add_argument("--reps", type=int, default=20)
+    args = ap.parse_args()
+    run(budget=args.budget, reps=args.reps)
+
+
+if __name__ == "__main__":
+    main()

@@ -9,14 +9,21 @@ import time
 import traceback
 
 
-def _run_distributed(quick: bool = True):
-    """Isolate the distributed benchmark in a fresh interpreter: it needs 8
-    fake host devices forced before JAX backend init, which must not re-size
-    the backend the other benchmarks run (and time) on."""
-    r = subprocess.run([sys.executable, "-m", "benchmarks.bench_distributed"],
-                       text=True)
-    if r.returncode != 0:
-        raise RuntimeError(f"bench_distributed exited {r.returncode}")
+def _subprocess_bench(module: str):
+    """Isolate 8-fake-device benchmarks in a fresh interpreter: the device
+    count must be forced before JAX backend init, which must not re-size the
+    backend the other benchmarks run (and time) on."""
+
+    def run(quick: bool = True):
+        r = subprocess.run([sys.executable, "-m", module], text=True)
+        if r.returncode != 0:
+            raise RuntimeError(f"{module} exited {r.returncode}")
+
+    return run
+
+
+_run_distributed = _subprocess_bench("benchmarks.bench_distributed")
+_run_backward_fusion = _subprocess_bench("benchmarks.bench_backward_fusion")
 
 
 def main():
@@ -42,6 +49,7 @@ def main():
         "cost_backends": bench_cost.run,
         "block_granularity": bench_block_granularity.run,
         "distributed": _run_distributed,
+        "backward_fusion": _run_backward_fusion,
     }
     failures = 0
     for name, fn in jobs.items():

@@ -35,6 +35,7 @@ __all__ = [
     "make_mesh",
     "shard_map",
     "ensure_host_devices",
+    "optimization_barrier",
     "prng_key",
     "key_dtype",
     "tree_map",
@@ -128,6 +129,47 @@ def shard_map(f, *, mesh, in_specs, out_specs, check: bool = False):
     """
     kw = {_SM_CHECK_FLAG: check} if _SM_CHECK_FLAG else {}
     return _SHARD_MAP(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)
+
+
+# ---------------------------------------------------------------------------
+# optimization_barrier
+# ---------------------------------------------------------------------------
+
+_OPT_BARRIER_PATCHED = False
+
+
+def _ensure_barrier_batchable() -> None:
+    """Backfill the vmap rule for ``optimization_barrier``.
+
+    The primitive exists throughout the supported range, but releases in it
+    (e.g. 0.4.37) ship it without a batching rule, so any ``vmap``/``lax.map
+    (batch_size=...)`` over code using a barrier raises NotImplementedError
+    (fixed upstream later). The rule is the identity passthrough. Failure to
+    patch degrades gracefully — the barrier only guards against fusion
+    duplication, not correctness."""
+    global _OPT_BARRIER_PATCHED
+    if _OPT_BARRIER_PATCHED:
+        return
+    _OPT_BARRIER_PATCHED = True
+    try:
+        from jax._src.lax import lax as _lax_internal
+        from jax.interpreters import batching
+
+        prim = _lax_internal.optimization_barrier_p
+        if prim not in batching.primitive_batchers:
+            def _rule(args, dims):
+                return prim.bind(*args), dims
+
+            batching.primitive_batchers[prim] = _rule
+    except Exception:  # pragma: no cover - private path moved; barrier still works unbatched
+        pass
+
+
+def optimization_barrier(values):
+    """``jax.lax.optimization_barrier`` usable under vmap on every supported
+    release (see ``_ensure_barrier_batchable``)."""
+    _ensure_barrier_batchable()
+    return jax.lax.optimization_barrier(values)
 
 
 # ---------------------------------------------------------------------------

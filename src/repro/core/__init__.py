@@ -1,4 +1,5 @@
 """Paper core: unbiased randomized VJP sketching."""
+from repro.core.compact_grad import CompactGrad
 from repro.core.policy import POLICY_PRESETS, SketchPolicy
 from repro.core.sketched_linear import linear, sketched_linear
 from repro.core.sketching import (
@@ -17,6 +18,7 @@ __all__ = [
     "ALL_METHODS",
     "COLUMN_METHODS",
     "ColumnPlan",
+    "CompactGrad",
     "POLICY_PRESETS",
     "SketchConfig",
     "SketchPolicy",

@@ -1,0 +1,237 @@
+"""Compact (row-sparse) weight gradients that survive ``jax.grad``.
+
+The compact/pallas backward produces the sketched dW as ``r`` kept rows plus
+their indices, but a ``custom_vjp`` cotangent must aval-match the dense
+weight, so the seed code scattered every layer's compact block into a full
+``zeros_like(w)`` before the optimizer — and the optimizer then did dense
+math on rows the sketch never touched. This module removes that round trip:
+
+* :class:`CompactGrad` — a registered pytree ``(rows, idx, dense)``. ``rows``
+  are the kept dW rows (f32), ``idx`` their row indices into the dense weight
+  (carried as f32 — see below), ``dense`` an optional dense component with
+  the full weight shape (carries the dense shape of the gradient).
+* **Gradient slots** — per-site ``CompactGrad``-shaped *zero inputs* merged
+  into the params tree (key ``"gslot"`` next to ``"w"``). The slots are extra
+  differentiated inputs that the forward ignores; the sketched backward
+  *defines* their cotangent to be the compact rows/indices. This is the only
+  JAX-sanctioned way to get a non-dense gradient out of ``jax.grad``: the
+  cotangent of the dense ``w`` must stay dense-shaped (it is returned as
+  structural zeros and folded away by XLA), while the slot cotangent — whose
+  primal is float (hence idx rides as f32) — carries the compact data.
+* :func:`fold_slot_grads` — rewrites the grad tree back to the params
+  structure, replacing each site's w-gradient with
+  ``CompactGrad(rows, idx, dense=<w cotangent>)``.
+
+Contract (who may densify, and where — see docs/perf.md):
+  the invariant is that ``dense`` and the scattered ``rows`` have disjoint
+  support (exactly one of them is nonzero per site; ``dense`` is structural
+  zeros whenever the compact path ran). Consumers must preserve compactness:
+  ``optim`` clips and applies sparse-row updates directly; only
+  :func:`densify` may materialise the dense gradient, and the only sanctioned
+  caller is diagnostics/tests. Gradient accumulation must stay dense
+  (microbatches sample different index sets), so ``make_train_step`` rejects
+  ``compact_grads`` with ``accum > 1``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sketching import (SketchConfig, effective_cfg, static_block_rank,
+                                  static_rank)
+
+__all__ = ["CompactGrad", "is_compact", "densify", "compact_rank",
+           "with_grad_slots", "fold_slot_grads",
+           "TP_OUT_ROLES", "TP_ROW_ROLES"]
+
+# Roles whose d_out (column-parallel) / d_in (row-parallel) is TP-sharded
+# under ``ctx.tp_sketch`` — single source of truth, also used by nn.common.
+TP_OUT_ROLES = frozenset({"attn_q", "attn_k", "attn_v", "mlp_in", "mlp_gate",
+                          "cross_q", "cross_k", "cross_v", "ssm_in"})
+TP_ROW_ROLES = frozenset({"attn_o", "mlp_out", "ssm_out", "cross_o"})
+
+
+@dataclasses.dataclass
+class CompactGrad:
+    """Row-sparse gradient: ``dense_grad = dense + scatter_add(idx, rows)``.
+
+    rows: ``[..., r, d_in]`` f32 kept rows (leading dims = scan stacking).
+    idx:  ``[..., r]`` f32 row indices (cast to int32 at use sites; float so
+          the slot primal has a float tangent space).
+    dense: optional dense component with the full gradient shape; structural
+          zeros when the compact backward ran (slot form uses ``None``).
+    """
+
+    rows: jax.Array
+    idx: jax.Array
+    dense: Optional[jax.Array] = None
+
+
+jax.tree_util.register_pytree_node(
+    CompactGrad,
+    lambda cg: ((cg.rows, cg.idx, cg.dense), None),
+    lambda _, ch: CompactGrad(rows=ch[0], idx=ch[1], dense=ch[2]),
+)
+
+
+def is_compact(x: Any) -> bool:
+    return isinstance(x, CompactGrad)
+
+
+def row_gather(a, idx):
+    """a[..., n, d][..., idx, :] for 0 or 1 leading (scan-stacked) dims."""
+    ii = idx.astype(jnp.int32)
+    if a.ndim == 2:
+        return a[ii]
+    assert a.ndim == 3, a.shape
+    return a[jnp.arange(a.shape[0])[:, None], ii]
+
+
+def row_scatter(a, idx, rows, *, add: bool):
+    """a[..., idx, :] = / += rows for 0 or 1 leading (scan-stacked) dims.
+
+    Single source of truth for the batched row scatter — `densify` and the
+    optimizer updates must agree on index handling."""
+    ii = idx.astype(jnp.int32)
+    if a.ndim == 2:
+        ref = a.at[ii]
+    else:
+        assert a.ndim == 3, a.shape
+        ref = a.at[jnp.arange(a.shape[0])[:, None], ii]
+    return ref.add(rows.astype(a.dtype)) if add else ref.set(rows.astype(a.dtype))
+
+
+def densify(cg: CompactGrad, like: Optional[jax.Array] = None) -> jax.Array:
+    """Materialise the dense gradient (diagnostics/tests only — the hot path
+    must keep gradients compact until the weight update)."""
+    base = cg.dense
+    if base is None:
+        assert like is not None, "slot-form CompactGrad needs `like` for the dense shape"
+        base = jnp.zeros(like.shape, jnp.result_type(cg.rows))
+    return row_scatter(base, cg.idx, cg.rows, add=True)
+
+
+def compact_rank(cfg: SketchConfig, n: int) -> int:
+    """Static number of kept dW *rows* (columns of G) for a site of width n."""
+    lcfg = effective_cfg(cfg, n)
+    if lcfg.block > 1:
+        return static_block_rank(lcfg, n) * lcfg.block
+    return static_rank(lcfg, n)
+
+
+# ---------------------------------------------------------------------------
+# Gradient slots
+# ---------------------------------------------------------------------------
+
+
+class _MeshCtx:
+    """Duck-typed stand-in for nn.common.Ctx accepted by tp_applicable."""
+
+    def __init__(self, mesh, data_axes, model_axes, tp_sketch):
+        self.mesh = mesh
+        self.data_axes = tuple(data_axes)
+        self.model_axes = tuple(model_axes)
+        self.tp_sketch = tp_sketch
+
+
+def _site_role(path) -> Optional[str]:
+    if len(path) < 2:
+        return None
+    parent, leaf = path[-2], path[-1]
+    if parent in ("attn", "cross") and leaf in ("q", "k", "v", "o"):
+        return f"{parent}_{leaf}"
+    if parent == "mlp" and leaf in ("in", "gate", "out"):
+        return f"mlp_{leaf}"
+    return None
+
+
+def _slot_rank(role, cfg, w, has_b, shim) -> Optional[int]:
+    """Mirror of nn.common.dense's backend dispatch: how many compact rows
+    the site's backward will emit, or None if it stays dense."""
+    from repro.core.sharded_sketch import tp_applicable, tp_row_applicable
+
+    n_out = w.shape[-2]
+    if shim.tp_sketch and shim.mesh is not None:
+        if role in TP_OUT_ROLES and not has_b and tp_applicable(shim, cfg, n_out):
+            n_mp = 1
+            for a in shim.model_axes:
+                n_mp *= shim.mesh.shape[a]
+            return n_mp * compact_rank(cfg, n_out // n_mp)
+        if role in TP_ROW_ROLES and not has_b and tp_row_applicable(shim, cfg, w.shape[-1]):
+            return compact_rank(cfg, n_out)
+        return None  # dense() forces the mask backend on TP-incompatible sites
+    return compact_rank(cfg, n_out)
+
+
+def with_grad_slots(params, policy, *, mesh=None, data_axes=("data",),
+                    model_axes=("model",), tp_sketch=False, n_layers=1):
+    """Return a copy of ``params`` where every site whose backward will take a
+    compact path gains a zero ``CompactGrad`` slot under key ``"gslot"``.
+
+    The returned tree is what the loss should be differentiated against; the
+    slots' cotangents carry the compact dW (see module docstring). Sites are
+    matched by path (attn/cross q|k|v|o, mlp in|gate|out) with the layer-0
+    policy config — consistent with scan-stacked models, where
+    ``Ctx.cfg_for`` also uses a static layer index of 0; location-based
+    policies (whose per-layer config differs from layer 0's) therefore get
+    no slots and keep the dense path.
+
+    Weights applied more than once per step never get a slot: JAX would sum
+    the per-use CompactGrad cotangents LEAFWISE — adding the index vectors
+    of different plans together — which is silently corrupt. That is why
+    the ``"shared"`` subtree (zamba2-style shared attention, applied every
+    period repetition) is excluded, and why ``compact_grads`` rejects
+    ``accum > 1`` (the same aliasing across microbatches).
+    """
+    if policy is None or policy.location != "all":
+        return params
+    shim = _MeshCtx(mesh, data_axes, model_axes, tp_sketch)
+
+    def walk(node, path):
+        if isinstance(node, dict):
+            out = {k: walk(v, path + (k,)) for k, v in node.items()}
+            # multi-use weights (the shared-attention block is applied every
+            # period repetition) must keep the dense path: summed per-use
+            # slot cotangents would add index vectors of different plans
+            role = None if "shared" in path else _site_role(path)
+            w = node.get("w")
+            if role is not None and w is not None and getattr(w, "ndim", 0) >= 2:
+                cfg = policy.config_for(role, 0, n_layers)
+                if (cfg is not None and not cfg.is_noop
+                        and cfg.backend in ("compact", "pallas")):
+                    r = _slot_rank(role, cfg, w, "b" in node, shim)
+                    if r is not None:
+                        lead = w.shape[:-2]
+                        out["gslot"] = CompactGrad(
+                            rows=jnp.zeros(lead + (r, w.shape[-1]), jnp.float32),
+                            idx=jnp.zeros(lead + (r,), jnp.float32))
+            return out
+        if isinstance(node, (list, tuple)):
+            return type(node)(walk(v, path) for v in node)
+        return node
+
+    return walk(params, ())
+
+
+def fold_slot_grads(grads):
+    """Rewrite the gradient of a slot-augmented params tree back to the
+    original params structure: each site's ``w`` gradient becomes a
+    ``CompactGrad`` whose ``dense`` field is the (structurally zero) w
+    cotangent and whose rows/idx come from the slot cotangent."""
+
+    def walk(node):
+        if isinstance(node, dict):
+            out = {k: walk(v) for k, v in node.items() if k != "gslot"}
+            slot = node.get("gslot")
+            if slot is not None:
+                out["w"] = CompactGrad(rows=slot.rows, idx=slot.idx,
+                                       dense=node["w"])
+            return out
+        if isinstance(node, (list, tuple)):
+            return type(node)(walk(v) for v in node)
+        return node
+
+    return walk(grads)

@@ -30,6 +30,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro import compat
 
+from repro.core.compact_grad import CompactGrad
 from repro.core.sketching import SketchConfig, column_plan, effective_cfg
 
 __all__ = ["tp_sketched_linear", "tp_applicable"]
@@ -52,29 +53,58 @@ def tp_applicable(ctx, cfg, d_out: int) -> bool:
     return static_rank(cfg, n_loc) >= 1
 
 
-def tp_sketched_linear(x, w, ctx, cfg: SketchConfig, key):
-    """x: [B, S, d_in]; w: [n, d_in] with n TP-sharded. Returns [B, S, n]."""
+def _gather_compact(lcfg, G2d, w_l, idx, scales):
+    """Gather the kept G columns / W rows for the local plan.
+
+    Block-granular plans gather whole contiguous blocks (reshape + one
+    block-level take — the lane-aligned slab layout the Pallas kernels use)
+    instead of expanding to per-column indices; the returned ``idx`` is the
+    expanded per-column index vector for the dW scatter / CompactGrad.
+    """
+    if lcfg.block > 1:
+        bs = lcfg.block
+        nb = G2d.shape[-1] // bs
+        Gc = (jnp.take(G2d.reshape(-1, nb, bs), idx, axis=1)
+              * scales[None, :, None].astype(G2d.dtype)).reshape(G2d.shape[0], -1)
+        Wc = jnp.take(w_l.reshape(nb, bs, -1), idx, axis=0).reshape(-1, w_l.shape[-1])
+        idx = (idx[:, None] * bs + jnp.arange(bs, dtype=idx.dtype)).reshape(-1)
+        return Gc, Wc, idx
+    Gc = jnp.take(G2d, idx, axis=1) * scales[None, :].astype(G2d.dtype)
+    Wc = jnp.take(w_l, idx, axis=0)
+    return Gc, Wc, idx
+
+
+def tp_sketched_linear(x, w, ctx, cfg: SketchConfig, key, slot=None):
+    """x: [B, S, d_in]; w: [n, d_in] with n TP-sharded. Returns [B, S, n].
+
+    With a ``slot`` (compact-gradient mode), the backward skips the per-shard
+    densify-scatter entirely: the reduce-scattered compact dW block and its
+    global row indices ride the slot's cotangent (mp-replicated rows, din
+    dp-sharded — so the optimizer's sparse-row scatter partitions
+    collective-free), and the dense w cotangent is structural zeros.
+    """
     mesh = ctx.mesh
     dp = tuple(ctx.data_axes)
     mp = ctx.model_axes[0]
-    fn = _build(cfg, mesh, dp, mp, x.shape, w.shape)
-    return fn(x, w, key)
+    fn = _build(cfg, mesh, dp, mp, x.shape, w.shape, slot is not None)
+    return fn(x, w, key, slot)
 
 
-def _build(cfg, mesh, dp, mp, x_shape, w_shape):
+def _build(cfg, mesh, dp, mp, x_shape, w_shape, with_slot: bool):
     B, S, din = x_shape
     n, _ = w_shape
     n_dp = 1
     for a in dp:
         n_dp *= mesh.shape[a]
     n_mp = mesh.shape[mp]
+    n_loc = n // n_mp
     scatter_axis = dp[-1] if dp else None
     n_scatter = mesh.shape[scatter_axis] if scatter_axis else 1
     psum_rest = tuple(a for a in dp[:-1])
     din_ok = din % n_scatter == 0
 
     @partial(jax.custom_vjp, nondiff_argnums=())
-    def fwd_fn(x, w, key):
+    def fwd_fn(x, w, key, slot):
         def body(x_l, w_l):
             return jnp.einsum("bsi,oi->bso", x_l, w_l)
 
@@ -83,11 +113,11 @@ def _build(cfg, mesh, dp, mp, x_shape, w_shape):
             in_specs=(P(dp, None, None), P(mp, None)),
             out_specs=P(dp, None, mp))(x, w)
 
-    def fwd(x, w, key):
-        return fwd_fn(x, w, key), (x, w, key)
+    def fwd(x, w, key, slot):
+        return fwd_fn(x, w, key, slot), (x, w, key, slot)
 
     def bwd(res, g):
-        x, w, key = res
+        x, w, key, slot = res
 
         def body(g_l, x_l, w_l, key):
             # per-shard local plan: fold the (DP-shared) key with the model
@@ -99,12 +129,7 @@ def _build(cfg, mesh, dp, mp, x_shape, w_shape):
             plan = column_plan(lcfg, G2d, w_l, kk, want_compact=True,
                                score_psum_axes=dp)
             idx, scales = plan.indices, plan.scales
-            if lcfg.block > 1:
-                bs = lcfg.block
-                idx = (idx[:, None] * bs + jnp.arange(bs, dtype=idx.dtype)).reshape(-1)
-                scales = jnp.repeat(scales, bs)
-            Gc = jnp.take(G2d, idx, axis=1) * scales[None, :].astype(g_l.dtype)
-            Wc = jnp.take(w_l, idx, axis=0)
+            Gc, Wc, idx = _gather_compact(lcfg, G2d, w_l, idx, scales)
             dx = (Gc @ Wc).reshape(x_l.shape)
             dx = jax.lax.psum(dx, mp)  # the standard TP backward all-reduce
             dWc = Gc.T.astype(jnp.float32) @ X2d.astype(jnp.float32)
@@ -115,21 +140,42 @@ def _build(cfg, mesh, dp, mp, x_shape, w_shape):
                 # COMPACT block (≈ budget × dense volume) along d_in
                 dWc = jax.lax.psum_scatter(dWc, scatter_axis, scatter_dimension=1,
                                            tiled=True)
+            elif scatter_axis:
+                dWc = jax.lax.psum(dWc, scatter_axis)
+            if with_slot:
+                # global row indices into the full [n, din] weight; the
+                # compact block never gets scattered on the backward path.
+                # Rows/indices are all-gathered over mp (compact volume, ≈
+                # budget × a dense mp collective) so the optimizer's
+                # sparse-row scatter partitions collective-free: a scatter
+                # with REPLICATED updates into the (mp, dp)-sharded weight
+                # lowers to a local masked scatter per shard.
+                gidx = (jax.lax.axis_index(mp) * n_loc + idx).astype(jnp.float32)
+                rows_all = jax.lax.all_gather(dWc, mp, axis=0, tiled=True)
+                gidx_all = jax.lax.all_gather(gidx, mp, axis=0, tiled=True)
+                return dx, rows_all, gidx_all
+            if scatter_axis and din_ok:
                 dW_l = jnp.zeros((w_l.shape[0], dWc.shape[1]), w_l.dtype)
                 dW_l = dW_l.at[idx].add(dWc.astype(w_l.dtype))
             else:
-                if scatter_axis:
-                    dWc = jax.lax.psum(dWc, scatter_axis)
                 dW_l = jnp.zeros_like(w_l).at[idx].add(dWc.astype(w_l.dtype))
             return dx, dW_l
 
-        out_w_spec = P(mp, dp[-1] if (scatter_axis and din_ok) else None)
+        din_spec = dp[-1] if (scatter_axis and din_ok) else None
+        if with_slot:
+            dx, rows, gidx = compat.shard_map(
+                body, mesh=mesh,
+                in_specs=(P(dp, None, mp), P(dp, None, None), P(mp, None), P()),
+                out_specs=(P(dp, None, None), P(None, din_spec), P(None)))(
+                    g, x, w, key)
+            slot_ct = CompactGrad(rows=rows.astype(jnp.float32), idx=gidx)
+            return dx, jnp.zeros_like(w), None, slot_ct
         dx, dw = compat.shard_map(
             body, mesh=mesh,
             in_specs=(P(dp, None, mp), P(dp, None, None), P(mp, None), P()),
-            out_specs=(P(dp, None, None), out_w_spec))(
+            out_specs=(P(dp, None, None), P(mp, din_spec)))(
                 g, x, w, key)
-        return dx, dw, None
+        return dx, dw, None, None
 
     fwd_fn.defvjp(fwd, bwd)
     return fwd_fn
@@ -148,23 +194,25 @@ def tp_row_applicable(ctx, cfg, d_in: int) -> bool:
     return d_in % n_mp == 0
 
 
-def tp_row_sketched_linear(x, w, ctx, cfg: SketchConfig, key):
+def tp_row_sketched_linear(x, w, ctx, cfg: SketchConfig, key, slot=None):
     """x: [B, S, d_in] (d_in TP-sharded); w: [n, d_in]. Returns [B, S, n].
 
     Megatron row-parallel: forward computes local partials + psum(mp).
     Backward sketches columns of the (mp-replicated) output gradient — the
     plan is identical on every shard (same key, scores psum'ed over dp), so
     dX stays local (ff-sharded) and the compact dW block reduce-scatters
-    over dp as in the column-parallel path.
+    over dp as in the column-parallel path. With a ``slot``, the compact
+    block and its (replicated) row indices ride the slot cotangent instead
+    of being scattered into a dense dW.
     """
     mesh = ctx.mesh
     dp = tuple(ctx.data_axes)
     mp = ctx.model_axes[0]
-    fn = _build_row(cfg, mesh, dp, mp, x.shape, w.shape)
-    return fn(x, w, key)
+    fn = _build_row(cfg, mesh, dp, mp, x.shape, w.shape, slot is not None)
+    return fn(x, w, key, slot)
 
 
-def _build_row(cfg, mesh, dp, mp, x_shape, w_shape):
+def _build_row(cfg, mesh, dp, mp, x_shape, w_shape, with_slot: bool):
     n = w_shape[0]
     scatter_axis = dp[-1] if dp else None
     n_scatter = mesh.shape[scatter_axis] if scatter_axis else 1
@@ -174,7 +222,7 @@ def _build_row(cfg, mesh, dp, mp, x_shape, w_shape):
     din_ok = din_loc % n_scatter == 0
 
     @partial(jax.custom_vjp, nondiff_argnums=())
-    def fwd_fn(x, w, key):
+    def fwd_fn(x, w, key, slot):
         def body(x_l, w_l):
             y_part = jnp.einsum("bsi,oi->bso", x_l, w_l)
             return jax.lax.psum(y_part, mp)
@@ -184,11 +232,11 @@ def _build_row(cfg, mesh, dp, mp, x_shape, w_shape):
             in_specs=(P(dp, None, mp), P(None, mp)),
             out_specs=P(dp, None, None))(x, w)
 
-    def fwd(x, w, key):
-        return fwd_fn(x, w, key), (x, w, key)
+    def fwd(x, w, key, slot):
+        return fwd_fn(x, w, key, slot), (x, w, key, slot)
 
     def bwd(res, g):
-        x, w, key = res
+        x, w, key, slot = res
 
         def body(g_l, x_l, w_l, key):
             # g is mp-replicated: plan once with the shared key (NO mp fold)
@@ -198,12 +246,7 @@ def _build_row(cfg, mesh, dp, mp, x_shape, w_shape):
             plan = column_plan(lcfg, G2d, w_l, key, want_compact=True,
                                score_psum_axes=dp)
             idx, scales = plan.indices, plan.scales
-            if lcfg.block > 1:
-                bs = lcfg.block
-                idx = (idx[:, None] * bs + jnp.arange(bs, dtype=idx.dtype)).reshape(-1)
-                scales = jnp.repeat(scales, bs)
-            Gc = jnp.take(G2d, idx, axis=1) * scales[None, :].astype(g_l.dtype)
-            Wc = jnp.take(w_l, idx, axis=0)  # [r, din_loc]
+            Gc, Wc, idx = _gather_compact(lcfg, G2d, w_l, idx, scales)
             dx = (Gc @ Wc).reshape(x_l.shape)  # stays ff-local: no collective
             dWc = Gc.T.astype(jnp.float32) @ X2d.astype(jnp.float32)
             if psum_rest:
@@ -211,21 +254,32 @@ def _build_row(cfg, mesh, dp, mp, x_shape, w_shape):
             if scatter_axis and din_ok:
                 dWc = jax.lax.psum_scatter(dWc, scatter_axis, scatter_dimension=1,
                                            tiled=True)
+            elif scatter_axis:
+                dWc = jax.lax.psum(dWc, scatter_axis)
+            if with_slot:
+                return dx, dWc, idx.astype(jnp.float32)
+            if scatter_axis and din_ok:
                 dW_l = jnp.zeros((w_l.shape[0], dWc.shape[1]), w_l.dtype)
                 dW_l = dW_l.at[idx].add(dWc.astype(w_l.dtype))
             else:
-                if scatter_axis:
-                    dWc = jax.lax.psum(dWc, scatter_axis)
                 dW_l = jnp.zeros_like(w_l).at[idx].add(dWc.astype(w_l.dtype))
             return dx, dW_l
 
-        out_w_spec = P(None, (mp, scatter_axis) if (scatter_axis and din_ok) else mp)
+        rows_spec = P(None, (mp, scatter_axis) if (scatter_axis and din_ok) else mp)
+        if with_slot:
+            dx, rows, gidx = compat.shard_map(
+                body, mesh=mesh,
+                in_specs=(P(dp, None, None), P(dp, None, mp), P(None, mp), P()),
+                out_specs=(P(dp, None, mp), rows_spec, P(None)))(
+                    g, x, w, key)
+            slot_ct = CompactGrad(rows=rows.astype(jnp.float32), idx=gidx)
+            return dx, jnp.zeros_like(w), None, slot_ct
         dx, dw = compat.shard_map(
             body, mesh=mesh,
             in_specs=(P(dp, None, None), P(dp, None, mp), P(None, mp), P()),
-            out_specs=(P(dp, None, mp), out_w_spec))(
+            out_specs=(P(dp, None, mp), rows_spec))(
                 g, x, w, key)
-        return dx, dw, None
+        return dx, dw, None, None
 
     fwd_fn.defvjp(fwd, bwd)
     return fwd_fn

@@ -5,16 +5,24 @@ Forward (practical convention):  ``y = x @ W.T (+ b)`` with ``x: [..., d_in]``,
 unbiased estimator:
 
 * mask backend      — Alg. 3 / 4 / 5 / 6 verbatim (dense masked matmuls),
-* compact backend   — gather the r kept columns, reduced-shape matmuls,
-                      scatter dW rows (TPU-native realisation of the same
-                      estimator; bit-identical in expectation, and *exactly*
-                      identical to mask for the same key),
-* pallas backend    — compact semantics, Pallas gather-matmul kernels.
+* compact backend   — gather the r kept columns once, reduced-shape matmuls
+                      (TPU-native realisation of the same estimator;
+                      bit-identical in expectation, and *exactly* identical
+                      to mask for the same key),
+* pallas backend    — compact semantics; block-granular configs run the
+                      one-pass fused kernel (dX + compact dW + compact db
+                      from a single HBM stream of G's kept blocks).
 
 The RNG key rides through the forward as a regular argument and is consumed
 only in the backward (stored in residuals), so a jitted ``grad`` of a model
 containing many sketched layers stays a pure function of ``(params, batch,
 step_key)``.
+
+Compact gradients: when a :class:`~repro.core.compact_grad.CompactGrad`
+*slot* is passed (``grad_slot=...``, normally threaded in by ``nn.common
+.dense`` from the params tree), the compact paths return the weight gradient
+through the slot's cotangent as (rows, indices) — no densify-scatter — and a
+structurally zero dense cotangent for ``w``. See core/compact_grad.py.
 """
 from __future__ import annotations
 
@@ -24,6 +32,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core.compact_grad import CompactGrad
 from repro.core.sketching import SketchConfig, column_plan, sketch_dense
 
 __all__ = ["sketched_linear", "linear"]
@@ -35,20 +44,20 @@ def _flatten_leading(x):
 
 
 @partial(jax.custom_vjp, nondiff_argnums=(0,))
-def _sketched_linear(cfg: SketchConfig, x, w, b, key):
+def _sketched_linear(cfg: SketchConfig, x, w, b, key, slot):
     y = jnp.einsum("...i,oi->...o", x, w)
     if b is not None:
         y = y + b
     return y
 
 
-def _fwd(cfg: SketchConfig, x, w, b, key):
-    y = _sketched_linear(cfg, x, w, b, key)
-    return y, (x, w, key, b is not None)
+def _fwd(cfg: SketchConfig, x, w, b, key, slot):
+    y = _sketched_linear(cfg, x, w, b, key, slot)
+    return y, (x, w, key, b is not None, slot)
 
 
 def _bwd(cfg: SketchConfig, res, g):
-    x, w, key, has_b = res
+    x, w, key, has_b, slot = res
     G2d, lead = _flatten_leading(g)
     X2d, _ = _flatten_leading(x)
     n = G2d.shape[-1]
@@ -63,7 +72,7 @@ def _bwd(cfg: SketchConfig, res, g):
         dX = (G2d @ (w * mw)) / p
         dW = (G2d.T @ (X2d * mx)) / p
         db = jnp.sum(G2d, axis=0) if has_b else None
-        return _pack(dX.reshape(x.shape), dW.astype(w.dtype), db, g.dtype, has_b)
+        return _pack(dX.reshape(x.shape), dW.astype(w.dtype), db, has_b, slot)
 
     use_compact = cfg.backend in ("compact", "pallas") and not cfg.is_noop
     if use_compact:
@@ -73,61 +82,76 @@ def _bwd(cfg: SketchConfig, res, g):
         plan = column_plan(cfg, G2d, w, key, want_compact=True)
         idx, scales = plan.indices, plan.scales
         if cfg.block > 1:
+            # Fused one-pass backward: dX, compact dW rows and compact db all
+            # come from a single stream over G's kept column-blocks (Pallas
+            # kernel on the pallas backend, single-gather XLA oracle on
+            # compact).
             if cfg.backend == "pallas":
                 from repro.kernels import ops as kops
 
-                dX2d = kops.block_gather_matmul(G2d, idx, scales, w, block=cfg.block)
-                dWc = kops.block_gather_matmul_dw(G2d, idx, scales, X2d, block=cfg.block)
-            # expand block plan to per-column indices for the XLA paths below
+                dX2d, dWc, db_blk = kops.block_gather_matmul_fused(
+                    G2d, idx, scales, w, X2d, block=cfg.block)
+            else:
+                from repro.kernels import ref as kref
+
+                dX2d, dWc, db_blk = kref.block_gather_matmul_fused_ref(
+                    G2d, idx, scales, w, X2d, block=cfg.block)
             bs = cfg.block
             cols = (idx[:, None] * bs + jnp.arange(bs, dtype=idx.dtype)[None, :]).reshape(-1)
-            col_scales = jnp.repeat(scales, bs)
-            idx, scales = cols, col_scales
-            if cfg.backend == "pallas":
-                dW = jnp.zeros_like(w).at[idx].add(dWc.reshape(-1, w.shape[1]).astype(w.dtype))
-                db = None
-                if has_b:
-                    db_c = (jnp.take(G2d, idx, axis=1) * scales[None, :].astype(g.dtype)).sum(0)
-                    db = jnp.zeros((n,), g.dtype).at[idx].add(db_c)
-                return _pack(dX2d.reshape(x.shape), dW, db, g.dtype, has_b)
-        if cfg.backend == "pallas":
+            rows = dWc.reshape(-1, w.shape[1])
+            db_c = db_blk.reshape(-1)
+        elif cfg.backend == "pallas":
             from repro.kernels import ops as kops
 
             dX2d = kops.gather_cols_matmul(G2d, idx, scales, w)
-            dWc = kops.gather_cols_matmul_dw(G2d, idx, scales, X2d)
+            rows = kops.gather_cols_matmul_dw(G2d, idx, scales, X2d)
+            cols = idx
+            db_c = (jnp.take(G2d, idx, axis=1) * scales[None, :].astype(g.dtype)).sum(0)
         else:
+            # single gather of G shared by dX, dW and db (the db gather used
+            # to be repeated per output)
             Gc = jnp.take(G2d, idx, axis=1) * scales[None, :].astype(g.dtype)
             Wc = jnp.take(w, idx, axis=0)
             dX2d = Gc @ Wc
-            dWc = Gc.T @ X2d
-        dW = jnp.zeros_like(w).at[idx].add(dWc.astype(w.dtype))
+            rows = Gc.T @ X2d
+            cols = idx
+            db_c = jnp.sum(Gc, axis=0)
         db = None
         if has_b:
-            db_c = (jnp.take(G2d, idx, axis=1) * scales[None, :].astype(g.dtype)).sum(0)
-            db = jnp.zeros((n,), g.dtype).at[idx].add(db_c)
-        return _pack(dX2d.reshape(x.shape), dW, db, g.dtype, has_b)
+            db = jnp.zeros((n,), g.dtype).at[cols].add(db_c.astype(g.dtype))
+        dX = dX2d.reshape(x.shape)
+        if slot is not None:
+            # compact-gradient mode: rows/indices ride the slot cotangent,
+            # the dense w cotangent is structural zeros (folded by XLA)
+            slot_ct = CompactGrad(rows=rows.astype(jnp.float32),
+                                  idx=cols.astype(jnp.float32))
+            return (dX, jnp.zeros_like(w), db if has_b else None, None, slot_ct)
+        dW = jnp.zeros_like(w).at[cols].add(rows.astype(w.dtype))
+        return _pack(dX, dW, db, has_b, slot)
 
     # Dense mask backend (paper-faithful), incl. per_sample / rcs / none.
     Ghat = sketch_dense(cfg, G2d, w, key)
     dX = Ghat @ w
     dW = Ghat.T @ X2d
     db = jnp.sum(Ghat, axis=0) if has_b else None
-    return _pack(dX.reshape(x.shape), dW.astype(w.dtype), db, g.dtype, has_b)
+    return _pack(dX.reshape(x.shape), dW.astype(w.dtype), db, has_b, slot)
 
 
-def _pack(dx, dw, db, gdtype, has_b):
-    return (dx, dw, db if has_b else None, None)
+def _pack(dx, dw, db, has_b, slot):
+    # slot primal is all-zeros, so returning it doubles as its zero cotangent
+    return (dx, dw, db if has_b else None, None, slot)
 
 
 _sketched_linear.defvjp(_fwd, _bwd)
 
 
-def sketched_linear(x, w, b=None, *, key=None, cfg: Optional[SketchConfig] = None):
+def sketched_linear(x, w, b=None, *, key=None, cfg: Optional[SketchConfig] = None,
+                    grad_slot: Optional[CompactGrad] = None):
     """Public entry point. ``cfg=None`` (or noop cfg / no key) = exact linear."""
     if cfg is None or cfg.is_noop or key is None:
         y = jnp.einsum("...i,oi->...o", x, w)
         return y + b if b is not None else y
-    return _sketched_linear(cfg, x, w, b, key)
+    return _sketched_linear(cfg, x, w, b, key, grad_slot)
 
 
 # Alias used across the nn substrate.

@@ -134,12 +134,28 @@ class ColumnPlan:
     probs: jax.Array  # [n] f32 marginals (diagnostics / tests)
 
 
+def _proxy_scores(cfg: SketchConfig, G2d: jax.Array, W: Optional[jax.Array]) -> jax.Array:
+    """Column proxy scores, routed through the Pallas reduction kernel for the
+    ℓ1/ℓ2 families on the pallas backend (one streaming HBM pass over G with
+    fp32 accumulation) and through the jnp scores otherwise."""
+    base = cfg.method[:-3] if cfg.method.endswith("_sq") else cfg.method
+    if cfg.backend == "pallas" and base in ("l1", "l2"):
+        from repro.kernels import ops as kops
+
+        if base == "l1":
+            s = kops.col_l1_scores(G2d, mode="l1")
+        else:
+            s = jnp.sqrt(kops.col_l1_scores(G2d, mode="l2"))
+        return jnp.square(s) if cfg.method.endswith("_sq") else s
+    return column_scores(cfg.method, G2d, W)
+
+
 def _column_probs(cfg: SketchConfig, G2d: jax.Array, W: Optional[jax.Array], r: int,
                   score_psum_axes=None) -> jax.Array:
     n = G2d.shape[-1]
     if cfg.method == "per_column":
         return jnp.full((n,), jnp.float32(r) / n)
-    s = column_scores(cfg.method, G2d, W)
+    s = _proxy_scores(cfg, G2d, W)
     if score_psum_axes:
         # distributed batch: pool scores across data shards so every replica
         # plans the SAME sketch (required for the compressed gradient
@@ -201,7 +217,7 @@ def _block_plan(cfg: SketchConfig, G2d, W, key, *, want_compact: bool,
     if cfg.method == "per_column":
         p = jnp.full((nb,), jnp.float32(rb) / nb)
     else:
-        s = column_scores(cfg.method, G2d, W)
+        s = _proxy_scores(cfg, G2d, W)
         if score_psum_axes:
             s = jax.lax.psum(s, score_psum_axes)
         # pool proxy *weights* (w = s²) per block, probabilities ∝ sqrt(pool)

@@ -16,11 +16,18 @@ from repro.kernels import ref as kref
 from repro.kernels.col_scores import col_l1_scores as _col_l1_pallas
 from repro.kernels.flash_attention import flash_attention as _flash_pallas
 from repro.kernels.sketch_matmul import (block_gather_matmul as _bgm_pallas,
-                                         block_gather_matmul_dw as _bgm_dw_pallas)
+                                         block_gather_matmul_dw as _bgm_dw_pallas,
+                                         block_gather_matmul_fused as _bgm_fused_pallas,
+                                         fused_vmem_bytes)
 
 __all__ = ["on_tpu", "block_gather_matmul", "block_gather_matmul_dw",
+           "block_gather_matmul_fused",
            "gather_cols_matmul", "gather_cols_matmul_dw", "col_l1_scores",
            "flash_attention"]
+
+# Leave headroom below the ~16 MiB/core VMEM budget for the fused kernel's
+# resident accumulators (dX row panel + full compact dW).
+_FUSED_VMEM_LIMIT = 12 * 2 ** 20
 
 
 def on_tpu() -> bool:
@@ -41,6 +48,32 @@ def block_gather_matmul_dw(G, block_idx, scales, X, *, block: int = 128):
     if _use_pallas():
         return _bgm_dw_pallas(G, block_idx, scales, X, block=block, interpret=not on_tpu())
     return kref.block_gather_matmul_dw_ref(G, block_idx, scales, X, block=block)
+
+
+def block_gather_matmul_fused(G, block_idx, scales, W, X, *, block: int = 128):
+    """One-pass fused backward (dX, compact dW, compact db); see
+    ``sketch_matmul.block_gather_matmul_fused``. Falls back to the unfused
+    kernel pair when the fused accumulators would not fit VMEM (on TPU),
+    and to the single-gather XLA oracle off-TPU."""
+    if _use_pallas():
+        rb = block_idx.shape[0]
+        fits = fused_vmem_bytes(G.shape[0], W.shape[1], rb, block,
+                                jnp.dtype(G.dtype).itemsize) <= _FUSED_VMEM_LIMIT
+        if fits or not on_tpu():
+            return _bgm_fused_pallas(G, block_idx, scales, W, X, block=block,
+                                     interpret=not on_tpu())
+        dX = _bgm_pallas(G, block_idx, scales, W, block=block)
+        dWc = _bgm_dw_pallas(G, block_idx, scales, X, block=block)
+        db = _fused_db_ref(G, block_idx, scales, block)
+        return dX, dWc, db
+    return kref.block_gather_matmul_fused_ref(G, block_idx, scales, W, X, block=block)
+
+
+def _fused_db_ref(G, block_idx, scales, block):
+    N, n = G.shape
+    Gb = G.reshape(N, n // block, block)
+    Gc = jnp.take(Gb, block_idx, axis=1).astype(jnp.float32) * scales[None, :, None]
+    return jnp.sum(Gc, axis=0)
 
 
 def gather_cols_matmul(G, idx, scales, W):

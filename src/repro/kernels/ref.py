@@ -5,6 +5,7 @@ import jax
 import jax.numpy as jnp
 
 __all__ = ["block_gather_matmul_ref", "block_gather_matmul_dw_ref",
+           "block_gather_matmul_fused_ref",
            "gather_cols_matmul_ref", "gather_cols_matmul_dw_ref",
            "col_l1_scores_ref", "flash_attention_ref"]
 
@@ -30,6 +31,33 @@ def block_gather_matmul_dw_ref(G, block_idx, scales, X, *, block: int):
     Gb = G.reshape(N, nb, block)
     Gc = jnp.take(Gb, block_idx, axis=1).astype(jnp.float32) * scales[None, :, None]
     return jnp.einsum("nrb,nd->rbd", Gc, X.astype(jnp.float32)).astype(G.dtype)
+
+
+def block_gather_matmul_fused_ref(G, block_idx, scales, W, X, *, block: int):
+    """Fused backward oracle: (dX, dWc, db_c) from ONE gather of G.
+
+    The scaled compact ``Gc`` is materialised once (flat column gather — the
+    layout XLA lowers with no extra copies; kept blocks are contiguous column
+    runs, so this reads exactly the kept slabs) and feeds all three outputs.
+    The optimization barrier stops XLA from re-fusing the gather into each
+    consumer, which would read G three times — exactly the multi-pass
+    backward this path exists to avoid. Shapes as in the Pallas kernel:
+    dX [N, d], dWc [rb, block, d], db_c [rb, block] f32.
+    """
+    N, n = G.shape
+    rb = block_idx.shape[0]
+    cols = (block_idx[:, None] * block
+            + jnp.arange(block, dtype=block_idx.dtype)[None, :]).reshape(-1)
+    col_scales = jnp.repeat(scales, block)
+    from repro import compat
+
+    Gc = jnp.take(G, cols, axis=1).astype(jnp.float32) * col_scales[None, :]
+    (Gc,) = compat.optimization_barrier((Gc,))
+    Wc = jnp.take(W, cols, axis=0).astype(jnp.float32)  # [rb*bs, d]
+    dX = (Gc @ Wc).astype(G.dtype)
+    dWc = jax.lax.dot_general(Gc, X.astype(jnp.float32), (((0,), (0,)), ((), ())))
+    db = jnp.sum(Gc, axis=0)  # [rb*bs] f32
+    return dX, dWc.astype(G.dtype).reshape(rb, block, -1), db.reshape(rb, block)
 
 
 def gather_cols_matmul_ref(G, idx, scales, W):

@@ -21,7 +21,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["block_gather_matmul", "block_gather_matmul_dw"]
+__all__ = ["block_gather_matmul", "block_gather_matmul_dw",
+           "block_gather_matmul_fused", "fused_vmem_bytes"]
 
 
 def _dx_kernel(idx_ref, scale_ref, g_ref, w_ref, o_ref, acc_ref, *, n_k: int):
@@ -89,7 +90,10 @@ def _dw_kernel(idx_ref, scale_ref, g_ref, x_ref, o_ref, acc_ref, *, n_i: int):
     def _():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    g = g_ref[...].astype(jnp.float32)
+    # scale G up front (not the accumulator at the end) so the accumulation
+    # order is bit-identical to the fused kernel, which shares one scaled G
+    # tile between the dX and dW products.
+    g = g_ref[...].astype(jnp.float32) * scale_ref[k]
     # contract over the N tile: gᵀ @ x without an explicit transpose
     acc_ref[...] += jax.lax.dot_general(
         g, x_ref[...].astype(jnp.float32), (((0,), (0,)), ((), ())),
@@ -97,7 +101,7 @@ def _dw_kernel(idx_ref, scale_ref, g_ref, x_ref, o_ref, acc_ref, *, n_i: int):
 
     @pl.when(i == n_i - 1)
     def _():
-        o_ref[0] = (acc_ref[...] * scale_ref[k]).astype(o_ref.dtype)
+        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("block", "tile_n", "tile_d", "interpret"))
@@ -139,3 +143,134 @@ def block_gather_matmul_dw(G, block_idx, scales, X, *, block: int = 128,
         name="block_gather_matmul_dw",
     )(block_idx, scales.astype(jnp.float32), G, X)
     return out[:, :, :din]
+
+
+# ---------------------------------------------------------------------------
+# One-pass fused backward: dX, compact dW and compact db from a single
+# stream of G's kept column-blocks.
+# ---------------------------------------------------------------------------
+
+
+def _fused_kernel(idx_ref, scale_ref, g_ref, w_ref, x_ref,
+                  o_dx, o_dw, o_db, acc_dx, acc_dw, acc_db,
+                  *, n_i: int, n_k: int, n_j: int, td: int):
+    i, k, j = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+    # one scaled G tile feeds both MXU products and the db reduction
+    g = g_ref[...].astype(jnp.float32) * scale_ref[k]
+
+    @pl.when(jnp.logical_and(i == 0, jnp.logical_and(k == 0, j == 0)))
+    def _():
+        acc_dw[...] = jnp.zeros_like(acc_dw)
+        acc_db[...] = jnp.zeros_like(acc_db)
+
+    @pl.when(jnp.logical_and(k == 0, j == 0))
+    def _():
+        acc_dx[...] = jnp.zeros_like(acc_dx)
+
+    jsl = pl.ds(j * td, td)
+    acc_dx[:, jsl] += jax.lax.dot(g, w_ref[...].astype(jnp.float32),
+                                  preferred_element_type=jnp.float32)
+    acc_dw[k, :, jsl] += jax.lax.dot_general(
+        g, x_ref[...].astype(jnp.float32), (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(j == 0)
+    def _():
+        acc_db[k, :] += jnp.sum(g, axis=0)
+
+    @pl.when(k == n_k - 1)
+    def _():
+        o_dx[:, jsl] = acc_dx[:, jsl].astype(o_dx.dtype)
+
+    @pl.when(jnp.logical_and(i == n_i - 1,
+                             jnp.logical_and(k == n_k - 1, j == n_j - 1)))
+    def _():
+        o_dw[...] = acc_dw[...].astype(o_dw.dtype)
+        o_db[...] = acc_db[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block", "tile_n", "tile_d", "interpret"))
+def block_gather_matmul_fused(G, block_idx, scales, W, X, *, block: int = 128,
+                              tile_n: int = 256, tile_d: int = 256,
+                              interpret: bool = False):
+    """Fused one-pass backward for a block-sketched linear site.
+
+        dX     = Σ_k scale_k · G[:, blk_k] @ W[blk_k, :]      [N, d]
+        dWc[k] = scale_k · G[:, blk_k]ᵀ @ X                   [rb, block, d]
+        db_c[k] = scale_k · Σ_rows G[:, blk_k]                [rb, block] f32
+
+    G: [N, n]; block_idx: [rb] int32; scales: [rb] f32; W: [n, d]; X: [N, d].
+    Each kept G column-block is DMA'd into VMEM exactly once per row tile —
+    the G index map is constant over the inner d-tile sweep, so the whole
+    backward makes ONE HBM pass over the kept part of G (vs one per output
+    per d-tile for the unfused pair). The price is residency: the f32
+    accumulators for a [tn, d] dX row panel and the full [rb·block, d]
+    compact dW live in VMEM for the whole call — see ``fused_vmem_bytes``;
+    the ops dispatcher falls back to the unfused pair when it doesn't fit.
+
+    Accumulation order (ascending k for dX, ascending row tiles for dWc,
+    scaled-G operands) matches ``block_gather_matmul`` /
+    ``block_gather_matmul_dw`` exactly, so fused and unfused are
+    bit-identical for the same plan.
+    """
+    N, n = G.shape
+    d = W.shape[1]
+    assert X.shape[1] == d, (X.shape, W.shape)
+    rb = block_idx.shape[0]
+    tn = min(tile_n, max(8, N))
+    td = min(tile_d, d)
+    Np = -(-N // tn) * tn
+    dp = -(-d // td) * td
+    if Np != N:
+        G = jnp.pad(G, ((0, Np - N), (0, 0)))
+        X = jnp.pad(X, ((0, Np - N), (0, 0)))
+    if dp != d:
+        W = jnp.pad(W, ((0, 0), (0, dp - d)))
+        X = jnp.pad(X, ((0, 0), (0, dp - d)))
+
+    n_i, n_j = Np // tn, dp // td
+    grid = (n_i, rb, n_j)
+    dX, dWc, db = pl.pallas_call(
+        functools.partial(_fused_kernel, n_i=n_i, n_k=rb, n_j=n_j, td=td),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((tn, block), lambda i, k, j, idx, sc: (i, idx[k])),
+                pl.BlockSpec((block, td), lambda i, k, j, idx, sc: (idx[k], j)),
+                pl.BlockSpec((tn, td), lambda i, k, j, idx, sc: (i, j)),
+            ],
+            out_specs=[
+                pl.BlockSpec((tn, dp), lambda i, k, j, idx, sc: (i, 0)),
+                pl.BlockSpec((rb, block, dp), lambda i, k, j, idx, sc: (0, 0, 0)),
+                pl.BlockSpec((rb, block), lambda i, k, j, idx, sc: (0, 0)),
+            ],
+            scratch_shapes=[
+                pltpu.VMEM((tn, dp), jnp.float32),
+                pltpu.VMEM((rb, block, dp), jnp.float32),
+                pltpu.VMEM((rb, block), jnp.float32),
+            ],
+        ),
+        out_shape=[
+            jax.ShapeDtypeStruct((Np, dp), G.dtype),
+            jax.ShapeDtypeStruct((rb, block, dp), G.dtype),
+            jax.ShapeDtypeStruct((rb, block), jnp.float32),
+        ],
+        interpret=interpret,
+        name="block_gather_matmul_fused",
+    )(block_idx, scales.astype(jnp.float32), G, W, X)
+    return dX[:N, :d], dWc[:, :, :d], db
+
+
+def fused_vmem_bytes(N: int, d: int, rb: int, block: int, itemsize: int,
+                     tile_n: int = 256, tile_d: int = 256) -> int:
+    """VMEM residency estimate for ``block_gather_matmul_fused`` (bytes).
+
+    f32 accumulators + output buffers + double-buffered input tiles."""
+    tn = min(tile_n, max(8, N))
+    td = min(tile_d, d)
+    dp = -(-d // td) * td
+    acc = 4 * (tn * dp + rb * block * dp + rb * block)
+    outs = itemsize * (tn * dp + rb * block * dp) + 4 * rb * block
+    tiles = 2 * itemsize * (tn * block + block * td + tn * td)
+    return acc + outs + tiles

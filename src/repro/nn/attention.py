@@ -303,13 +303,13 @@ def attention(params, x, ctx: Ctx, cfg: AttnCfg, positions, cache=None, pos=None
     v = _split_heads(dense(params["v"], kv_src, ctx, f"{role_prefix}_v"), cfg.n_kv, cfg.d_head)
 
     if cfg.rope == "default":
-        q = apply_rope(q, positions, cfg.theta)
+        q = apply_rope(q, positions, cfg.theta, ctx=ctx)
         if memory is None:
-            k = apply_rope(k, positions, cfg.theta)
+            k = apply_rope(k, positions, cfg.theta, ctx=ctx)
     elif cfg.rope == "mrope":
-        q = apply_mrope(q, positions, cfg.theta)
+        q = apply_mrope(q, positions, cfg.theta, ctx=ctx)
         if memory is None:
-            k = apply_mrope(k, positions, cfg.theta)
+            k = apply_mrope(k, positions, cfg.theta, ctx=ctx)
 
     if cache is not None and pos is not None:
         # decode: write new kv at pos (rolling for window caches), then attend.

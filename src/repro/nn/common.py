@@ -97,9 +97,10 @@ def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32, *, scale: float | 
     return p
 
 
-_TP_OUT_ROLES = frozenset({"attn_q", "attn_k", "attn_v", "mlp_in", "mlp_gate",
-                           "cross_q", "cross_k", "cross_v", "ssm_in"})
-_TP_ROW_ROLES = frozenset({"attn_o", "mlp_out", "ssm_out", "cross_o"})
+# TP role sets live in core.compact_grad (shared with the grad-slot builder,
+# which must mirror this dispatch exactly).
+from repro.core.compact_grad import TP_OUT_ROLES as _TP_OUT_ROLES  # noqa: E402
+from repro.core.compact_grad import TP_ROW_ROLES as _TP_ROW_ROLES  # noqa: E402
 
 
 def dense(params, x, ctx: Ctx, role: str):
@@ -107,28 +108,34 @@ def dense(params, x, ctx: Ctx, role: str):
 
     Under ``ctx.tp_sketch``, sites whose d_out is TP-sharded use the
     shard_map compact path with compressed gradient collectives; everything
-    else keeps the configured (mask) backend.
+    else keeps the configured (mask) backend. A ``"gslot"`` entry in
+    ``params`` (compact-gradient mode, see core/compact_grad.py) is threaded
+    into the backward so the weight gradient comes out compact.
     """
     cfg = ctx.cfg_for(role)
+    slot = params.get("gslot")
     if (cfg is not None and role in _TP_OUT_ROLES and x.ndim == 3
             and params.get("b") is None and ctx.key is not None):
         from repro.core.sharded_sketch import tp_applicable, tp_sketched_linear
 
         if tp_applicable(ctx, cfg, params["w"].shape[0]):
-            return tp_sketched_linear(x, params["w"], ctx, cfg, ctx.site_key(role))
+            return tp_sketched_linear(x, params["w"], ctx, cfg, ctx.site_key(role),
+                                      slot=slot)
     if (cfg is not None and role in _TP_ROW_ROLES and x.ndim == 3
             and params.get("b") is None and ctx.key is not None):
         from repro.core.sharded_sketch import tp_row_applicable, tp_row_sketched_linear
 
         if tp_row_applicable(ctx, cfg, params["w"].shape[1]):
-            return tp_row_sketched_linear(x, params["w"], ctx, cfg, ctx.site_key(role))
+            return tp_row_sketched_linear(x, params["w"], ctx, cfg, ctx.site_key(role),
+                                          slot=slot)
     if (cfg is not None and ctx.tp_sketch and cfg.backend in ("compact", "pallas")):
         # TP-incompatible site (e.g. kv heads < model axis): fall back to the
         # dense-mask estimator rather than the scatter-hostile compact path.
         import dataclasses as _dc
 
         cfg = _dc.replace(cfg, backend="mask", block=0)
-    return linear(x, params["w"], params.get("b"), key=ctx.site_key(role), cfg=cfg)
+    return linear(x, params["w"], params.get("b"), key=ctx.site_key(role), cfg=cfg,
+                  grad_slot=slot)
 
 
 def rmsnorm_init(d: int, dtype=jnp.float32):

@@ -21,18 +21,41 @@ def _rotate(x, cos, sin):
     return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
 
 
-def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+def _pin_broadcast(t: jax.Array, ctx) -> jax.Array:
+    """Sharding annotation for the [B, S, 1, d/2] cos/sin position broadcast.
+
+    Without it, SPMD has no layout for the broadcast and logs an
+    `[spmd] Involuntary full rematerialization` when resharding it between
+    the forward and the (remat'd) backward of production train cells —
+    pinning batch over the data axes (matching the activation layout, head
+    dim replicated) lets both directions reuse the same shards.
+    """
+    mesh = getattr(ctx, "mesh", None)
+    if ctx is None or mesh is None or getattr(ctx, "act_sharding", None) is None:
+        return t
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    data_axes = tuple(getattr(ctx, "data_axes", ()) or ())
+    n_dp = 1
+    for a in data_axes:
+        n_dp *= mesh.shape[a]
+    bax = data_axes if (data_axes and t.shape[0] % n_dp == 0) else None
+    return jax.lax.with_sharding_constraint(
+        t, NamedSharding(mesh, PartitionSpec(bax, None, None, None)))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float, ctx=None) -> jax.Array:
     """x: [B, S, H, d_head]; positions: [B, S] (int)."""
     d = x.shape[-1]
     freqs = rope_freqs(d, theta)  # [d/2]
     ang = positions.astype(jnp.float32)[..., None] * freqs  # [B, S, d/2]
-    cos = jnp.cos(ang)[:, :, None, :]
-    sin = jnp.sin(ang)[:, :, None, :]
+    cos = _pin_broadcast(jnp.cos(ang)[:, :, None, :], ctx)
+    sin = _pin_broadcast(jnp.sin(ang)[:, :, None, :], ctx)
     return _rotate(x.astype(jnp.float32), cos, sin).astype(x.dtype)
 
 
 def apply_mrope(x: jax.Array, positions3: jax.Array, theta: float,
-                sections=(2, 1, 1)) -> jax.Array:
+                sections=(2, 1, 1), ctx=None) -> jax.Array:
     """M-RoPE. x: [B, S, H, d_head]; positions3: [3, B, S] (t, h, w).
 
     ``sections`` gives the relative split of the d/2 frequency slots across
@@ -51,6 +74,6 @@ def apply_mrope(x: jax.Array, positions3: jax.Array, theta: float,
         for i in range(3)
     ], axis=-1)  # [B, S, half]
     ang = pos_per_slot * freqs  # [B, S, half]
-    cos = jnp.cos(ang)[:, :, None, :]
-    sin = jnp.sin(ang)[:, :, None, :]
+    cos = _pin_broadcast(jnp.cos(ang)[:, :, None, :], ctx)
+    sin = _pin_broadcast(jnp.sin(ang)[:, :, None, :], ctx)
     return _rotate(x.astype(jnp.float32), cos, sin).astype(x.dtype)

@@ -1,6 +1,7 @@
 """Pure-JAX optimizers with sharded state (ZeRO-3: states inherit param specs)."""
-from repro.optim.optimizers import Optimizer, adamw, clip_by_global_norm, sgd
+from repro.optim.optimizers import (Optimizer, adamw, clip_by_global_norm,
+                                    global_grad_norm, sgd)
 from repro.optim.schedule import constant, cosine_warmup
 
 __all__ = ["Optimizer", "adamw", "sgd", "clip_by_global_norm",
-           "cosine_warmup", "constant"]
+           "global_grad_norm", "cosine_warmup", "constant"]

@@ -4,6 +4,21 @@ implemented from scratch — optax is not vendored here).
 Optimizer state is a pytree congruent with params, so it shards with the same
 PartitionSpecs (ZeRO-3). ``moment_dtype`` lets 100B+ archs keep bf16 moments
 (documented HBM trade-off in DESIGN.md §4).
+
+Compact gradients: any gradient leaf may be a
+:class:`repro.core.compact_grad.CompactGrad` — ``dense + scatter(idx, rows)``
+with *disjoint support* (exactly one part is nonzero; the dense part is
+structural zeros whenever the compact backward ran, and XLA folds its
+arithmetic away). Clipping and the updates below consume that form directly:
+
+  * SGD               — pure sparse-row scatter update (touched rows only);
+  * SGD + momentum    — elementwise momentum decay + sparse-row injection;
+  * AdamW (default)   — elementwise moment decay + sparse-row injection;
+    bit-equivalent to running the dense update on the densified gradient;
+  * AdamW ``lazy=True`` — *lazy decay*: rows the sketch never touched skip
+    the moment decay, the weight decay and the parameter update entirely
+    (LazyAdam semantics — cheaper, not identical to dense AdamW; see
+    docs/perf.md).
 """
 from __future__ import annotations
 
@@ -13,7 +28,11 @@ from typing import Callable, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
-__all__ = ["Optimizer", "sgd", "adamw", "clip_by_global_norm"]
+from repro.core.compact_grad import (CompactGrad, is_compact, row_gather,
+                                     row_scatter)
+
+__all__ = ["Optimizer", "sgd", "adamw", "clip_by_global_norm",
+           "global_grad_norm"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -22,12 +41,46 @@ class Optimizer:
     update: Callable  # (grads, state, params, step) -> (new_params, new_state)
 
 
+def _grad_leaves(grads):
+    return jax.tree.leaves(grads, is_leaf=is_compact)
+
+
+def _sq_norm(g):
+    if is_compact(g):
+        # disjoint support: ||dense + scatter(rows)||² = ||dense||² + ||rows||²
+        t = jnp.sum(jnp.square(g.rows.astype(jnp.float32)))
+        if g.dense is not None:
+            t = t + jnp.sum(jnp.square(g.dense.astype(jnp.float32)))
+        return t
+    return jnp.sum(jnp.square(g.astype(jnp.float32)))
+
+
+def global_grad_norm(grads):
+    leaves = [g for g in _grad_leaves(grads) if is_compact(g) or hasattr(g, "astype")]
+    return jnp.sqrt(sum(_sq_norm(g) for g in leaves))
+
+
+def _scale_grad(g, scale):
+    if is_compact(g):
+        return CompactGrad(
+            rows=g.rows.astype(jnp.float32) * scale,
+            idx=g.idx,
+            dense=None if g.dense is None else
+            (g.dense.astype(jnp.float32) * scale).astype(g.dense.dtype))
+    if hasattr(g, "astype"):
+        return (g.astype(jnp.float32) * scale).astype(g.dtype)
+    return g
+
+
 def clip_by_global_norm(grads, max_norm: float):
-    leaves = [g for g in jax.tree.leaves(grads) if hasattr(g, "astype")]
-    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+    gn = global_grad_norm(grads)
     scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-12))
-    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype)
-                        if hasattr(g, "astype") else g, grads), gn
+    return jax.tree.map(lambda g: _scale_grad(g, scale), grads,
+                        is_leaf=is_compact), gn
+
+
+def _dense_part(g, p):
+    return g.dense if g.dense is not None else jnp.zeros(p.shape, jnp.float32)
 
 
 def sgd(lr: Callable | float, momentum: float = 0.0, clip: Optional[float] = None):
@@ -44,14 +97,31 @@ def sgd(lr: Callable | float, momentum: float = 0.0, clip: Optional[float] = Non
             grads, _ = clip_by_global_norm(grads, clip)
         lr_t = lr_fn(step)
         if momentum == 0.0:
-            new_params = jax.tree.map(
-                lambda p, g: (p.astype(jnp.float32) - lr_t * g.astype(jnp.float32)).astype(p.dtype)
-                if _is_trainable(p) else p,
-                params, grads)
-            return new_params, state
-        new_m = jax.tree.map(
-            lambda m, g: momentum * m + g.astype(m.dtype) if hasattr(g, "astype") and m.ndim else m,
-            state["m"], grads)
+            def upd(p, g):
+                if not _is_trainable(p):
+                    return p
+                if is_compact(g):
+                    # dense part is structural zeros on the compact path —
+                    # XLA folds it, leaving a pure sparse-row update.
+                    p32 = p.astype(jnp.float32) - lr_t * _dense_part(g, p)
+                    ii = g.idx.astype(jnp.int32)
+                    return row_scatter(p32, ii, -lr_t * g.rows,
+                                        add=True).astype(p.dtype)
+                return (p.astype(jnp.float32) - lr_t * g.astype(jnp.float32)).astype(p.dtype)
+
+            return jax.tree.map(upd, params, grads), state
+
+        def upd_m(m, g):
+            if not (hasattr(m, "ndim") and m.ndim):
+                return m
+            if is_compact(g):
+                m1 = momentum * m + _dense_part(g, m).astype(m.dtype)
+                return row_scatter(m1, g.idx.astype(jnp.int32), g.rows, add=True)
+            if not hasattr(g, "astype"):
+                return m
+            return momentum * m + g.astype(m.dtype)
+
+        new_m = jax.tree.map(upd_m, state["m"], grads)
         new_params = jax.tree.map(
             lambda p, m: (p.astype(jnp.float32) - lr_t * m.astype(jnp.float32)).astype(p.dtype)
             if _is_trainable(p) else p,
@@ -67,7 +137,16 @@ def _is_trainable(p) -> bool:
 
 def adamw(lr: Callable | float, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
           weight_decay: float = 0.0, clip: Optional[float] = None,
-          moment_dtype=jnp.float32):
+          moment_dtype=jnp.float32, lazy: bool = False):
+    """AdamW. ``lazy=True`` applies LazyAdam semantics to CompactGrad leaves:
+    untouched rows keep their moments and parameters unchanged (no decay, no
+    update) — the fully-sparse counterpart of the compact backward. Dense
+    leaves (and the default ``lazy=False``) use standard AdamW.
+
+    Lazy mode relies on the CompactGrad contract that ``dense`` is structural
+    zeros (it is ignored — a site whose backward fell back to a dense path
+    would silently not train; ``with_grad_slots`` guards the known fallback
+    triggers by not emitting slots for them)."""
     lr_fn = lr if callable(lr) else (lambda _: lr)
 
     def init(params):
@@ -82,19 +161,43 @@ def adamw(lr: Callable | float, b1: float = 0.9, b2: float = 0.95, eps: float = 
         c1 = 1.0 - b1 ** t
         c2 = 1.0 - b2 ** t
 
+        def dense_step(p32, mhat, vhat):
+            step_ = mhat / (jnp.sqrt(vhat) + eps)
+            if weight_decay and p32.ndim >= 2:
+                step_ = step_ + weight_decay * p32
+            return step_
+
+        def upd_lazy(p, g, m, v):
+            # touched rows only: gather -> standard AdamW math -> scatter back
+            ii = g.idx.astype(jnp.int32)
+            rows = g.rows.astype(jnp.float32)
+            m_r = b1 * row_gather(m, ii).astype(jnp.float32) + (1 - b1) * rows
+            v_r = b2 * row_gather(v, ii).astype(jnp.float32) + (1 - b2) * jnp.square(rows)
+            p_r = row_gather(p, ii).astype(jnp.float32)
+            step_ = dense_step(p_r, m_r / c1, v_r / c2)
+            return (row_scatter(p, ii, p_r - lr_t * step_, add=False),
+                    row_scatter(m, ii, m_r, add=False),
+                    row_scatter(v, ii, v_r, add=False))
+
         def upd(p, g, m, v):
             if not _is_trainable(p):
                 return p, m, v  # static leaves (shapes, flags) pass through
-            g32 = g.astype(jnp.float32)
-            m_new = b1 * m.astype(jnp.float32) + (1 - b1) * g32
-            v_new = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(g32)
-            mhat = m_new / c1
-            vhat = v_new / c2
-            step_ = mhat / (jnp.sqrt(vhat) + eps)
+            if is_compact(g):
+                if lazy:
+                    return upd_lazy(p, g, m, v)
+                ii = g.idx.astype(jnp.int32)
+                g32 = _dense_part(g, p)
+                m_new = b1 * m.astype(jnp.float32) + (1 - b1) * g32
+                m_new = row_scatter(m_new, ii, (1 - b1) * g.rows, add=True)
+                # disjoint support: (dense + scatter(rows))² has no cross term
+                v_new = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(g32)
+                v_new = row_scatter(v_new, ii, (1 - b2) * jnp.square(g.rows), add=True)
+            else:
+                g32 = g.astype(jnp.float32)
+                m_new = b1 * m.astype(jnp.float32) + (1 - b1) * g32
+                v_new = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(g32)
             p32 = p.astype(jnp.float32)
-            # decoupled weight decay on matrices only (ndim >= 2)
-            if weight_decay and p.ndim >= 2:
-                step_ = step_ + weight_decay * p32
+            step_ = dense_step(p32, m_new / c1, v_new / c2)
             return ((p32 - lr_t * step_).astype(p.dtype),
                     m_new.astype(moment_dtype), v_new.astype(moment_dtype))
 

@@ -27,9 +27,10 @@ import jax.numpy as jnp
 from repro import compat
 from repro.configs.base import ArchConfig
 from repro.core import SketchPolicy
+from repro.core import compact_grad as cgrad
 from repro.models import lm
 from repro.nn.common import Ctx
-from repro.optim import Optimizer
+from repro.optim import Optimizer, global_grad_norm
 
 __all__ = ["TrainState", "make_train_step", "init_state"]
 
@@ -51,8 +52,19 @@ def init_state(key, cfg: ArchConfig, opt: Optimizer) -> TrainState:
 def make_train_step(cfg: ArchConfig, opt: Optimizer, policy: Optional[SketchPolicy] = None,
                     *, mesh=None, act_sharding=None, accum: int = 1,
                     cost_mode: bool = False, data_axes=("data",), model_axes=("model",),
-                    tp_sketch: bool = False):
-    """Returns ``step_fn(state, batch, key) -> (state, metrics)``."""
+                    tp_sketch: bool = False, compact_grads: bool = False):
+    """Returns ``step_fn(state, batch, key) -> (state, metrics)``.
+
+    ``compact_grads=True`` threads per-site gradient slots through the params
+    tree so sketched sites' dW comes out of the backward as a
+    :class:`~repro.core.compact_grad.CompactGrad` (rows + indices, no
+    densify-scatter) and is applied by the optimizer as a sparse-row update.
+    Requires ``accum == 1`` — microbatches sample different index sets, so
+    compact gradients cannot be accumulated.
+    """
+    if compact_grads and accum != 1:
+        raise ValueError("compact_grads requires accum == 1 (compact index "
+                         "sets differ per microbatch; accumulate densely)")
 
     def ctx_for(key):
         return Ctx(policy=policy, key=key, mesh=mesh, cost_mode=cost_mode,
@@ -71,7 +83,15 @@ def make_train_step(cfg: ArchConfig, opt: Optimizer, policy: Optional[SketchPoli
 
     def step_fn(state: TrainState, batch, key):
         if accum == 1:
-            loss, metrics, grads = one_micro(state.params, batch, key)
+            params_in = state.params
+            if compact_grads:
+                params_in = cgrad.with_grad_slots(
+                    state.params, policy, mesh=mesh, data_axes=data_axes,
+                    model_axes=model_axes, tp_sketch=tp_sketch,
+                    n_layers=cfg.n_layers)
+            loss, metrics, grads = one_micro(params_in, batch, key)
+            if compact_grads:
+                grads = cgrad.fold_slot_grads(grads)
         else:
             def micro(carry, xs):
                 mb, mkey = xs
@@ -102,5 +122,4 @@ def make_train_step(cfg: ArchConfig, opt: Optimizer, policy: Optional[SketchPoli
 
 
 def _global_norm(tree):
-    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
-                        for g in compat.tree_leaves(tree)))
+    return global_grad_norm(tree)

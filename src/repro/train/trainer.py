@@ -40,7 +40,7 @@ class TrainerConfig:
 def train(cfg: ArchConfig, opt: Optimizer, data: Iterable, tcfg: TrainerConfig,
           policy: Optional[SketchPolicy] = None, *, mesh=None,
           act_sharding=None, data_axes=("data",), model_axes=("model",),
-          tp_sketch: bool = False,
+          tp_sketch: bool = False, compact_grads: bool = False,
           state: Optional[TrainState] = None,
           on_metrics: Optional[Callable] = None):
     """Run the loop; returns (final_state, history list of metric dicts).
@@ -49,6 +49,9 @@ def train(cfg: ArchConfig, opt: Optimizer, data: Iterable, tcfg: TrainerConfig,
     ``tp_sketch``) are forwarded to every compiled step so the trainer drives
     the same sharded sketched path as launch/dryrun — including the TP-local
     compact sketch with the compressed DP gradient reduce-scatter.
+    ``compact_grads`` keeps sketched dW compact (rows + indices) from the
+    backward through clipping into sparse-row optimizer updates (see
+    docs/perf.md).
     """
     key = compat.prng_key(tcfg.seed)
     if state is None:
@@ -65,7 +68,8 @@ def train(cfg: ArchConfig, opt: Optimizer, data: Iterable, tcfg: TrainerConfig,
     controller = None
     steps_by_budget = {}
     step_kw = dict(mesh=mesh, act_sharding=act_sharding, data_axes=data_axes,
-                   model_axes=model_axes, tp_sketch=tp_sketch)
+                   model_axes=model_axes, tp_sketch=tp_sketch,
+                   compact_grads=compact_grads)
     if tcfg.straggler_budgets and policy is not None:
         controller = StragglerController(tcfg.straggler_budgets)
         for b in tcfg.straggler_budgets:

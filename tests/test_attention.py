@@ -59,3 +59,32 @@ def test_decode_matches_full_last_position():
     cfg = AttnCfg(n_heads=H, n_kv=Kv, d_head=dh)
     got = decode_attention(q_full[:, -1:], k, v, S - 1, cfg)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+def test_rope_broadcast_gets_sharding_annotation():
+    """ROADMAP item: RoPE's [B, S, 1, d/2] cos/sin broadcast must carry a
+    sharding annotation under a mesh ctx so SPMD stops involuntarily
+    rematerializing it in the backward of production train cells (the
+    dryrun stderr check lives in test_distributed's slow subprocess test)."""
+    from repro.launch.mesh import make_mesh
+    from repro.nn.common import Ctx
+    from repro.nn.rope import apply_rope
+
+    if jax.device_count() < 8:
+        pytest.skip("needs the 8 fake host devices forced by conftest")
+    mesh = make_mesh((2, 4), ("data", "model"))
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    ctx = Ctx(mesh=mesh, data_axes=("data",), model_axes=("model",),
+              act_sharding=NamedSharding(mesh, P(("data",), None, None)))
+    x = jnp.ones((4, 8, 2, 16))
+    pos = jnp.broadcast_to(jnp.arange(8)[None], (4, 8))
+    jaxpr = str(jax.make_jaxpr(lambda xx, pp: apply_rope(xx, pp, 1e4, ctx=ctx))(x, pos))
+    assert "sharding_constraint" in jaxpr
+    # no ctx -> no constraint (decode / single-device paths unchanged)
+    jaxpr0 = str(jax.make_jaxpr(lambda xx, pp: apply_rope(xx, pp, 1e4))(x, pos))
+    assert "sharding_constraint" not in jaxpr0
+    # annotated and unannotated paths compute the same thing
+    np.testing.assert_allclose(
+        np.asarray(apply_rope(x, pos, 1e4, ctx=ctx)),
+        np.asarray(apply_rope(x, pos, 1e4)), rtol=1e-6)

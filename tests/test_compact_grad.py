@@ -1,0 +1,232 @@
+"""CompactGrad pipeline: pytree/densify semantics, optimizer equivalence
+dense-vs-compact (SGD / momentum / AdamW, incl. lazy decay), clipping, and
+end-to-end train-step equivalence between compact-grad mode and the dense
+scatter path for the same key."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import compat
+from repro.configs.base import ArchConfig
+from repro.core import CompactGrad, SketchConfig, SketchPolicy
+from repro.core.compact_grad import (compact_rank, densify, fold_slot_grads,
+                                     with_grad_slots)
+from repro.optim import adamw, clip_by_global_norm, global_grad_norm, sgd
+
+
+def _cg(n=8, d=4, idx=(1, 5), seed=0):
+    rng = np.random.default_rng(seed)
+    rows = jnp.asarray(rng.normal(size=(len(idx), d)), jnp.float32)
+    return CompactGrad(rows=rows, idx=jnp.asarray(idx, jnp.float32)), (n, d)
+
+
+def test_densify_and_norm_match_dense():
+    cg, (n, d) = _cg()
+    like = jnp.zeros((n, d))
+    dense = densify(cg, like)
+    assert dense.shape == (n, d)
+    np.testing.assert_allclose(np.asarray(dense[1]), np.asarray(cg.rows[0]))
+    assert float(jnp.sum(jnp.abs(dense))) == pytest.approx(
+        float(jnp.sum(jnp.abs(cg.rows))), rel=1e-6)
+    # norm treats CompactGrad == its densified form
+    got = float(global_grad_norm({"w": cg}))
+    want = float(global_grad_norm({"w": dense}))
+    assert got == pytest.approx(want, rel=1e-6)
+
+
+def test_densify_stacked():
+    rows = jnp.arange(2 * 2 * 3, dtype=jnp.float32).reshape(2, 2, 3)
+    idx = jnp.asarray([[0, 2], [1, 3]], jnp.float32)
+    cg = CompactGrad(rows=rows, idx=idx)
+    dense = densify(cg, jnp.zeros((2, 4, 3)))
+    np.testing.assert_allclose(np.asarray(dense[0, 2]), np.asarray(rows[0, 1]))
+    np.testing.assert_allclose(np.asarray(dense[1, 1]), np.asarray(rows[1, 0]))
+    assert float(jnp.sum(dense)) == pytest.approx(float(jnp.sum(rows)))
+
+
+def test_clip_matches_dense():
+    cg, (n, d) = _cg()
+    dense = densify(cg, jnp.zeros((n, d)))
+    (c_cg,), gn_cg = clip_by_global_norm((cg,), 0.1)
+    (c_de,), gn_de = clip_by_global_norm((dense,), 0.1)
+    assert float(gn_cg) == pytest.approx(float(gn_de), rel=1e-6)
+    np.testing.assert_allclose(np.asarray(densify(c_cg, jnp.zeros((n, d)))),
+                               np.asarray(c_de), rtol=1e-6)
+
+
+@pytest.mark.parametrize("mk", [lambda: sgd(0.1), lambda: sgd(0.1, momentum=0.9),
+                                lambda: adamw(1e-2, weight_decay=0.1)],
+                         ids=["sgd", "sgd_momentum", "adamw"])
+def test_optimizer_update_dense_vs_compact(mk):
+    """Updating with a CompactGrad equals updating with its densified form
+    (dense part structurally zero — the compact-backward invariant)."""
+    cg, (n, d) = _cg(n=16, d=8, idx=(0, 3, 9))
+    cg = CompactGrad(rows=cg.rows, idx=cg.idx, dense=jnp.zeros((16, 8)))
+    params = {"w": jnp.asarray(np.random.default_rng(1).normal(size=(16, 8)),
+                               jnp.float32)}
+    step = jnp.asarray(0)
+    opt_c, opt_d = mk(), mk()
+    st_c, st_d = opt_c.init(params), opt_d.init(params)
+    pc, pd = params, params
+    for t in range(3):
+        pc, st_c = opt_c.update({"w": cg}, st_c, pc, step + t)
+        pd, st_d = opt_d.update({"w": densify(cg, params["w"])}, st_d, pd, step + t)
+    np.testing.assert_allclose(np.asarray(pc["w"]), np.asarray(pd["w"]),
+                               rtol=1e-6, atol=1e-7)
+
+
+def test_adamw_lazy_decay_semantics():
+    """lazy=True: touched rows get the standard AdamW update; untouched rows
+    keep params AND moments frozen (no decay)."""
+    cg, (n, d) = _cg(n=10, d=4, idx=(2, 7))
+    params = {"w": jnp.ones((10, 4))}
+    opt = adamw(1e-2, weight_decay=0.1, lazy=True)
+    st = opt.init(params)
+    # seed nonzero moments so frozen-decay is observable
+    st = {"m": {"w": jnp.full((10, 4), 0.5)}, "v": {"w": jnp.full((10, 4), 0.25)}}
+    new_p, new_st = opt.update({"w": cg}, st, params, jnp.asarray(3))
+
+    untouched = np.asarray([i for i in range(10) if i not in (2, 7)])
+    np.testing.assert_array_equal(np.asarray(new_p["w"])[untouched],
+                                  np.asarray(params["w"])[untouched])
+    np.testing.assert_array_equal(np.asarray(new_st["m"]["w"])[untouched],
+                                  np.asarray(st["m"]["w"])[untouched])
+    # touched rows match the dense update restricted to those rows
+    opt_d = adamw(1e-2, weight_decay=0.1)
+    pd, std = opt_d.update({"w": densify(cg, params["w"])}, st, params, jnp.asarray(3))
+    for i in (2, 7):
+        np.testing.assert_allclose(np.asarray(new_p["w"][i]), np.asarray(pd["w"][i]),
+                                   rtol=1e-6)
+        np.testing.assert_allclose(np.asarray(new_st["v"]["w"][i]),
+                                   np.asarray(std["v"]["w"][i]), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Slot building / folding
+# ---------------------------------------------------------------------------
+
+
+def _arch():
+    return ArchConfig(name="t", family="dense", n_layers=2, d_model=32, n_heads=4,
+                      n_kv=2, d_ff=64, vocab=64, q_chunk=16, kv_chunk=16)
+
+
+def test_with_grad_slots_places_and_sizes_slots():
+    from repro.models import lm
+
+    cfg = _arch()
+    params = lm.init_params(compat.prng_key(0), cfg)
+    pol = SketchPolicy(base=SketchConfig(method="l1", budget=0.5, backend="compact"))
+    aug = with_grad_slots(params, pol, n_layers=cfg.n_layers)
+    site = aug["segments"][0][0]["mlp"]["in"]
+    assert isinstance(site["gslot"], CompactGrad)
+    # stacked over the 2 scanned layers; r = budget * d_ff
+    assert site["gslot"].rows.shape == (2, compact_rank(pol.base, cfg.d_ff), cfg.d_model)
+    assert site["gslot"].idx.shape == (2, compact_rank(pol.base, cfg.d_ff))
+    # head/embed are excluded (policy excludes lm_head; embed is not a site)
+    assert "gslot" not in aug.get("lm_head", {})
+    # mask policy ⇒ no slots anywhere
+    aug_mask = with_grad_slots(
+        params, SketchPolicy(base=SketchConfig(method="l1", budget=0.5)), n_layers=2)
+    assert jax.tree.structure(aug_mask) == jax.tree.structure(params)
+
+
+def test_no_slots_for_shared_or_location_policies():
+    """Multi-use weights (zamba2-style shared attention, applied every period
+    repetition) must NOT get slots: JAX sums per-use slot cotangents
+    leafwise, adding the index vectors of different plans. Likewise
+    location-based policies (per-layer config differs from the layer-0 one
+    the builder mirrors) keep the dense path."""
+    from repro.models import lm
+    from repro.configs.registry import smoke_config
+
+    cfg = smoke_config("zamba2_7b")
+    params = lm.init_params(compat.prng_key(0), cfg)
+    pol = SketchPolicy(base=SketchConfig(method="l1", budget=0.5, backend="compact"))
+    aug = with_grad_slots(params, pol, n_layers=cfg.n_layers)
+    shared_leaves = jax.tree.leaves(aug["shared"], is_leaf=lambda x: isinstance(x, CompactGrad))
+    assert not any(isinstance(x, CompactGrad) for x in shared_leaves)
+
+    loc_pol = SketchPolicy(base=SketchConfig(method="l1", budget=0.5,
+                                             backend="compact"), location="first")
+    aug_loc = with_grad_slots(params, loc_pol, n_layers=cfg.n_layers)
+    assert jax.tree.structure(aug_loc) == jax.tree.structure(params)
+
+
+def test_shared_arch_compact_train_step_runs_and_matches():
+    """End-to-end guard for the shared-weight exclusion: zamba2 smoke under
+    compact_grads must match the dense-path step (shared block dense, mamba
+    sites dense, mlp sites compact)."""
+    from repro.configs.registry import smoke_config
+    from repro.train.train_step import init_state, make_train_step
+
+    cfg = smoke_config("zamba2_7b").replace(n_layers=4, remat="none")
+    policy = SketchPolicy(base=SketchConfig(method="l1", budget=0.5, backend="compact"))
+    opt, opt2 = sgd(0.1), sgd(0.1)
+    state = init_state(compat.prng_key(0), cfg, opt)
+    toks = jax.random.randint(compat.prng_key(1), (2, 8), 0, cfg.vocab)
+    batch = {"tokens": toks, "labels": toks}
+    key = compat.prng_key(2)
+    s_d, m_d = jax.jit(make_train_step(cfg, opt, policy))(state, batch, key)
+    s_c, m_c = jax.jit(make_train_step(cfg, opt2, policy,
+                                       compact_grads=True))(state, batch, key)
+    np.testing.assert_allclose(float(m_d["loss"]), float(m_c["loss"]), rtol=1e-6)
+    for a, b in zip(compat.tree_leaves(s_d.params), compat.tree_leaves(s_c.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-5, atol=2e-6)
+
+
+def test_fold_slot_grads_roundtrip():
+    g = {"site": {"w": jnp.zeros((4, 3)),
+                  "gslot": CompactGrad(rows=jnp.ones((2, 3)),
+                                       idx=jnp.asarray([0.0, 2.0]))},
+         "other": {"w": jnp.ones((2, 2))}}
+    folded = fold_slot_grads(g)
+    assert isinstance(folded["site"]["w"], CompactGrad)
+    assert folded["site"]["w"].dense is not None
+    assert "gslot" not in folded["site"]
+    assert not isinstance(folded["other"]["w"], CompactGrad)
+    np.testing.assert_allclose(
+        np.asarray(densify(folded["site"]["w"])),
+        np.asarray(jnp.zeros((4, 3)).at[jnp.asarray([0, 2])].add(jnp.ones((2, 3)))))
+
+
+# ---------------------------------------------------------------------------
+# End-to-end: compact-grad train step == dense train step (same key)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend,block,optname", [
+    ("compact", 0, "adamw"),   # per-column XLA path, moment updates
+    ("compact", 4, "sgd"),     # block-fused XLA oracle path, momentum
+    ("pallas", 4, "sgd"),      # fused Pallas-dispatch path
+])
+def test_train_step_compact_equals_dense(backend, block, optname):
+    from repro.train.train_step import init_state, make_train_step
+
+    cfg = _arch()
+    mk = {"sgd": lambda: sgd(0.1, momentum=0.9), "adamw": lambda: adamw(1e-2)}[optname]
+    policy = SketchPolicy(base=SketchConfig(method="l1", budget=0.5,
+                                            backend=backend, block=block))
+    opt = mk()
+    state = init_state(compat.prng_key(0), cfg, opt)
+    toks = jax.random.randint(compat.prng_key(1), (4, 16), 0, cfg.vocab)
+    batch = {"tokens": toks, "labels": toks}
+    key = compat.prng_key(2)
+    s_dense, m_dense = jax.jit(make_train_step(cfg, opt, policy))(state, batch, key)
+    s_comp, m_comp = jax.jit(make_train_step(cfg, mk(), policy,
+                                             compact_grads=True))(state, batch, key)
+    np.testing.assert_allclose(float(m_dense["loss"]), float(m_comp["loss"]), rtol=1e-6)
+    np.testing.assert_allclose(float(m_dense["grad_norm"]), float(m_comp["grad_norm"]),
+                               rtol=1e-4)
+    for a, b in zip(compat.tree_leaves(s_dense.params), compat.tree_leaves(s_comp.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-5, atol=2e-6)
+
+
+def test_compact_grads_rejects_accum():
+    from repro.train.train_step import make_train_step
+
+    with pytest.raises(ValueError, match="accum"):
+        make_train_step(_arch(), sgd(0.1),
+                        SketchPolicy(base=SketchConfig(backend="compact")),
+                        compact_grads=True, accum=2)

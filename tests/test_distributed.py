@@ -156,6 +156,44 @@ def test_sharded_sketched_train_step(mesh24, backend):
                                        rtol=2e-3, atol=2e-4)
 
 
+def test_sharded_compact_grads_match_scatter_path(mesh24):
+    """Compact-gradient mode on the 2x4 mesh: the TP-local sketch emits
+    CompactGrad (rows + global indices, reduce-scattered over dp) and the
+    optimizer applies the sparse-row update — the result must equal the
+    pre-existing path that scatters dW inside shard_map and updates densely,
+    for the same step key (identical plans)."""
+    from repro.optim import sgd
+    from repro.train.train_step import make_train_step
+
+    policy = SketchPolicy(base=SketchConfig(method="l1", budget=0.5,
+                                            backend="compact", block=4))
+    _, state, batch, key, _, step_scatter = _single_and_sharded_steps(
+        mesh24, policy=policy, tp_sketch=True)
+
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.launch import sharding as shard
+    from repro.train.train_step import TrainState
+
+    pspecs = shard.param_shardings(state.params, mesh24)
+    sshard = TrainState(params=pspecs, opt_state={k: pspecs for k in state.opt_state},
+                        step=NamedSharding(mesh24, P()))
+    act = NamedSharding(mesh24, P(("data",), None, None))
+    bspec = {k: NamedSharding(mesh24, P("data", None)) for k in batch}
+    step_cg = make_train_step(_arch(), sgd(0.1), policy, mesh=mesh24,
+                              act_sharding=act, data_axes=("data",),
+                              model_axes=("model",), tp_sketch=True,
+                              compact_grads=True)
+    step_cg = jax.jit(step_cg, in_shardings=(sshard, bspec, NamedSharding(mesh24, P())))
+
+    s0, m0 = step_scatter(state, batch, key)
+    s1, m1 = step_cg(state, batch, key)
+    np.testing.assert_allclose(float(m0["loss"]), float(m1["loss"]), rtol=1e-5)
+    np.testing.assert_allclose(float(m0["grad_norm"]), float(m1["grad_norm"]), rtol=1e-3)
+    for a, b in zip(compat.tree_leaves(s0.params), compat.tree_leaves(s1.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-5, atol=2e-6)
+
+
 def test_elastic_restore_across_meshes(tmp_path):
     from repro.optim import adamw
     from repro.train import checkpoint as ck
@@ -233,6 +271,33 @@ def _run(code: str, devices: int = 8, timeout: int = 900):
                        timeout=timeout, env=env, cwd=ROOT)
     assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr[-4000:]}"
     return r.stdout
+
+
+@pytest.mark.slow
+def test_rope_remat_warning_gone_in_dryrun_compile():
+    """ROADMAP item: compiling a production train cell must no longer log
+    `[spmd] Involuntary full rematerialization` for nn/rope.py (the position
+    broadcast now carries a sharding annotation). XLA logs to the C++ stderr,
+    so this check needs a subprocess."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(ROOT, "src") + os.pathsep + env.get("PYTHONPATH", "")
+    r = subprocess.run([sys.executable, "-c", """
+import repro.launch.dryrun as dr
+from repro.configs.base import ShapeCell
+from repro.configs.registry import smoke_config
+from repro.launch.mesh import make_mesh
+mesh = make_mesh((2, 4), ("data", "model"))
+cfg = smoke_config("yi_6b").replace(n_layers=4)
+fn, args = dr._builder(cfg, ShapeCell("t", 64, 8, "train"), mesh,
+                       dr._POLICIES["compact"], cost_mode=False)
+fn.lower(*args).compile()
+print("COMPILED")
+"""], capture_output=True, text=True, timeout=900, env=env, cwd=ROOT)
+    assert "COMPILED" in r.stdout, r.stderr[-4000:]
+    rope_remats = [l for l in r.stderr.splitlines()
+                   if "Involuntary full rematerialization" in l and "rope.py" in l]
+    assert not rope_remats, rope_remats[:2]
 
 
 @pytest.mark.slow

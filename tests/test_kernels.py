@@ -9,7 +9,8 @@ import pytest
 from repro.kernels import ref
 from repro.kernels.col_scores import col_l1_scores
 from repro.kernels.flash_attention import flash_attention
-from repro.kernels.sketch_matmul import block_gather_matmul, block_gather_matmul_dw
+from repro.kernels.sketch_matmul import (block_gather_matmul, block_gather_matmul_dw,
+                                         block_gather_matmul_fused)
 
 
 def _tol(dt):
@@ -39,6 +40,61 @@ def test_block_gather_matmul(N, n, d, rb, bs, dt):
     want2 = ref.block_gather_matmul_dw_ref(G, idx, sc, X, block=bs)
     np.testing.assert_allclose(np.asarray(got2, np.float32), np.asarray(want2, np.float32),
                                rtol=_tol(dt), atol=_tol(dt))
+
+
+@pytest.mark.parametrize("N,n,d,rb,bs,dt", [
+    (64, 512, 384, 2, 128, jnp.float32),
+    (100, 256, 130, 1, 128, jnp.float32),
+    (256, 1024, 512, 4, 128, jnp.bfloat16),
+    (32, 256, 96, 2, 64, jnp.float32),
+    (8, 128, 64, 1, 128, jnp.float32),
+])
+def test_block_gather_matmul_fused(N, n, d, rb, bs, dt):
+    """Fused one-pass kernel: BIT-identical to the unfused pair for the same
+    plan (same tiles, same accumulation order), allclose to the jnp oracle."""
+    ks = jax.random.split(jax.random.key(N * n + d), 4)
+    G = jax.random.normal(ks[0], (N, n), dt)
+    W = jax.random.normal(ks[1], (n, d), dt)
+    X = jax.random.normal(ks[2], (N, d), dt)
+    nb = n // bs
+    idx = jnp.sort(jax.random.choice(ks[3], nb, (rb,), replace=False)).astype(jnp.int32)
+    sc = jax.random.uniform(ks[3], (rb,), minval=0.5, maxval=2.0)
+
+    dX, dWc, db = block_gather_matmul_fused(G, idx, sc, W, X, block=bs, interpret=True)
+    dX_u = block_gather_matmul(G, idx, sc, W, block=bs, interpret=True)
+    dW_u = block_gather_matmul_dw(G, idx, sc, X, block=bs, interpret=True)
+    np.testing.assert_array_equal(np.asarray(dX, np.float32), np.asarray(dX_u, np.float32))
+    np.testing.assert_array_equal(np.asarray(dWc, np.float32), np.asarray(dW_u, np.float32))
+
+    rdX, rdW, rdb = ref.block_gather_matmul_fused_ref(G, idx, sc, W, X, block=bs)
+    tol = 2e-2 if dt == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(dX, np.float32), np.asarray(rdX, np.float32),
+                               rtol=tol, atol=tol)
+    np.testing.assert_allclose(np.asarray(dWc, np.float32), np.asarray(rdW, np.float32),
+                               rtol=tol, atol=tol)
+    np.testing.assert_allclose(np.asarray(db), np.asarray(rdb), rtol=tol, atol=tol * 10)
+
+
+def test_fused_ref_matches_manual():
+    """The fused oracle's three outputs equal the independent formulas."""
+    ks = jax.random.split(jax.random.key(7), 4)
+    N, n, d, bs = 24, 64, 40, 16
+    G = jax.random.normal(ks[0], (N, n))
+    W = jax.random.normal(ks[1], (n, d))
+    X = jax.random.normal(ks[2], (N, d))
+    idx = jnp.asarray([0, 2], jnp.int32)
+    sc = jnp.asarray([1.5, 0.5], jnp.float32)
+    dX, dWc, db = ref.block_gather_matmul_fused_ref(G, idx, sc, W, X, block=bs)
+    np.testing.assert_allclose(
+        np.asarray(dX), np.asarray(ref.block_gather_matmul_ref(G, idx, sc, W, block=bs)),
+        rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(dWc), np.asarray(ref.block_gather_matmul_dw_ref(G, idx, sc, X, block=bs)),
+        rtol=1e-5, atol=1e-5)
+    cols = (idx[:, None] * bs + jnp.arange(bs)).reshape(-1)
+    want_db = (jnp.take(G, cols, axis=1) * jnp.repeat(sc, bs)[None, :]).sum(0)
+    np.testing.assert_allclose(np.asarray(db).reshape(-1), np.asarray(want_db),
+                               rtol=1e-5, atol=1e-5)
 
 
 @pytest.mark.parametrize("N,n,dt,mode", [

@@ -14,6 +14,14 @@ from repro.nn.common import Ctx
 
 POLICY = SketchPolicy(base=SketchConfig(method="l1", budget=0.5))
 
+# The sketched-train-step smoke of these archs is grad-compile bound (25-40 s
+# each: 6-sub-block local:global period / mamba+shared-attn period under
+# remat) and dominates tier-1 wall time. Their forward, decode-parity and
+# struct tests stay in tier-1; the train step runs under `-m slow` (ROADMAP
+# wall-time item). All other archs keep full tier-1 coverage of the same
+# sketched-backward code paths.
+_SLOW_TRAIN_STEP = ("gemma3_1b", "zamba2_7b", "seamless_m4t_large_v2")
+
 
 def _batch(cfg, B=2, S=24):
     ks = jax.random.split(jax.random.key(0), 3)
@@ -29,7 +37,7 @@ def _batch(cfg, B=2, S=24):
 
 
 @pytest.mark.parametrize("arch", ARCH_IDS)
-def test_forward_and_sketched_train_step(arch):
+def test_forward(arch):
     cfg = smoke_config(arch)
     params = lm.init_params(jax.random.key(1), cfg)
     batch = _batch(cfg)
@@ -38,6 +46,15 @@ def test_forward_and_sketched_train_step(arch):
     logits, aux = lm.forward(params, batch, Ctx(), cfg)
     assert logits.shape == (B, S, cfg.vocab)
     assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+@pytest.mark.parametrize("arch", [
+    pytest.param(a, marks=pytest.mark.slow) if a in _SLOW_TRAIN_STEP else a
+    for a in ARCH_IDS])
+def test_sketched_train_step(arch):
+    cfg = smoke_config(arch)
+    params = lm.init_params(jax.random.key(1), cfg)
+    batch = _batch(cfg)
 
     loss, grads = jax.jit(lambda p, k: jax.value_and_grad(
         lambda q: lm.lm_loss(q, batch, Ctx(policy=POLICY), cfg, k)[0])(p))(

@@ -130,3 +130,34 @@ def test_sketch_dense_zero_columns_stay_zero():
     for i in range(5):
         ghat = sketch_dense(cfg, G, None, jax.random.key(i))
         np.testing.assert_allclose(np.asarray(ghat[:, 3:]), 0.0)
+
+
+def test_pallas_score_routing_matches_jnp_scores():
+    """ℓ1/ℓ2 (and _sq) scores on the pallas backend route through the
+    kernels.ops.col_l1_scores dispatcher (streaming fp32 reduction) and must
+    produce the same sampling probabilities as the jnp scores used by the
+    mask/compact backends."""
+    import os
+
+    from repro.core.sketching import _column_probs, _proxy_scores
+    from repro.core.scores import column_scores
+
+    G = jax.random.normal(jax.random.key(3), (64, 128), jnp.float32)
+    for method in ("l1", "l2", "l1_sq", "l2_sq"):
+        cfg_p = SketchConfig(method=method, budget=0.25, backend="pallas")
+        cfg_m = SketchConfig(method=method, budget=0.25, backend="mask")
+        sp = _proxy_scores(cfg_p, G, None)
+        sm = column_scores(method, G)
+        np.testing.assert_allclose(np.asarray(sp), np.asarray(sm), rtol=1e-5)
+        pp = _column_probs(cfg_p, G, None, 32)
+        pm = _column_probs(cfg_m, G, None, 32)
+        np.testing.assert_allclose(np.asarray(pp), np.asarray(pm), rtol=1e-5)
+    # and through the actual Pallas kernel (interpret mode): same scores
+    os.environ["REPRO_FORCE_INTERPRET"] = "1"
+    try:
+        sp_k = _proxy_scores(SketchConfig(method="l1", budget=0.25, backend="pallas"),
+                             G, None)
+        np.testing.assert_allclose(np.asarray(sp_k),
+                                   np.asarray(column_scores("l1", G)), rtol=1e-5)
+    finally:
+        del os.environ["REPRO_FORCE_INTERPRET"]
