@@ -55,6 +55,25 @@ def _fused_site_bwd(cfg, G2d, X2d, w, key):
     return dX, dWc.reshape(-1, w.shape[1]), cols, db_blk.reshape(-1)
 
 
+def _fallback_site_bwd(cfg, G2d, X2d, w, key):
+    """The VMEM-overflow fallback shape of ops.block_gather_matmul_fused:
+    one pass for dX (the Pallas dX kernel on TPU; its XLA oracle here) plus
+    ONE shared gather feeding compact dW and compact db
+    (ref.block_gather_matmul_dw_db_ref) — 2 passes over kept G, not the
+    pre-PR 3 (unfused kernel pair + separate db gather)."""
+    from repro.kernels import ref as kref
+
+    lcfg = effective_cfg(cfg, G2d.shape[-1])
+    plan = column_plan(lcfg, G2d, w, key, want_compact=True)
+    dX = kref.block_gather_matmul_ref(G2d, plan.indices, plan.scales, w,
+                                      block=lcfg.block)
+    dWc, db_blk = kref.block_gather_matmul_dw_db_ref(
+        G2d, plan.indices, plan.scales, X2d, block=lcfg.block)
+    bs = lcfg.block
+    cols = (plan.indices[:, None] * bs + jnp.arange(bs, dtype=plan.indices.dtype)).reshape(-1)
+    return dX, dWc.reshape(-1, w.shape[1]), cols, db_blk.reshape(-1)
+
+
 def _unfused_site_bwd(cfg, G2d, X2d, w, key):
     """Pre-PR backward shape: block plan expanded to per-column indices,
     per-column gathers for dX/dW, a second db gather, densify-scatter."""
@@ -120,6 +139,8 @@ def g_pass_accounting(budget: float, *, N=2048, n=1024, d=256, block=128) -> dic
 
     c_fused = jax.jit(lambda G, x, w, k: _fused_site_bwd(cfg, G, x, w, k)) \
         .lower(G, x, w, key).compile()
+    c_fallback = jax.jit(lambda G, x, w, k: _fallback_site_bwd(cfg, G, x, w, k)) \
+        .lower(G, x, w, key).compile()
     c_unfused = jax.jit(lambda G, x, w, k: _unfused_site_bwd(cfg, G, x, w, k)) \
         .lower(G, x, w, key).compile()
 
@@ -131,17 +152,21 @@ def g_pass_accounting(budget: float, *, N=2048, n=1024, d=256, block=128) -> dic
                 float(ca.get("bytes accessed", 0.0)))
 
     readers_fused, bytes_fused = stats(c_fused)
+    readers_fallback, bytes_fallback = stats(c_fallback)
     readers_unfused, bytes_unfused = stats(c_unfused)
     rec = {
         "shape": {"N": N, "n": n, "d": d, "block": block, "budget": budget},
         "g_bytes": N * n * 4,
         "g_passes_fused": readers_fused,
+        "g_passes_fallback": readers_fallback,
         "g_passes_unfused": readers_unfused,
         "bytes_accessed_fused_bwd": bytes_fused,
+        "bytes_accessed_fallback_bwd": bytes_fallback,
         "bytes_accessed_unfused_bwd": bytes_unfused,
     }
     print(f"  G readers (HBM passes over G): fused {readers_fused} "
-          f"(bytes model {bytes_fused/1e6:.1f} MB)  vs pre-PR shape "
+          f"(bytes model {bytes_fused/1e6:.1f} MB)  vmem-fallback "
+          f"{readers_fallback} ({bytes_fallback/1e6:.1f} MB)  vs pre-PR shape "
           f"{readers_unfused} ({bytes_unfused/1e6:.1f} MB)")
     return rec
 
@@ -154,11 +179,12 @@ def g_pass_accounting(budget: float, *, N=2048, n=1024, d=256, block=128) -> dic
 def _mesh_step_time(budget: float, reps: int, tiny: bool) -> dict:
     from jax.sharding import NamedSharding, PartitionSpec as P
 
+    from repro.api import ExecutionConfig, Runtime
     from repro.configs.base import ArchConfig
     from repro.launch import sharding as shard
     from repro.launch.mesh import make_mesh
     from repro.optim import sgd
-    from repro.train.train_step import TrainState, init_state, make_train_step
+    from repro.train.train_step import TrainState, init_state
 
     if jax.device_count() < 8:
         print("bench_backward_fusion: needs 8 fake host devices; skipping "
@@ -205,10 +231,10 @@ def _mesh_step_time(budget: float, reps: int, tiny: bool) -> dict:
     }
     out = {}
     for name, kw in variants.items():
-        step = make_train_step(arch, opt, kw["policy"], mesh=mesh, act_sharding=act,
-                               data_axes=("data",), model_axes=("model",),
-                               tp_sketch=kw["tp_sketch"],
-                               compact_grads=kw["compact_grads"])
+        runtime = Runtime(policy=kw["policy"], execution=ExecutionConfig(
+            mesh=mesh, act_sharding=act, tp_sketch=kw["tp_sketch"],
+            compact_grads=kw["compact_grads"]))
+        step = runtime.train_step(arch, opt, jitted=False)
         fn = jax.jit(step, in_shardings=(sshard, bspec, NamedSharding(mesh, P())))
         s, m = fn(state, batch, key)  # warmup / compile
         jax.block_until_ready(m["loss"])

@@ -9,19 +9,20 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import save_result
+from repro.api import ExecutionConfig, Runtime, SketchConfig, SketchPolicy
 from repro.configs.registry import smoke_config
-from repro.core import SketchConfig, SketchPolicy
 from repro.models import lm
-from repro.nn.common import Ctx
 
 
 def _flops(cfg, policy):
     toks = jax.ShapeDtypeStruct((8, 128), jnp.int32)
     batch = {"tokens": toks, "labels": toks}
     key = jax.ShapeDtypeStruct((), jax.random.key(0).dtype)
+    runtime = Runtime(policy=policy,
+                      execution=ExecutionConfig(cost_mode=True))
 
     def loss(p, b, k):
-        return lm.lm_loss(p, b, Ctx(policy=policy, key=k, cost_mode=True), cfg, k)[0]
+        return lm.lm_loss(p, b, runtime.ctx(k), cfg, k)[0]
 
     params = jax.eval_shape(lambda k: lm.init_params(k, cfg), key)
     g = jax.jit(jax.grad(loss))

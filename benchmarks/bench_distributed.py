@@ -27,13 +27,13 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from benchmarks.common import save_result
 from repro import compat
+from repro.api import ExecutionConfig, Runtime, SketchConfig, SketchPolicy
 from repro.configs.base import ArchConfig
-from repro.core import SketchConfig, SketchPolicy
 from repro.launch import sharding as shard
 from repro.launch.hlo_analysis import collective_bytes
 from repro.launch.mesh import make_mesh
 from repro.optim import sgd
-from repro.train.train_step import TrainState, init_state, make_train_step
+from repro.train.train_step import TrainState, init_state
 
 
 def _variants(budget: float) -> dict:
@@ -75,9 +75,9 @@ def run(quick: bool = True, budget: float = 0.25, reps: int = 5) -> dict:
 
     out = {"mesh": "2x4", "budget": budget, "variants": {}}
     for name, (policy, tp) in _variants(budget).items():
-        step = make_train_step(arch, opt, policy, mesh=mesh, act_sharding=act,
-                               data_axes=("data",), model_axes=("model",),
-                               tp_sketch=tp)
+        runtime = Runtime(policy=policy, execution=ExecutionConfig(
+            mesh=mesh, act_sharding=act, tp_sketch=tp))
+        step = runtime.train_step(arch, opt, jitted=False)
         fn = jax.jit(step, in_shardings=(sshard, bspec, NamedSharding(mesh, P())))
         compiled = fn.lower(state, batch, key).compile()
         coll = collective_bytes(compiled.as_text())

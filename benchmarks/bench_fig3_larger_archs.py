@@ -11,17 +11,18 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import make_policy, save_result
+from repro.api import Runtime
 from repro.data.synthetic import classification
 from repro.models.vision import bagnet_apply, bagnet_init, cls_loss, vit_apply, vit_init
-from repro.nn.common import Ctx
 from repro.optim import adamw, cosine_warmup, sgd
 
 
 def _train(apply_fn, params, policy, data, *, epochs, batch, opt, seed=0):
     (xtr, ytr), (xte, yte) = data
+    runtime = Runtime(policy=policy)
 
     def loss_fn(p, b, key):
-        return cls_loss(apply_fn, p, b, Ctx(policy=policy, key=key))
+        return cls_loss(apply_fn, p, b, runtime.ctx(key))
 
     state = opt.init(params)
 
@@ -33,7 +34,7 @@ def _train(apply_fn, params, policy, data, *, epochs, batch, opt, seed=0):
 
     @jax.jit
     def ev(p, x, y):
-        return cls_loss(apply_fn, p, {"x": x, "y": y}, Ctx())[1]
+        return cls_loss(apply_fn, p, {"x": x, "y": y}, runtime.ctx(budget=None))[1]
 
     n = xtr.shape[0]
     spe = n // batch

@@ -8,10 +8,10 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import make_policy, mlp_data, save_result
+from repro.api import Runtime
 from repro.core import variance as varlib
 from repro.core import static_rank
 from repro.models.mlp import mlp_init, mlp_loss
-from repro.nn.common import Ctx
 
 
 def run(quick=True):
@@ -23,14 +23,15 @@ def run(quick=True):
     batch = {"x": jnp.asarray(xtr[:128]), "y": jnp.asarray(ytr[:128])}
     params = mlp_init(jax.random.key(0))
 
-    exact = jax.grad(lambda p: mlp_loss(p, batch, Ctx())[0])(params)
+    exact = jax.grad(lambda p: mlp_loss(p, batch, Runtime().ctx())[0])(params)
     out = {}
     for m in methods:
         out[m] = {}
         for p in budgets:
             pol = make_policy(m, p)
+            rt = Runtime(policy=pol)
             gfn = jax.jit(lambda k: jax.grad(
-                lambda q: mlp_loss(q, batch, Ctx(policy=pol, key=k))[0])(params))
+                lambda q: mlp_loss(q, batch, rt.ctx(k))[0])(params))
             keys = jax.random.split(jax.random.key(3), n_mc)
             stats = varlib.mc_gradient_variance(gfn, exact, keys)
             # per-iteration backward cost factor for the MLP under this method

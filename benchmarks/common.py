@@ -16,10 +16,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import SketchConfig, SketchPolicy
+from repro.api import Runtime, SketchConfig, SketchPolicy
 from repro.data.synthetic import classification
 from repro.models.mlp import mlp_init, mlp_loss
-from repro.nn.common import Ctx
 
 RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "bench")
 
@@ -53,10 +52,10 @@ def train_mlp(policy, *, lr=0.2, epochs=10, batch=128, seed=0, clip=1.0,
     """Paper §5 setting: SGD, no momentum/schedule, clip 1.0, CE loss."""
     (xtr, ytr), (xte, yte) = data if data is not None else mlp_data(seed=seed)
     params = mlp_init(jax.random.key(seed), sizes)
+    runtime = Runtime(policy=policy)
 
     def loss_fn(p, batch, key):
-        ctx = Ctx(policy=policy, key=key)
-        return mlp_loss(p, batch, ctx)
+        return mlp_loss(p, batch, runtime.ctx(key))
 
     @jax.jit
     def step(p, batch, key, lr):
@@ -68,7 +67,7 @@ def train_mlp(policy, *, lr=0.2, epochs=10, batch=128, seed=0, clip=1.0,
 
     @jax.jit
     def evaluate(p, x, y):
-        return mlp_loss(p, {"x": x, "y": y}, Ctx())[1]
+        return mlp_loss(p, {"x": x, "y": y}, runtime.ctx(budget=None))[1]
 
     n = xtr.shape[0]
     steps_per_epoch = n // batch

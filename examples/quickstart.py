@@ -4,27 +4,30 @@
 
 Reproduces the paper's §5 setting (SGD, clip 1.0, CE) on a synthetic
 MNIST-like task and prints exact-vs-sketched accuracy side by side.
+
+Everything goes through the one front door: a :class:`repro.api.Runtime`
+bundles the sketch policy, and ``runtime.ctx(key)`` hands the model the
+per-step context (``budget=None`` = exact backprop — used both for the
+baseline run and for evaluation).
 """
 import argparse
-import sys
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import SketchConfig, SketchPolicy
+from repro.api import Runtime, SketchConfig, SketchPolicy
 from repro.data.synthetic import classification
 from repro.models.mlp import mlp_init, mlp_loss
-from repro.nn.common import Ctx
 
 
-def train(policy, xtr, ytr, xte, yte, *, lr=0.2, epochs=10, batch=128, seed=0):
+def train(runtime, xtr, ytr, xte, yte, *, lr=0.2, epochs=10, batch=128, seed=0):
     params = mlp_init(jax.random.key(seed))
 
     @jax.jit
     def step(p, b, key):
         (loss, acc), g = jax.value_and_grad(
-            lambda q: mlp_loss(q, b, Ctx(policy=policy, key=key)), has_aux=True)(p)
+            lambda q: mlp_loss(q, b, runtime.ctx(key)), has_aux=True)(p)
         gn = jnp.sqrt(sum(jnp.sum(jnp.square(x)) for x in jax.tree.leaves(g)))
         scale = jnp.minimum(1.0, 1.0 / jnp.maximum(gn, 1e-12))
         return jax.tree.map(lambda w, gg: w - lr * scale * gg, p, g), loss
@@ -37,7 +40,9 @@ def train(policy, xtr, ytr, xte, yte, *, lr=0.2, epochs=10, batch=128, seed=0):
             idx = perm[i * batch:(i + 1) * batch]
             params, loss = step(params, {"x": xtr[idx], "y": ytr[idx]},
                                 jax.random.fold_in(key, ep * 1000 + i))
-        acc = float(mlp_loss(params, {"x": xte, "y": yte}, Ctx())[1])
+        # evaluate exact regardless of the training-time estimator
+        acc = float(mlp_loss(params, {"x": xte, "y": yte},
+                             runtime.ctx(budget=None))[1])
         print(f"  epoch {ep:2d} loss {float(loss):.4f} test_acc {acc:.4f}")
     return params
 
@@ -53,13 +58,14 @@ def main():
     xte, yte = classification(1024, 784, 10, seed=1)
 
     print("== exact backprop ==")
-    train(None, xtr, ytr, xte, yte, epochs=args.epochs)
+    train(Runtime(), xtr, ytr, xte, yte, epochs=args.epochs)
 
     print(f"== sketched backprop: {args.method} @ budget {args.budget} "
           f"(backward cost ≈ {args.budget:.0%} of exact) ==")
-    pol = SketchPolicy(base=SketchConfig(method=args.method, budget=args.budget),
-                       exclude_roles=())
-    train(pol, xtr, ytr, xte, yte, epochs=args.epochs)
+    rt = Runtime(policy=SketchPolicy(
+        base=SketchConfig(method=args.method, budget=args.budget),
+        exclude_roles=()))
+    train(rt, xtr, ytr, xte, yte, epochs=args.epochs)
 
 
 if __name__ == "__main__":

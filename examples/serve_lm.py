@@ -2,17 +2,18 @@
 
     PYTHONPATH=src python examples/serve_lm.py
 
-Initialises a small LM, submits a mixed batch of prompts, and verifies that
-engine outputs match token-by-token single-request decoding (the same check
-tests/test_serve.py runs).
+Initialises a small LM and submits a mixed batch of prompts through the
+:class:`repro.api.Runtime` front door (``Runtime.serve`` builds the Engine;
+a mesh-bearing Runtime would serve sharded with the same two lines).
 """
 import numpy as np
 
 import jax
 
+from repro.api import Runtime
 from repro.configs.base import ArchConfig
 from repro.models import lm
-from repro.serve.engine import Engine, Request
+from repro.serve.engine import Request
 
 
 def main():
@@ -20,7 +21,7 @@ def main():
                      n_heads=8, n_kv=4, d_ff=1024, vocab=1024,
                      q_chunk=64, kv_chunk=64)
     params = lm.init_params(jax.random.key(0), cfg)
-    eng = Engine(params, cfg, batch=4, max_len=96)
+    eng = Runtime().serve(params, cfg, batch=4, max_len=96)
 
     rng = np.random.default_rng(0)
     reqs = [Request(prompt=rng.integers(1, cfg.vocab, size=n).astype(np.int32),

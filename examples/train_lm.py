@@ -3,19 +3,21 @@
     PYTHONPATH=src python examples/train_lm.py --steps 300          # full run
     PYTHONPATH=src python examples/train_lm.py --steps 20 --tiny    # smoke
 
-Uses the production stack end to end: ArchConfig (a scaled llama-style dense
-config), synthetic bigram LM data with host prefetch, AdamW + cosine schedule,
-sketch policy (ℓ1 @ 0.2 by default), async checkpointing + auto-resume, and
-straggler budget buckets.
+Uses the production stack end to end through the :class:`repro.api.Runtime`
+front door: ArchConfig (a scaled llama-style dense config), synthetic bigram
+LM data with host prefetch, AdamW + cosine schedule, sketch policy (ℓ1 @ 0.2
+by default), async checkpointing + auto-resume, and a budget schedule
+(reactive straggler buckets via ``--straggler``, or a warmup-exact schedule
+via ``--warmup-exact N``).
 """
 import argparse
 
+from repro.api import BudgetSchedule, Runtime, SketchConfig, SketchPolicy
 from repro.configs.base import ArchConfig
-from repro.core import SketchConfig, SketchPolicy
 from repro.data.pipeline import prefetch
 from repro.data.synthetic import LMStream
 from repro.optim import adamw, cosine_warmup
-from repro.train.trainer import TrainerConfig, train
+from repro.train.trainer import TrainerConfig
 
 
 def arch_100m(tiny: bool) -> ArchConfig:
@@ -40,19 +42,27 @@ def main():
     ap.add_argument("--tiny", action="store_true")
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--straggler", action="store_true")
+    ap.add_argument("--warmup-exact", type=int, default=0,
+                    help="run exact backprop for N steps, then sketched")
     args = ap.parse_args()
 
     cfg = arch_100m(args.tiny)
     policy = None if args.exact else SketchPolicy(
         base=SketchConfig(method=args.method, budget=args.budget))
+    if args.straggler and policy is not None:
+        schedule = BudgetSchedule.straggler((1.0, 0.5, 0.2))
+    elif args.warmup_exact and policy is not None:
+        schedule = BudgetSchedule.warmup_exact(args.warmup_exact)
+    else:
+        schedule = BudgetSchedule()
+    runtime = Runtime(policy=policy, schedule=schedule)
     opt = adamw(cosine_warmup(3e-4, max(10, args.steps // 20), args.steps),
                 weight_decay=0.1, clip=1.0)
     stream = LMStream(vocab=cfg.vocab, seed=0)
     data = prefetch(stream.batches(args.batch, args.seq), size=2)
     tcfg = TrainerConfig(steps=args.steps, log_every=max(1, args.steps // 30),
-                         ckpt_dir=args.ckpt, ckpt_every=max(10, args.steps // 5),
-                         straggler_budgets=(1.0, 0.5, 0.2) if args.straggler else ())
-    state, history = train(cfg, opt, data, tcfg, policy)
+                         ckpt_dir=args.ckpt, ckpt_every=max(10, args.steps // 5))
+    state, history = runtime.train(cfg, opt, data, tcfg)
     first, last = history[0]["loss"], history[-1]["loss"]
     print(f"\nloss: {first:.4f} -> {last:.4f} over {args.steps} steps "
           f"({'exact' if args.exact else f'{args.method}@{args.budget}'})")

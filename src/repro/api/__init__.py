@@ -1,0 +1,47 @@
+"""repro.api — the public front door.
+
+One import gives the whole paper-reproduction surface:
+
+  * :class:`Runtime` — bundles policy + execution + budget schedule; builds
+    cached train steps, the training loop, and the serving engine.
+  * :class:`ExecutionConfig` — mesh / sharding / TP-sketch / compact-grad /
+    accumulation knobs, one hashable object.
+  * :class:`BudgetSchedule` — budget-vs-step as pre-compiled buckets
+    (warmup-exact, anneal, reactive straggler mitigation).
+  * :func:`register_estimator` — plug in new unbiased-VJP estimator families
+    (RAD / BASIS-style) without touching core.
+  * :class:`SketchPolicy` / :class:`SketchConfig` — the paper's estimator
+    placement and per-site configuration (re-exported from core).
+
+Typical use::
+
+    from repro import api
+
+    rt = api.Runtime(policy=api.SketchPolicy(base=api.SketchConfig(
+             method="l1", budget=0.2)))
+    state, history = rt.train(cfg, opt, data, tcfg)
+
+``tests/test_api_surface.py`` snapshots this module's exports — extending the
+surface means updating the checked-in snapshot, so accidental breaks fail
+loudly.
+"""
+from repro.api.execution import ExecutionConfig
+from repro.api.runtime import Runtime
+from repro.api.schedule import BudgetSchedule, StragglerController
+from repro.core import SketchConfig, SketchPolicy
+from repro.core.estimators import (Estimator, EstimatorVJP, get_estimator,
+                                   register_estimator, registered_backends)
+
+__all__ = [
+    "BudgetSchedule",
+    "Estimator",
+    "EstimatorVJP",
+    "ExecutionConfig",
+    "Runtime",
+    "SketchConfig",
+    "SketchPolicy",
+    "StragglerController",
+    "get_estimator",
+    "register_estimator",
+    "registered_backends",
+]

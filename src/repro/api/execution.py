@@ -1,0 +1,69 @@
+"""Execution configuration: where and how compiled steps run.
+
+Everything that used to ride as seven loose kwargs on ``train()`` /
+``make_train_step`` (mesh, activation sharding, axis names, TP-local
+sketching, compact gradients, gradient accumulation) lives in one frozen,
+hashable object. ``ExecutionConfig`` is the *only* sanctioned factory for
+``nn.common.Ctx`` outside the nn substrate itself — ``tests/test_compat.py``
+greps for stray ``Ctx(...)`` construction.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+__all__ = ["ExecutionConfig"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionConfig:
+    """Static execution environment of one Runtime (hashable; safe to key
+    jit caches on).
+
+    Attributes:
+      mesh: ``jax.sharding.Mesh`` for distributed runs (None = single device).
+      act_sharding: NamedSharding constraint pinned on [B, S, d] activations.
+      data_axes / model_axes: mesh axis names carrying DP and TP/EP shards.
+      tp_sketch: TP-local compact sketching with compressed DP gradient
+        collectives (core/sharded_sketch.py).
+      compact_grads: keep sketched dW compact (rows + indices) from the
+        backward through clipping into sparse-row optimizer updates
+        (core/compact_grad.py; requires ``accum == 1``).
+      accum: gradient-accumulation microbatch count.
+      cost_mode: python-unrolled loops for HLO cost artifacts (dry-run).
+    """
+
+    mesh: Optional[Any] = None
+    act_sharding: Optional[Any] = None
+    data_axes: Tuple[str, ...] = ("data",)
+    model_axes: Tuple[str, ...] = ("model",)
+    tp_sketch: bool = False
+    compact_grads: bool = False
+    accum: int = 1
+    cost_mode: bool = False
+
+    def __post_init__(self):
+        object.__setattr__(self, "data_axes", tuple(self.data_axes))
+        object.__setattr__(self, "model_axes", tuple(self.model_axes))
+        if self.accum < 1:
+            raise ValueError(f"accum must be >= 1, got {self.accum}")
+        if self.compact_grads and self.accum != 1:
+            raise ValueError("compact_grads requires accum == 1 (compact index "
+                             "sets differ per microbatch; accumulate densely)")
+
+    def make_ctx(self, *, policy=None, key=None, decode: bool = False,
+                 cost_mode: Optional[bool] = None, layer_index: int = 0,
+                 n_layers: int = 1):
+        """Build the per-call :class:`~repro.nn.common.Ctx` this config
+        describes (the one front door to Ctx outside ``repro/nn``)."""
+        from repro.nn.common import Ctx
+
+        return Ctx(policy=policy, key=key, layer_index=layer_index,
+                   n_layers=n_layers, mesh=self.mesh,
+                   model_axes=self.model_axes, data_axes=self.data_axes,
+                   cost_mode=self.cost_mode if cost_mode is None else cost_mode,
+                   decode=decode, act_sharding=self.act_sharding,
+                   tp_sketch=self.tp_sketch)
+
+    def replace(self, **kw) -> "ExecutionConfig":
+        return dataclasses.replace(self, **kw)

@@ -1,0 +1,188 @@
+"""The Runtime: one front door for sketched training, serving and dry-runs.
+
+A :class:`Runtime` bundles the paper's three orthogonal knobs into one
+frozen, hashable object:
+
+  * **what** to estimate — :class:`~repro.core.policy.SketchPolicy`
+    (which VJP sites get which unbiased estimator, resolved through the
+    open estimator registry);
+  * **where/how** to run — :class:`~repro.api.execution.ExecutionConfig`
+    (mesh, shardings, TP-local sketching, compact gradients, accumulation);
+  * **when** at which budget — :class:`~repro.api.schedule.BudgetSchedule`
+    (piecewise-constant budget-vs-step, realised as pre-compiled buckets;
+    reactive straggler mode).
+
+Because the Runtime is hashable, compiled train steps are cached on it:
+asking the same Runtime for the same (arch, optimizer, budget) step twice
+returns the *same* jitted callable — one XLA compile per schedule bucket,
+never one per call site. ``examples/``, ``benchmarks/``, ``launch/dryrun``
+and ``serve/`` all consume this object; the legacy kwarg spellings on
+``repro.train.trainer.train`` construct one internally (with a one-time
+DeprecationWarning).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Iterable, Optional, Tuple
+
+from repro.api.execution import ExecutionConfig
+from repro.api.schedule import BudgetSchedule
+from repro.core import SketchPolicy
+
+__all__ = ["Runtime"]
+
+# Compiled-step cache: (runtime, cfg, opt, budget, donate, jitted) -> step fn.
+# Module-level (not per-instance) so equal Runtimes share executables; the
+# paired list records build keys for the recompile-count tests. LRU-bounded:
+# Optimizer instances hash by the identity of their closures, so sweeps that
+# rebuild optimizers would otherwise pin every compiled executable forever.
+_STEP_CACHE: Dict[Tuple, Callable] = {}
+_STEP_CACHE_MAX = 64
+_STEP_BUILDS: list = []
+
+
+def _cache_get(key):
+    fn = _STEP_CACHE.pop(key, None)
+    if fn is not None:
+        _STEP_CACHE[key] = fn  # re-insert = move to LRU tail
+    return fn
+
+
+def _cache_put(key, fn):
+    while len(_STEP_CACHE) >= _STEP_CACHE_MAX:
+        _STEP_CACHE.pop(next(iter(_STEP_CACHE)))
+    _STEP_CACHE[key] = fn
+    _STEP_BUILDS.append(key)
+
+
+def _cache_clear():  # test hook
+    _STEP_CACHE.clear()
+    del _STEP_BUILDS[:]
+
+
+@dataclasses.dataclass(frozen=True)
+class Runtime:
+    """Unified sketched-backprop runtime (hashable; compare by value).
+
+    ``Runtime()`` is a valid single-device exact-backprop runtime; every
+    field upgrades one axis independently.
+    """
+
+    policy: Optional[SketchPolicy] = None
+    execution: ExecutionConfig = dataclasses.field(default_factory=ExecutionConfig)
+    schedule: BudgetSchedule = dataclasses.field(default_factory=BudgetSchedule)
+
+    def replace(self, **kw) -> "Runtime":
+        return dataclasses.replace(self, **kw)
+
+    # -- policy / context ---------------------------------------------------
+
+    def policy_at(self, budget: Optional[float] = 1.0) -> Optional[SketchPolicy]:
+        """The effective policy at one schedule budget (see BudgetSchedule:
+        None = exact, 1.0 = as configured, else per-site override)."""
+        if budget is None or self.policy is None:
+            return None
+        if budget >= 1.0:
+            return self.policy
+        return self.policy.with_budget(budget)
+
+    def ctx(self, key=None, *, budget: Optional[float] = 1.0,
+            decode: bool = False, layer_index: int = 0, n_layers: int = 1):
+        """A :class:`~repro.nn.common.Ctx` for hand-driven model calls
+        (`examples/quickstart.py` pattern: custom loss, own loop)."""
+        return self.execution.make_ctx(policy=self.policy_at(budget), key=key,
+                                       decode=decode, layer_index=layer_index,
+                                       n_layers=n_layers)
+
+    # -- training -----------------------------------------------------------
+
+    def train_step(self, cfg, opt, *, budget: Optional[float] = 1.0,
+                   donate: bool = True, jitted: bool = True) -> Callable:
+        """``step_fn(state, batch, key) -> (state, metrics)`` for this runtime.
+
+        Jitted results are cached on (runtime, cfg, opt, budget, donate):
+        the same Runtime yields the same executable — one compile per
+        schedule bucket. ``jitted=False`` returns the raw step function for
+        callers that jit with their own in_shardings (dry-run, benchmarks).
+        """
+        if self.policy is None:
+            # every budget is the same exact step — collapse the cache key
+            # so a multi-bucket schedule with no policy compiles once
+            budget = 1.0
+        key = (self, cfg, opt, budget, donate, jitted)
+        fn = _cache_get(key)
+        if fn is not None:
+            return fn
+        import jax
+
+        from repro.train.train_step import make_train_step
+
+        fn = make_train_step(cfg, opt, self.policy_at(budget),
+                             execution=self.execution)
+        if jitted:
+            fn = jax.jit(fn, donate_argnums=(0,) if donate else ())
+        _cache_put(key, fn)
+        return fn
+
+    def train(self, cfg, opt, data: Iterable, tcfg=None, *, state=None,
+              on_metrics: Optional[Callable] = None):
+        """Run the training loop; returns ``(final_state, history)``.
+
+        ``tcfg`` is a :class:`repro.train.trainer.TrainerConfig` (steps,
+        logging, checkpointing); the sketch policy, execution environment and
+        budget schedule all come from this Runtime.
+        """
+        from repro.train import trainer
+
+        return trainer.train_loop(self, cfg, opt, data, tcfg, state=state,
+                                  on_metrics=on_metrics)
+
+    def init_state(self, key, cfg, opt):
+        from repro.train.train_step import init_state
+
+        return init_state(key, cfg, opt)
+
+    # -- serving ------------------------------------------------------------
+
+    def prefill_step(self, cfg, max_len: int) -> Callable:
+        """``prefill_fn(params, batch) -> (logits, caches)`` (unjitted)."""
+        from repro.serve.serve_step import make_prefill
+
+        return make_prefill(cfg, max_len, execution=self.execution)
+
+    def decode_step(self, cfg) -> Callable:
+        """``decode_fn(params, caches, tokens, pos) -> (logits, caches)``
+        (unjitted)."""
+        from repro.serve.serve_step import make_decode_step
+
+        return make_decode_step(cfg, execution=self.execution)
+
+    def serve(self, params, cfg, *, batch: int = 4, max_len: int = 256):
+        """A batched serving :class:`~repro.serve.engine.Engine` whose
+        prefill/decode steps run under this runtime's execution config."""
+        from repro.serve.engine import Engine
+
+        return Engine(params, cfg, batch=batch, max_len=max_len, runtime=self)
+
+    # -- migration ----------------------------------------------------------
+
+    @classmethod
+    def from_legacy_kwargs(cls, policy=None, *, mesh=None, act_sharding=None,
+                           data_axes=("data",), model_axes=("model",),
+                           tp_sketch: bool = False, compact_grads: bool = False,
+                           accum: int = 1, cost_mode: bool = False,
+                           straggler_budgets: Tuple[float, ...] = (),
+                           schedule: Optional[BudgetSchedule] = None) -> "Runtime":
+        """Adapter for the pre-Runtime kwarg spelling (see docs/api.md for
+        the migration table). ``straggler_budgets`` maps onto a reactive
+        :class:`BudgetSchedule` exactly like the old trainer buckets."""
+        if schedule is None:
+            schedule = (BudgetSchedule.straggler(tuple(straggler_budgets))
+                        if straggler_budgets else BudgetSchedule())
+        return cls(policy=policy,
+                   execution=ExecutionConfig(
+                       mesh=mesh, act_sharding=act_sharding,
+                       data_axes=tuple(data_axes), model_axes=tuple(model_axes),
+                       tp_sketch=tp_sketch, compact_grads=compact_grads,
+                       accum=accum, cost_mode=cost_mode),
+                   schedule=schedule)

@@ -1,0 +1,228 @@
+"""Budget schedules: which sketch budget runs at which point in training.
+
+The paper trades gradient variance against backward cost (§4's
+epochs-vs-cost curves) and App. B.1 shows the knob can move *during* a run:
+warm up exact then anneal to a sketched backward, or drop the budget
+reactively when a straggler slows the step. Unbiasedness (§2.2) is what makes
+all of this safe — switching budgets mid-run never biases the gradient, only
+its variance.
+
+:class:`BudgetSchedule` makes those schedules first-class. It is
+piecewise-constant in the step index and realised as *pre-compiled buckets*:
+every distinct budget value in the schedule gets one compiled train step up
+front (``Runtime.train`` builds them before the loop), and the loop just
+switches between executables — no mid-run recompiles. This subsumes the old
+``train/straggler.py`` bucket machinery: reactive (straggler) mode is a
+schedule whose bucket choice comes from measured step times instead of the
+step index, via the same :class:`StragglerController` that module now
+re-exports.
+
+Budget values:
+  * ``None``  — exact backprop (no sketching at all);
+  * ``1.0``   — the policy as configured (its own per-site budgets);
+  * ``0<b<1`` — the policy with every site's budget overridden to ``b``
+    (``SketchPolicy.with_budget``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Optional, Sequence, Tuple
+
+__all__ = ["BudgetSchedule", "StragglerController"]
+
+Budget = Optional[float]  # None = exact; 1.0 = policy as configured
+
+
+def _check_budget(b: Budget):
+    if b is not None and not (0.0 < b <= 1.0):
+        raise ValueError(f"budget must be None (exact) or in (0, 1], got {b}")
+
+
+def _dedupe_points(points) -> Tuple[Tuple[int, Budget], ...]:
+    """Collapse points landing on the same step (later budget wins) so
+    degenerate constructor inputs yield a valid ascending schedule."""
+    by_step = {}
+    for s, b in points:
+        by_step[int(s)] = b
+    return tuple(sorted(by_step.items()))
+
+
+@dataclasses.dataclass(frozen=True)
+class BudgetSchedule:
+    """Piecewise-constant budget-vs-step schedule, or a reactive bucket set.
+
+    Attributes:
+      points: ``((step, budget), ...)`` with strictly ascending non-negative
+        steps; the budget before the first point is ``1.0`` (policy as
+        configured). Empty = constant ``1.0``.
+      reactive: descending budget buckets for straggler mitigation (paper
+        App. B.1); index 0 is the full backward. Non-empty ``reactive``
+        switches the schedule to reactive mode (mutually exclusive with
+        ``points``): the budget for each step comes from a
+        :class:`StragglerController` watching measured step times.
+      window / slow_factor / fast_factor / target_step_s: controller tuning
+        (reactive mode only) — see :class:`StragglerController`.
+    """
+
+    points: Tuple[Tuple[int, Budget], ...] = ()
+    reactive: Tuple[Budget, ...] = ()
+    window: int = 8
+    slow_factor: float = 1.3
+    fast_factor: float = 1.05
+    target_step_s: Optional[float] = None
+
+    def __post_init__(self):
+        object.__setattr__(self, "points",
+                           tuple((int(s), b) for s, b in self.points))
+        object.__setattr__(self, "reactive", tuple(self.reactive))
+        if self.points and self.reactive:
+            raise ValueError("points and reactive are mutually exclusive")
+        last = -1
+        for s, b in self.points:
+            if s <= last:
+                raise ValueError(f"schedule steps must ascend, got {self.points}")
+            last = s
+            _check_budget(b)
+        for b in self.reactive:
+            _check_budget(b)
+
+    # -- constructors -------------------------------------------------------
+
+    @classmethod
+    def constant(cls, budget: Budget = 1.0) -> "BudgetSchedule":
+        """One budget for the whole run (the default is the policy itself)."""
+        _check_budget(budget)
+        return cls(points=((0, budget),))
+
+    @classmethod
+    def warmup_exact(cls, exact_steps: int, budget: Budget = 1.0) -> "BudgetSchedule":
+        """Paper App. B.1: exact backward for ``exact_steps``, then sketched
+        (``exact_steps=0`` degrades to a constant schedule)."""
+        return cls(points=_dedupe_points(((0, None), (int(exact_steps), budget))))
+
+    @classmethod
+    def piecewise(cls, *points: Tuple[int, Budget]) -> "BudgetSchedule":
+        return cls(points=tuple(points))
+
+    @classmethod
+    def anneal(cls, steps: int, *, start: float = 1.0, end: float = 0.1,
+               n_buckets: int = 4) -> "BudgetSchedule":
+        """Geometric budget anneal ``start -> end`` over ``steps`` steps in
+        ``n_buckets`` piecewise-constant stages (each stage = one compiled
+        bucket; short runs collapse colliding stages, keeping the later
+        budget)."""
+        if n_buckets < 2:
+            raise ValueError("anneal needs n_buckets >= 2")
+        pts = []
+        for i in range(n_buckets):
+            frac = i / (n_buckets - 1)
+            b = float(start * (end / start) ** frac)
+            pts.append((int(round(steps * i / n_buckets)), min(1.0, b)))
+        return cls(points=_dedupe_points(pts))
+
+    @classmethod
+    def straggler(cls, budgets: Sequence[Budget] = (1.0, 0.5, 0.2, 0.1, 0.05),
+                  *, window: int = 8, slow_factor: float = 1.3,
+                  fast_factor: float = 1.05,
+                  target_step_s: Optional[float] = None) -> "BudgetSchedule":
+        """Reactive straggler mitigation over pre-compiled budget buckets."""
+        return cls(reactive=tuple(budgets), window=window,
+                   slow_factor=slow_factor, fast_factor=fast_factor,
+                   target_step_s=target_step_s)
+
+    # -- queries ------------------------------------------------------------
+
+    @property
+    def is_reactive(self) -> bool:
+        return bool(self.reactive)
+
+    def buckets(self) -> Tuple[Budget, ...]:
+        """Distinct budget values to pre-compile, in first-use order
+        (including the implicit ``1.0`` that runs before a late first
+        point)."""
+        if self.reactive:
+            return tuple(dict.fromkeys(self.reactive))
+        if not self.points:
+            return (1.0,)
+        lead = () if self.points[0][0] == 0 else (1.0,)
+        return tuple(dict.fromkeys(lead + tuple(b for _, b in self.points)))
+
+    def budget_at(self, step: int) -> Budget:
+        """Budget for ``step`` (non-reactive schedules)."""
+        if self.reactive:
+            raise ValueError("reactive schedule: use make_controller()")
+        b: Budget = 1.0
+        for s, pb in self.points:
+            if step >= s:
+                b = pb
+            else:
+                break
+        return b
+
+    def make_controller(self) -> Optional["StragglerController"]:
+        if not self.reactive:
+            return None
+        return StragglerController(self.reactive, window=self.window,
+                                   slow_factor=self.slow_factor,
+                                   fast_factor=self.fast_factor,
+                                   target_step_s=self.target_step_s)
+
+
+class StragglerController:
+    """Reactive sketch-budget bucket switching (paper App. B.1).
+
+    The paper observes that VJP approximation can be applied *selectively at
+    slow compute nodes*. Under SPMD every device must run the same program, so
+    the idea is applied step-wise: the trainer keeps a small set of
+    pre-compiled train steps at different sketch budgets (the
+    :class:`BudgetSchedule` buckets); this controller watches recent step
+    times and drops to a cheaper backward when the measured step time exceeds
+    the target (a slow host, a thermally-throttled chip, contention),
+    recovering when times normalise.
+    """
+
+    def __init__(self, budgets=(1.0, 0.5, 0.2, 0.1, 0.05), *, window: int = 8,
+                 slow_factor: float = 1.3, fast_factor: float = 1.05,
+                 target_step_s: float | None = None):
+        """budgets must be sorted descending; index 0 = full backward."""
+        self.budgets = tuple(budgets)
+        self.level = 0
+        self.window = window
+        self.slow = slow_factor
+        self.fast = fast_factor
+        self.target = target_step_s
+        self._times = deque(maxlen=window)
+        self._t0 = None
+
+    @property
+    def budget(self) -> float:
+        return self.budgets[self.level]
+
+    def step_begin(self):
+        self._t0 = time.perf_counter()
+
+    def step_end(self):
+        if self._t0 is None:
+            return self.budget
+        dt = time.perf_counter() - self._t0
+        self._times.append(dt)
+        if self.target is None and len(self._times) == self.window and self.level == 0:
+            # calibrate the target from the first full window at full budget
+            self.target = sorted(self._times)[self.window // 2]
+        if self.target is None or len(self._times) < 3:
+            return self.budget
+        med = sorted(self._times)[len(self._times) // 2]
+        if med > self.slow * self.target and self.level + 1 < len(self.budgets):
+            self.level += 1
+            self._times.clear()
+        elif med < self.fast * self.target and self.level > 0:
+            self.level -= 1
+            self._times.clear()
+        return self.budget
+
+    def observe(self, dt: float):
+        """Test hook: feed an externally measured step time."""
+        self._t0 = time.perf_counter() - dt
+        return self.step_end()

@@ -1,5 +1,7 @@
 """Paper core: unbiased randomized VJP sketching."""
 from repro.core.compact_grad import CompactGrad
+from repro.core.estimators import (Estimator, EstimatorVJP, get_estimator,
+                                   register_estimator, registered_backends)
 from repro.core.policy import POLICY_PRESETS, SketchPolicy
 from repro.core.sketched_linear import linear, sketched_linear
 from repro.core.sketching import (
@@ -19,7 +21,12 @@ __all__ = [
     "COLUMN_METHODS",
     "ColumnPlan",
     "CompactGrad",
+    "Estimator",
+    "EstimatorVJP",
     "POLICY_PRESETS",
+    "get_estimator",
+    "register_estimator",
+    "registered_backends",
     "SketchConfig",
     "SketchPolicy",
     "column_gate",

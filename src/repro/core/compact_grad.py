@@ -137,6 +137,16 @@ class _MeshCtx:
         self.tp_sketch = tp_sketch
 
 
+def _compact_capable(backend: str) -> bool:
+    """Does the registered estimator for ``backend`` emit compact gradients?"""
+    from repro.core.estimators import get_estimator
+
+    try:
+        return bool(get_estimator(backend).supports_compact_grad)
+    except KeyError:
+        return False
+
+
 def _site_role(path) -> Optional[str]:
     if len(path) < 2:
         return None
@@ -151,19 +161,27 @@ def _site_role(path) -> Optional[str]:
 def _slot_rank(role, cfg, w, has_b, shim) -> Optional[int]:
     """Mirror of nn.common.dense's backend dispatch: how many compact rows
     the site's backward will emit, or None if it stays dense."""
+    from repro.core.estimators import get_estimator
     from repro.core.sharded_sketch import tp_applicable, tp_row_applicable
 
+    est = get_estimator(cfg.backend)
     n_out = w.shape[-2]
-    if shim.tp_sketch and shim.mesh is not None:
+    if shim.tp_sketch:
+        if shim.mesh is None:
+            # dense() forces the mask backend on every compact site when
+            # tp_sketch is set without a mesh — no compact rows will be
+            # emitted, so a slot here would freeze the site (its cotangent
+            # stays zero)
+            return None
         if role in TP_OUT_ROLES and not has_b and tp_applicable(shim, cfg, n_out):
             n_mp = 1
             for a in shim.model_axes:
                 n_mp *= shim.mesh.shape[a]
-            return n_mp * compact_rank(cfg, n_out // n_mp)
+            return n_mp * est.compact_rank(cfg, n_out // n_mp)
         if role in TP_ROW_ROLES and not has_b and tp_row_applicable(shim, cfg, w.shape[-1]):
-            return compact_rank(cfg, n_out)
+            return est.compact_rank(cfg, n_out)
         return None  # dense() forces the mask backend on TP-incompatible sites
-    return compact_rank(cfg, n_out)
+    return est.compact_rank(cfg, n_out)
 
 
 def with_grad_slots(params, policy, *, mesh=None, data_axes=("data",),
@@ -201,7 +219,7 @@ def with_grad_slots(params, policy, *, mesh=None, data_axes=("data",),
             if role is not None and w is not None and getattr(w, "ndim", 0) >= 2:
                 cfg = policy.config_for(role, 0, n_layers)
                 if (cfg is not None and not cfg.is_noop
-                        and cfg.backend in ("compact", "pallas")):
+                        and _compact_capable(cfg.backend)):
                     r = _slot_rank(role, cfg, w, "b" in node, shim)
                     if r is not None:
                         lead = w.shape[:-2]

@@ -1,0 +1,144 @@
+"""Estimator registry: pluggable unbiased-VJP backends for sketched linears.
+
+The paper's estimator families were hard-wired as a closed ``if/elif`` over
+``SketchConfig.backend`` inside ``core/sketched_linear``. This module turns
+that dispatch into a small open registry so related estimator families
+(Randomized Automatic Differentiation, Oktay et al. 2021; BASIS ghost
+backpropagation, Khasia 2026) can be hosted *without forking core*: a plugin
+implements :class:`Estimator`, calls :func:`register_estimator`, and every
+``SketchConfig(backend="<name>")`` site — through ``nn.common.dense`` up to
+``repro.api.Runtime`` — routes its backward through it.
+
+An estimator owns the *backward math* of one linear site. The surrounding
+machinery (custom_vjp plumbing, residuals, CompactGrad slot cotangents,
+densify-scatter) stays in ``sketched_linear`` and is shared by all entries.
+
+Contract (unbiasedness): ``E[dX] = Ĝ·W``, ``E[dW] = Ĝᵀ·X``, ``E[db] = Σ Ĝ``
+for ``E[Ĝ | G] = G`` — switching estimators never biases the gradient, only
+its variance (paper §2.2), which is what makes the registry safe to open.
+
+The three builtin backends (``mask``, ``compact``, ``pallas``) are registered
+by ``core/sketched_linear`` at import time; ``repro.core`` (and therefore any
+``repro.*`` import) guarantees they are present.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+
+__all__ = ["Estimator", "EstimatorVJP", "register_estimator", "get_estimator",
+           "registered_backends", "BUILTIN_BACKENDS"]
+
+BUILTIN_BACKENDS = ("mask", "compact", "pallas")
+
+
+@dataclasses.dataclass
+class EstimatorVJP:
+    """Result of one estimator backward, in one of two forms.
+
+    Dense form (``rows is None``): ``dw`` is the full ``[n, d_in]`` weight
+    gradient and ``db`` (when the site has a bias) the full ``[n]`` bias
+    gradient.
+
+    Compact form: ``rows [r, d_in]`` are the kept dW rows, ``cols [r]`` their
+    int32 row indices into the dense weight, and ``db_c [r]`` the bias
+    gradient restricted to the same columns. ``sketched_linear`` scatters
+    these into dense cotangents — or, in compact-gradient mode
+    (``supports_compact_grad``), forwards them as a ``CompactGrad`` slot
+    cotangent with no scatter at all.
+    """
+
+    dx: jax.Array  # [N, d_in] flattened-input gradient
+    dw: Optional[jax.Array] = None
+    db: Optional[jax.Array] = None
+    rows: Optional[jax.Array] = None
+    cols: Optional[jax.Array] = None
+    db_c: Optional[jax.Array] = None
+
+    @property
+    def is_compact(self) -> bool:
+        return self.rows is not None
+
+
+class Estimator:
+    """Protocol for one registered VJP estimator (subclassing is convention,
+    not requirement — duck typing with these attributes is enough).
+
+    Attributes:
+      name: registry key; referenced by ``SketchConfig.backend``.
+      supports_compact_grad: the backward emits the compact
+        (rows/cols/db_c) form, so the site may carry a CompactGrad slot and
+        skip the densify-scatter (see core/compact_grad.py). Estimators that
+        return the dense form must leave this False.
+
+    Methods (what the framework actually calls):
+      validate(cfg): raise ValueError for unsupported SketchConfig
+        combinations; called from ``SketchConfig.__post_init__`` for
+        non-builtin backends.
+      apply(cfg, G2d, X2d, w, key, *, has_b, score_psum_axes): the estimator
+        backward — returns an :class:`EstimatorVJP`. This is the hot hook:
+        ``sketched_linear._bwd`` calls it for every sketched site (today
+        with ``score_psum_axes=None`` — the TP-sharded sketch path in
+        ``core/sharded_sketch.py`` plans its batch-shared sketch outside the
+        registry and does not route through ``apply``; custom estimators run
+        single-replica semantics under ``tp_sketch``, see ``nn.common
+        .dense``).
+      compact_rank(cfg, n): static number of compact rows ``apply`` emits for
+        a site of width ``n`` (required when ``supports_compact_grad``;
+        consumed by the grad-slot builder in ``core/compact_grad.py``).
+      plan(cfg, G2d, w, key, *, want_compact, score_psum_axes): OPTIONAL
+        diagnostic hook — expose the sampled sketch (a ``ColumnPlan`` or an
+        estimator-private object) for tests/variance tooling. Core never
+        calls it; estimators that plan inside ``apply`` may leave the
+        default (returns None).
+    """
+
+    name: str = "?"
+    supports_compact_grad: bool = False
+
+    def validate(self, cfg) -> None:  # noqa: B027 — optional hook
+        pass
+
+    def plan(self, cfg, G2d, w, key, *, want_compact=True, score_psum_axes=None):
+        return None
+
+    def apply(self, cfg, G2d, X2d, w, key, *, has_b, score_psum_axes=None) -> EstimatorVJP:
+        raise NotImplementedError
+
+    def compact_rank(self, cfg, n: int) -> int:
+        raise NotImplementedError(f"estimator {self.name!r} is not compact")
+
+
+_REGISTRY: Dict[str, Estimator] = {}
+
+
+def register_estimator(est: Estimator, *, name: Optional[str] = None,
+                       overwrite: bool = False) -> Estimator:
+    """Register ``est`` under ``name`` (default ``est.name``) and return it.
+
+    Builtin names cannot be overwritten unless ``overwrite=True`` (tests).
+    """
+    key = name or getattr(est, "name", None)
+    if not key or not isinstance(key, str):
+        raise ValueError("estimator needs a non-empty string name")
+    if key in _REGISTRY and not overwrite:
+        raise ValueError(f"estimator {key!r} already registered "
+                         "(pass overwrite=True to replace)")
+    _REGISTRY[key] = est
+    return est
+
+
+def get_estimator(backend: str) -> Estimator:
+    try:
+        return _REGISTRY[backend]
+    except KeyError:
+        raise KeyError(
+            f"unknown estimator backend {backend!r}; registered: "
+            f"{sorted(_REGISTRY)} — register it first via "
+            "repro.api.register_estimator") from None
+
+
+def registered_backends() -> tuple:
+    return tuple(sorted(_REGISTRY))

@@ -2,7 +2,8 @@
 
 Forward (practical convention):  ``y = x @ W.T (+ b)`` with ``x: [..., d_in]``,
 ``W: [d_out, d_in]``. The *backward* replaces the exact VJP by the configured
-unbiased estimator:
+unbiased estimator, resolved through the open registry in
+``core/estimators.py`` (``SketchConfig.backend`` is the registry key):
 
 * mask backend      — Alg. 3 / 4 / 5 / 6 verbatim (dense masked matmuls),
 * compact backend   — gather the r kept columns once, reduced-shape matmuls
@@ -13,6 +14,11 @@ unbiased estimator:
                       one-pass fused kernel (dX + compact dW + compact db
                       from a single HBM stream of G's kept blocks).
 
+Third-party estimators (RAD / BASIS-style families) register additional
+backends via ``repro.api.register_estimator`` — this module never needs to
+change for them. Estimators own only the backward *math*; the custom_vjp
+plumbing, residuals, and CompactGrad slot handling below are shared.
+
 The RNG key rides through the forward as a regular argument and is consumed
 only in the backward (stored in residuals), so a jitted ``grad`` of a model
 containing many sketched layers stays a pure function of ``(params, batch,
@@ -20,9 +26,10 @@ step_key)``.
 
 Compact gradients: when a :class:`~repro.core.compact_grad.CompactGrad`
 *slot* is passed (``grad_slot=...``, normally threaded in by ``nn.common
-.dense`` from the params tree), the compact paths return the weight gradient
-through the slot's cotangent as (rows, indices) — no densify-scatter — and a
-structurally zero dense cotangent for ``w``. See core/compact_grad.py.
+.dense`` from the params tree), estimators emitting the compact form return
+the weight gradient through the slot's cotangent as (rows, indices) — no
+densify-scatter — and a structurally zero dense cotangent for ``w``. See
+core/compact_grad.py.
 """
 from __future__ import annotations
 
@@ -32,8 +39,11 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.compact_grad import CompactGrad
-from repro.core.sketching import SketchConfig, column_plan, sketch_dense
+from repro.core import estimators
+from repro.core.compact_grad import CompactGrad, compact_rank
+from repro.core.estimators import EstimatorVJP
+from repro.core.sketching import (COLUMN_METHODS, SketchConfig, column_plan,
+                                  effective_cfg, sketch_dense)
 
 __all__ = ["sketched_linear", "linear"]
 
@@ -41,6 +51,124 @@ __all__ = ["sketched_linear", "linear"]
 def _flatten_leading(x):
     lead = x.shape[:-1]
     return x.reshape((-1, x.shape[-1])), lead
+
+
+# ---------------------------------------------------------------------------
+# Builtin estimators (the registry's seed population).
+# ---------------------------------------------------------------------------
+
+
+class _MaskEstimator(estimators.Estimator):
+    """Paper-faithful dense backend: full-size Ĝ, dense downstream matmuls."""
+
+    name = "mask"
+    supports_compact_grad = False
+
+    def plan(self, cfg, G2d, w, key, *, want_compact=False, score_psum_axes=None):
+        if cfg.method not in COLUMN_METHODS:
+            return None
+        return column_plan(cfg, G2d, w, key, want_compact=want_compact,
+                           score_psum_axes=score_psum_axes)
+
+    def apply(self, cfg, G2d, X2d, w, key, *, has_b, score_psum_axes=None):
+        if cfg.method == "per_element":
+            # Alg. 3: independent element masks on W (for dX) and X (for dW);
+            # bias gradient stays exact.
+            kw, kx = jax.random.split(key)
+            p = cfg.budget
+            mw = jax.random.bernoulli(kw, p, w.shape).astype(w.dtype)
+            mx = jax.random.bernoulli(kx, p, X2d.shape).astype(X2d.dtype)
+            return EstimatorVJP(dx=(G2d @ (w * mw)) / p,
+                                dw=(G2d.T @ (X2d * mx)) / p,
+                                db=jnp.sum(G2d, axis=0) if has_b else None)
+        Ghat = sketch_dense(cfg, G2d, w, key)
+        return EstimatorVJP(dx=Ghat @ w, dw=Ghat.T @ X2d,
+                            db=jnp.sum(Ghat, axis=0) if has_b else None)
+
+
+class _CompactEstimator(estimators.Estimator):
+    """Exact-r compact backend: gather kept columns, reduced-shape matmuls
+    (single-gather fused XLA oracle on block-granular configs)."""
+
+    name = "compact"
+    supports_compact_grad = True
+
+    def validate(self, cfg) -> None:
+        if cfg.method not in COLUMN_METHODS:
+            raise ValueError(
+                f"backend {cfg.backend!r} requires a column-family method, "
+                f"got {cfg.method!r}")
+        if not cfg.exact_r:
+            raise ValueError(
+                f"{cfg.backend}/pallas backends need exact_r=True (static shapes)")
+
+    def plan(self, cfg, G2d, w, key, *, want_compact=True, score_psum_axes=None):
+        return column_plan(cfg, G2d, w, key, want_compact=want_compact,
+                           score_psum_axes=score_psum_axes)
+
+    def compact_rank(self, cfg, n: int) -> int:
+        return compact_rank(cfg, n)
+
+    def apply(self, cfg, G2d, X2d, w, key, *, has_b, score_psum_axes=None):
+        n = G2d.shape[-1]
+        cfg = effective_cfg(cfg, n)
+        plan = column_plan(cfg, G2d, w, key, want_compact=True,
+                           score_psum_axes=score_psum_axes)
+        idx, scales = plan.indices, plan.scales
+        if cfg.block > 1:
+            # Fused one-pass backward: dX, compact dW rows and compact db all
+            # come from a single stream over G's kept column-blocks.
+            dX2d, dWc, db_blk = self._fused(cfg, G2d, idx, scales, w, X2d)
+            bs = cfg.block
+            cols = (idx[:, None] * bs
+                    + jnp.arange(bs, dtype=idx.dtype)[None, :]).reshape(-1)
+            return EstimatorVJP(dx=dX2d, rows=dWc.reshape(-1, w.shape[1]),
+                                cols=cols, db_c=db_blk.reshape(-1))
+        return self._per_column(G2d, idx, scales, w, X2d)
+
+    def _fused(self, cfg, G2d, idx, scales, w, X2d):
+        from repro.kernels import ref as kref
+
+        return kref.block_gather_matmul_fused_ref(G2d, idx, scales, w, X2d,
+                                                  block=cfg.block)
+
+    def _per_column(self, G2d, idx, scales, w, X2d):
+        # single gather of G shared by dX, dW and db
+        Gc = jnp.take(G2d, idx, axis=1) * scales[None, :].astype(G2d.dtype)
+        Wc = jnp.take(w, idx, axis=0)
+        return EstimatorVJP(dx=Gc @ Wc, rows=Gc.T @ X2d, cols=idx,
+                            db_c=jnp.sum(Gc, axis=0))
+
+
+class _PallasEstimator(_CompactEstimator):
+    """Compact semantics realised by the Pallas TPU kernels."""
+
+    name = "pallas"
+
+    def _fused(self, cfg, G2d, idx, scales, w, X2d):
+        from repro.kernels import ops as kops
+
+        return kops.block_gather_matmul_fused(G2d, idx, scales, w, X2d,
+                                              block=cfg.block)
+
+    def _per_column(self, G2d, idx, scales, w, X2d):
+        from repro.kernels import ops as kops
+
+        dX2d = kops.gather_cols_matmul(G2d, idx, scales, w)
+        rows = kops.gather_cols_matmul_dw(G2d, idx, scales, X2d)
+        db_c = (jnp.take(G2d, idx, axis=1)
+                * scales[None, :].astype(G2d.dtype)).sum(0)
+        return EstimatorVJP(dx=dX2d, rows=rows, cols=idx, db_c=db_c)
+
+
+estimators.register_estimator(_MaskEstimator())
+estimators.register_estimator(_CompactEstimator())
+estimators.register_estimator(_PallasEstimator())
+
+
+# ---------------------------------------------------------------------------
+# custom_vjp plumbing (shared by every registered estimator).
+# ---------------------------------------------------------------------------
 
 
 @partial(jax.custom_vjp, nondiff_argnums=(0,))
@@ -58,83 +186,27 @@ def _fwd(cfg: SketchConfig, x, w, b, key, slot):
 
 def _bwd(cfg: SketchConfig, res, g):
     x, w, key, has_b, slot = res
-    G2d, lead = _flatten_leading(g)
+    G2d, _ = _flatten_leading(g)
     X2d, _ = _flatten_leading(x)
     n = G2d.shape[-1]
 
-    if cfg.method == "per_element":
-        # Alg. 3: independent element masks on W (for dX) and X (for dW);
-        # bias gradient stays exact.
-        kw, kx = jax.random.split(key)
-        p = cfg.budget
-        mw = jax.random.bernoulli(kw, p, w.shape).astype(w.dtype)
-        mx = jax.random.bernoulli(kx, p, X2d.shape).astype(x.dtype)
-        dX = (G2d @ (w * mw)) / p
-        dW = (G2d.T @ (X2d * mx)) / p
-        db = jnp.sum(G2d, axis=0) if has_b else None
-        return _pack(dX.reshape(x.shape), dW.astype(w.dtype), db, has_b, slot)
+    est = estimators.get_estimator("mask" if cfg.is_noop else cfg.backend)
+    out = est.apply(cfg, G2d, X2d, w, key, has_b=has_b)
+    dX = out.dx.reshape(x.shape)
+    if not out.is_compact:
+        return _pack(dX, out.dw.astype(w.dtype), out.db, has_b, slot)
 
-    use_compact = cfg.backend in ("compact", "pallas") and not cfg.is_noop
-    if use_compact:
-        from repro.core.sketching import effective_cfg
-
-        cfg = effective_cfg(cfg, n)
-        plan = column_plan(cfg, G2d, w, key, want_compact=True)
-        idx, scales = plan.indices, plan.scales
-        if cfg.block > 1:
-            # Fused one-pass backward: dX, compact dW rows and compact db all
-            # come from a single stream over G's kept column-blocks (Pallas
-            # kernel on the pallas backend, single-gather XLA oracle on
-            # compact).
-            if cfg.backend == "pallas":
-                from repro.kernels import ops as kops
-
-                dX2d, dWc, db_blk = kops.block_gather_matmul_fused(
-                    G2d, idx, scales, w, X2d, block=cfg.block)
-            else:
-                from repro.kernels import ref as kref
-
-                dX2d, dWc, db_blk = kref.block_gather_matmul_fused_ref(
-                    G2d, idx, scales, w, X2d, block=cfg.block)
-            bs = cfg.block
-            cols = (idx[:, None] * bs + jnp.arange(bs, dtype=idx.dtype)[None, :]).reshape(-1)
-            rows = dWc.reshape(-1, w.shape[1])
-            db_c = db_blk.reshape(-1)
-        elif cfg.backend == "pallas":
-            from repro.kernels import ops as kops
-
-            dX2d = kops.gather_cols_matmul(G2d, idx, scales, w)
-            rows = kops.gather_cols_matmul_dw(G2d, idx, scales, X2d)
-            cols = idx
-            db_c = (jnp.take(G2d, idx, axis=1) * scales[None, :].astype(g.dtype)).sum(0)
-        else:
-            # single gather of G shared by dX, dW and db (the db gather used
-            # to be repeated per output)
-            Gc = jnp.take(G2d, idx, axis=1) * scales[None, :].astype(g.dtype)
-            Wc = jnp.take(w, idx, axis=0)
-            dX2d = Gc @ Wc
-            rows = Gc.T @ X2d
-            cols = idx
-            db_c = jnp.sum(Gc, axis=0)
-        db = None
-        if has_b:
-            db = jnp.zeros((n,), g.dtype).at[cols].add(db_c.astype(g.dtype))
-        dX = dX2d.reshape(x.shape)
-        if slot is not None:
-            # compact-gradient mode: rows/indices ride the slot cotangent,
-            # the dense w cotangent is structural zeros (folded by XLA)
-            slot_ct = CompactGrad(rows=rows.astype(jnp.float32),
-                                  idx=cols.astype(jnp.float32))
-            return (dX, jnp.zeros_like(w), db if has_b else None, None, slot_ct)
-        dW = jnp.zeros_like(w).at[cols].add(rows.astype(w.dtype))
-        return _pack(dX, dW, db, has_b, slot)
-
-    # Dense mask backend (paper-faithful), incl. per_sample / rcs / none.
-    Ghat = sketch_dense(cfg, G2d, w, key)
-    dX = Ghat @ w
-    dW = Ghat.T @ X2d
-    db = jnp.sum(Ghat, axis=0) if has_b else None
-    return _pack(dX.reshape(x.shape), dW.astype(w.dtype), db, has_b, slot)
+    db = None
+    if has_b:
+        db = jnp.zeros((n,), g.dtype).at[out.cols].add(out.db_c.astype(g.dtype))
+    if slot is not None:
+        # compact-gradient mode: rows/indices ride the slot cotangent,
+        # the dense w cotangent is structural zeros (folded by XLA)
+        slot_ct = CompactGrad(rows=out.rows.astype(jnp.float32),
+                              idx=out.cols.astype(jnp.float32))
+        return (dX, jnp.zeros_like(w), db if has_b else None, None, slot_ct)
+    dW = jnp.zeros_like(w).at[out.cols].add(out.rows.astype(w.dtype))
+    return _pack(dX, dW, db, has_b, slot)
 
 
 def _pack(dx, dw, db, has_b, slot):

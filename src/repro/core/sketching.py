@@ -58,7 +58,9 @@ class SketchConfig:
         independent sampling; exactly for correlated sampling).
       exact_r: correlated exact-r Bernoulli sampling (Lemma 3.1; paper default
         after Fig. 1a) vs independent gates (Lemma 3.4).
-      backend: ``mask`` | ``compact`` | ``pallas``.
+      backend: ``mask`` | ``compact`` | ``pallas``, or any additional
+        estimator registered via ``repro.api.register_estimator``
+        (see core/estimators.py).
       round_to: round the static keep-count ``r`` *up* to a multiple (128 keeps
         compact matmuls MXU/lane aligned on TPU; 1 = paper-faithful count).
       block: column-block granularity. 0/1 = per-column (paper-faithful).
@@ -84,13 +86,24 @@ class SketchConfig:
             raise ValueError(f"unknown sketch method {self.method!r}")
         if not (0.0 < self.budget <= 1.0):
             raise ValueError(f"budget must be in (0, 1], got {self.budget}")
-        if self.backend not in ("mask", "compact", "pallas"):
-            raise ValueError(f"unknown backend {self.backend!r}")
-        if self.backend in ("compact", "pallas") and self.method not in COLUMN_METHODS:
-            raise ValueError(
-                f"backend {self.backend!r} requires a column-family method, got {self.method!r}")
-        if self.backend in ("compact", "pallas") and not self.exact_r:
-            raise ValueError("compact/pallas backends need exact_r=True (static shapes)")
+        if self.backend in ("mask", "compact", "pallas"):
+            # builtin backends: static checks (registered in sketched_linear,
+            # which may still be mid-import when presets are built)
+            if self.backend in ("compact", "pallas") and self.method not in COLUMN_METHODS:
+                raise ValueError(
+                    f"backend {self.backend!r} requires a column-family method, got {self.method!r}")
+            if self.backend in ("compact", "pallas") and not self.exact_r:
+                raise ValueError("compact/pallas backends need exact_r=True (static shapes)")
+        else:
+            # open registry: any estimator registered via
+            # repro.api.register_estimator is a valid backend
+            from repro.core import estimators as _est
+
+            try:
+                est = _est.get_estimator(self.backend)
+            except KeyError as e:
+                raise ValueError(str(e)) from None
+            est.validate(self)
 
     @property
     def is_noop(self) -> bool:

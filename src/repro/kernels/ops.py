@@ -52,9 +52,13 @@ def block_gather_matmul_dw(G, block_idx, scales, X, *, block: int = 128):
 
 def block_gather_matmul_fused(G, block_idx, scales, W, X, *, block: int = 128):
     """One-pass fused backward (dX, compact dW, compact db); see
-    ``sketch_matmul.block_gather_matmul_fused``. Falls back to the unfused
-    kernel pair when the fused accumulators would not fit VMEM (on TPU),
-    and to the single-gather XLA oracle off-TPU."""
+    ``sketch_matmul.block_gather_matmul_fused``. When the fused accumulators
+    would not fit VMEM (on TPU), falls back to a 2-pass shape: the dX kernel
+    streams kept G once, and a single shared XLA gather (the dW-side half of
+    the fused oracle, ``ref.block_gather_matmul_dw_db_ref``) feeds both
+    compact dW and compact db — the old 3rd pass (a separate db gather next
+    to the unfused dW kernel) is gone. Off-TPU the single-gather XLA oracle
+    runs directly."""
     if _use_pallas():
         rb = block_idx.shape[0]
         fits = fused_vmem_bytes(G.shape[0], W.shape[1], rb, block,
@@ -63,17 +67,10 @@ def block_gather_matmul_fused(G, block_idx, scales, W, X, *, block: int = 128):
             return _bgm_fused_pallas(G, block_idx, scales, W, X, block=block,
                                      interpret=not on_tpu())
         dX = _bgm_pallas(G, block_idx, scales, W, block=block)
-        dWc = _bgm_dw_pallas(G, block_idx, scales, X, block=block)
-        db = _fused_db_ref(G, block_idx, scales, block)
+        dWc, db = kref.block_gather_matmul_dw_db_ref(G, block_idx, scales, X,
+                                                     block=block)
         return dX, dWc, db
     return kref.block_gather_matmul_fused_ref(G, block_idx, scales, W, X, block=block)
-
-
-def _fused_db_ref(G, block_idx, scales, block):
-    N, n = G.shape
-    Gb = G.reshape(N, n // block, block)
-    Gc = jnp.take(Gb, block_idx, axis=1).astype(jnp.float32) * scales[None, :, None]
-    return jnp.sum(Gc, axis=0)
 
 
 def gather_cols_matmul(G, idx, scales, W):

@@ -5,7 +5,7 @@ import jax
 import jax.numpy as jnp
 
 __all__ = ["block_gather_matmul_ref", "block_gather_matmul_dw_ref",
-           "block_gather_matmul_fused_ref",
+           "block_gather_matmul_fused_ref", "block_gather_matmul_dw_db_ref",
            "gather_cols_matmul_ref", "gather_cols_matmul_dw_ref",
            "col_l1_scores_ref", "flash_attention_ref"]
 
@@ -58,6 +58,31 @@ def block_gather_matmul_fused_ref(G, block_idx, scales, W, X, *, block: int):
     dWc = jax.lax.dot_general(Gc, X.astype(jnp.float32), (((0,), (0,)), ((), ())))
     db = jnp.sum(Gc, axis=0)  # [rb*bs] f32
     return dX, dWc.astype(G.dtype).reshape(rb, block, -1), db.reshape(rb, block)
+
+
+def block_gather_matmul_dw_db_ref(G, block_idx, scales, X, *, block: int):
+    """(dWc, db_c) from ONE shared gather of G's kept blocks.
+
+    The dW-side half of :func:`block_gather_matmul_fused_ref`: the scaled
+    compact ``Gc`` is materialised once behind an optimization barrier (XLA
+    would otherwise re-fuse the gather into both consumers and read G twice)
+    and feeds the compact weight gradient AND the compact bias gradient.
+    Used by the VMEM-overflow fallback in ``ops.block_gather_matmul_fused``,
+    which pairs it with the dX kernel for a 2-pass backward over kept G.
+    Shapes: dWc [rb, block, d_in], db_c [rb, block] f32.
+    """
+    N, n = G.shape
+    rb = block_idx.shape[0]
+    cols = (block_idx[:, None] * block
+            + jnp.arange(block, dtype=block_idx.dtype)[None, :]).reshape(-1)
+    col_scales = jnp.repeat(scales, block)
+    from repro import compat
+
+    Gc = jnp.take(G, cols, axis=1).astype(jnp.float32) * col_scales[None, :]
+    (Gc,) = compat.optimization_barrier((Gc,))
+    dWc = jax.lax.dot_general(Gc, X.astype(jnp.float32), (((0,), (0,)), ((), ())))
+    db = jnp.sum(Gc, axis=0)  # [rb*bs] f32
+    return dWc.astype(G.dtype).reshape(rb, block, -1), db.reshape(rb, block)
 
 
 def gather_cols_matmul_ref(G, idx, scales, W):

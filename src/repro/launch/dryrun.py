@@ -34,39 +34,34 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.api import ExecutionConfig, Runtime, SketchConfig, SketchPolicy
 from repro.configs.base import SHAPE_CELLS, ArchConfig, ShapeCell
 from repro.configs.registry import ARCH_IDS, cells_for, get_config
-from repro.core import SketchConfig, SketchPolicy
 from repro.launch import input_specs as ispec
 from repro.launch import sharding as shard
 from repro.launch.hlo_analysis import (HW, collective_bytes, cost_summary,
                                        fit_depth_model, predict_depth_model,
                                        roofline_terms)
 from repro.launch.mesh import dp_axes, make_production_mesh, mp_axes
-from repro.models import lm
-from repro.nn.common import Ctx
 from repro.optim import adamw, cosine_warmup
-from repro.serve.serve_step import make_decode_step
-from repro.train.train_step import make_train_step
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
                            "results", "dryrun")
 
 # default sketch policy for train cells: the paper's ℓ1 default at p=0.1 in
 # the TPU-compact realisation. Baseline (exact / mask) variants are produced
-# by --policy {exact, mask, compact}.
+# by --policy {exact, mask, compact}. Each entry is (policy, tp_sketch);
+# "compact_sharded" adds the TP-local compact sketch + compressed DP gradient
+# reduce-scatter. run_cell folds these into a Runtime per cell.
+_BLOCK_L1 = SketchPolicy(base=SketchConfig(method="l1", budget=0.1,
+                                           backend="compact", block=128))
 _POLICIES = {
-    "exact": None,
-    "mask": SketchPolicy(base=SketchConfig(method="l1", budget=0.1, backend="mask")),
-    "compact": SketchPolicy(base=SketchConfig(method="l1", budget=0.1,
-                                              backend="compact", block=128)),
-    # TP-local compact sketch + compressed DP gradient reduce-scatter
-    "compact_sharded": SketchPolicy(base=SketchConfig(method="l1", budget=0.1,
-                                                      backend="compact", block=128)),
+    "exact": (None, False),
+    "mask": (SketchPolicy(base=SketchConfig(method="l1", budget=0.1,
+                                            backend="mask")), False),
+    "compact": (_BLOCK_L1, False),
+    "compact_sharded": (_BLOCK_L1, True),
 }
-
-
-object.__setattr__(_POLICIES["compact_sharded"], "_tp_sketch", True)
 
 
 def _adjust_for_depth(cfg: ArchConfig, L: int) -> ArchConfig:
@@ -125,17 +120,27 @@ def _act_sharding(mesh, batch_div, seq_len=0, sp: bool = True):
 TRAIN_ACCUM = {"llama3_405b": 8, "nemotron_4_340b": 8, "olmoe_1b_7b": 2}
 
 
-def _build_train(cfg, cell, mesh, policy, cost_mode, sp=True):
+def _runtime(cfg, cell, mesh, policy_entry, cost_mode, sp, *, batch_div,
+             seq_len, accum: int = 1) -> Runtime:
+    """One Runtime per dry-run cell: the same front door production uses."""
+    dp, mp = _mesh_axes(mesh)
+    policy, tp_sketch = policy_entry if policy_entry is not None else (None, False)
+    return Runtime(policy=policy, execution=ExecutionConfig(
+        mesh=mesh, act_sharding=_act_sharding(mesh, batch_div, seq_len, sp),
+        data_axes=dp, model_axes=mp, tp_sketch=tp_sketch, accum=accum,
+        cost_mode=cost_mode))
+
+
+def _build_train(cfg, cell, mesh, policy_entry, cost_mode, sp=True):
     dp, mp = _mesh_axes(mesh)
     n_dp = int(np.prod([mesh.shape[a] for a in dp]))
     opt = adamw(cosine_warmup(3e-4, 2000, 100_000), weight_decay=0.1, clip=1.0,
                 moment_dtype=jnp.bfloat16 if cfg.param_dtype == "bfloat16" else jnp.float32)
     accum = 1 if cost_mode else TRAIN_ACCUM.get(cfg.name.replace("-", "_"), 1)
-    step = make_train_step(cfg, opt, policy, mesh=mesh,
-                           act_sharding=_act_sharding(mesh, cell.global_batch % n_dp == 0,
-                                                      cell.seq_len, sp),
-                           cost_mode=cost_mode, data_axes=dp, model_axes=mp,
-                           accum=accum, tp_sketch=getattr(policy, "_tp_sketch", False))
+    runtime = _runtime(cfg, cell, mesh, policy_entry, cost_mode, sp,
+                       batch_div=cell.global_batch % n_dp == 0,
+                       seq_len=cell.seq_len, accum=accum)
+    step = runtime.train_step(cfg, opt, jitted=False)
 
     params_s = ispec.params_struct(cfg)
     pspecs = shard.param_shardings(params_s, mesh)
@@ -160,11 +165,10 @@ def _build_train(cfg, cell, mesh, policy, cost_mode, sp=True):
 def _build_prefill(cfg, cell, mesh, cost_mode, sp=True):
     dp, mp = _mesh_axes(mesh)
     n_dp = int(np.prod([mesh.shape[a] for a in dp]))
-    from repro.serve.serve_step import make_prefill
-    fn = make_prefill(cfg, cell.seq_len, mesh=mesh,
-                      act_sharding=_act_sharding(mesh, cell.global_batch % n_dp == 0,
-                                                 cell.seq_len, sp),
-                      data_axes=dp, model_axes=mp, cost_mode=cost_mode)
+    runtime = _runtime(cfg, cell, mesh, None, cost_mode, sp,
+                       batch_div=cell.global_batch % n_dp == 0,
+                       seq_len=cell.seq_len)
+    fn = runtime.prefill_step(cfg, cell.seq_len)
     params_s = ispec.params_struct(cfg)
     pspecs = shard.param_shardings(params_s, mesh)
     batch = ispec.train_inputs(cfg, cell)
@@ -178,9 +182,9 @@ def _build_prefill(cfg, cell, mesh, cost_mode, sp=True):
 def _build_decode(cfg, cell, mesh, cost_mode, sp=True):
     dp, mp = _mesh_axes(mesh)
     n_dp = int(np.prod([mesh.shape[a] for a in dp]))
-    fn = make_decode_step(cfg, mesh=mesh,
-                          act_sharding=_act_sharding(mesh, cell.global_batch % n_dp == 0, 0, sp),
-                          data_axes=dp, model_axes=mp, cost_mode=cost_mode)
+    runtime = _runtime(cfg, cell, mesh, None, cost_mode, sp,
+                       batch_div=cell.global_batch % n_dp == 0, seq_len=0)
+    fn = runtime.decode_step(cfg)
     params_s = ispec.params_struct(cfg)
     pspecs = shard.param_shardings(params_s, mesh)
     dec = ispec.decode_inputs(cfg, cell)

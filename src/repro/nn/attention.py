@@ -174,6 +174,18 @@ def multi_head_attention(q, k, v, cfg: AttnCfg, *, cost_mode: bool = False,
         return o.astype(q.dtype)
 
     if G > 1:
+        # Pin the GQA k/v layout on BOTH sides of the head repeat. The repeat
+        # output is head-sharded (below), so SPMD wants its operand
+        # head-partial too — but the operand arrives seq-sharded from the
+        # sequence-parallel projections, and with n_kv < model-axis size the
+        # un-annotated transition logs an `[spmd] Involuntary full
+        # rematerialization` in the forward AND the remat'd backward of
+        # production train cells (same failure mode as the rope.py position
+        # broadcast, see ROADMAP). constrain_heads picks (dp, None,
+        # model-if-divisible, None), so the small pre-repeat tensor reshards
+        # voluntarily once and both directions reuse the layout.
+        if constrain is not None:
+            k, v = constrain(k), constrain(v)
         k = jnp.repeat(k, G, axis=2)
         v = jnp.repeat(v, G, axis=2)
     if constrain is not None:

@@ -97,10 +97,12 @@ def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32, *, scale: float | 
     return p
 
 
-# TP role sets live in core.compact_grad (shared with the grad-slot builder,
-# which must mirror this dispatch exactly).
+# TP role sets and the compact-capability check live in core.compact_grad
+# (shared with the grad-slot builder, which must mirror this dispatch
+# exactly — including for estimators registered after import).
 from repro.core.compact_grad import TP_OUT_ROLES as _TP_OUT_ROLES  # noqa: E402
 from repro.core.compact_grad import TP_ROW_ROLES as _TP_ROW_ROLES  # noqa: E402
+from repro.core.compact_grad import _compact_capable  # noqa: E402
 
 
 def dense(params, x, ctx: Ctx, role: str):
@@ -128,9 +130,12 @@ def dense(params, x, ctx: Ctx, role: str):
         if tp_row_applicable(ctx, cfg, params["w"].shape[1]):
             return tp_row_sketched_linear(x, params["w"], ctx, cfg, ctx.site_key(role),
                                           slot=slot)
-    if (cfg is not None and ctx.tp_sketch and cfg.backend in ("compact", "pallas")):
+    if (cfg is not None and ctx.tp_sketch and _compact_capable(cfg.backend)):
         # TP-incompatible site (e.g. kv heads < model axis): fall back to the
-        # dense-mask estimator rather than the scatter-hostile compact path.
+        # dense-mask estimator rather than the scatter-hostile compact path
+        # (applies to ANY registered compact-form estimator — the grad-slot
+        # builder emits no slot for these sites, so the backward must not
+        # produce compact rows here).
         import dataclasses as _dc
 
         cfg = _dc.replace(cfg, backend="mask", block=0)

@@ -3,8 +3,10 @@
 A deliberately compact continuous-batching-lite engine: requests are padded
 into fixed prefill buckets, decoded as one batch with per-slot stop tracking,
 and finished slots are refilled from the queue between decode bursts. The
-jitted prefill/decode steps are the same ones the dry-run lowers, so the
-engine exercises the production code paths end-to-end (examples/serve_lm.py).
+jitted prefill/decode steps come from the :class:`~repro.api.Runtime` front
+door (``Runtime.serve`` constructs an Engine) — the same factories the
+dry-run lowers, so the engine exercises the production code paths end-to-end
+(examples/serve_lm.py). Pass a mesh-bearing Runtime to serve sharded.
 """
 from __future__ import annotations
 
@@ -15,9 +17,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api.runtime import Runtime
 from repro.configs.base import ArchConfig
-from repro.models import lm
-from repro.nn.common import Ctx
 from repro.serve.serve_step import greedy_sample
 
 __all__ = ["Request", "Engine"]
@@ -31,16 +32,15 @@ class Request:
 
 
 class Engine:
-    def __init__(self, params, cfg: ArchConfig, *, batch: int = 4, max_len: int = 256):
+    def __init__(self, params, cfg: ArchConfig, *, batch: int = 4,
+                 max_len: int = 256, runtime: Optional[Runtime] = None):
         self.params = params
         self.cfg = cfg
         self.batch = batch
         self.max_len = max_len
-        ctx = Ctx()
-        self._prefill = jax.jit(
-            lambda p, b: lm.prefill(p, b, Ctx(), cfg, max_len))
-        self._decode = jax.jit(
-            lambda p, c, t, pos: lm.decode_step(p, c, t, pos, Ctx(), cfg))
+        self.runtime = runtime if runtime is not None else Runtime()
+        self._prefill = jax.jit(self.runtime.prefill_step(cfg, max_len))
+        self._decode = jax.jit(self.runtime.decode_step(cfg))
 
     def run(self, requests: List[Request]) -> List[Request]:
         """Serve a list of requests in fixed-size batches."""

@@ -3,17 +3,20 @@
 decode cells lower ``serve_step`` — one new token against a KV/SSM cache of
 ``seq_len`` — NOT ``train_step`` (task spec). The cache sharding comes from
 ``repro.launch.sharding.cache_specs`` (sequence over model, batch over data).
+
+Both factories take an :class:`~repro.api.ExecutionConfig` (the Runtime front
+door passes it via ``Runtime.prefill_step`` / ``Runtime.decode_step``); the
+loose kwargs are the legacy spelling.
 """
 from __future__ import annotations
 
 from typing import Optional
 
-import jax
 import jax.numpy as jnp
 
+from repro.api.execution import ExecutionConfig
 from repro.configs.base import ArchConfig
 from repro.models import lm
-from repro.nn.common import Ctx
 
 __all__ = ["make_decode_step", "make_prefill", "greedy_sample"]
 
@@ -22,24 +25,36 @@ def greedy_sample(logits):
     return jnp.argmax(logits, axis=-1).astype(jnp.int32)
 
 
-def make_decode_step(cfg: ArchConfig, *, mesh=None, act_sharding=None,
+def _execution(execution, mesh, act_sharding, data_axes, model_axes, cost_mode):
+    if execution is not None:
+        return execution
+    return ExecutionConfig(mesh=mesh, act_sharding=act_sharding,
+                           data_axes=tuple(data_axes),
+                           model_axes=tuple(model_axes), cost_mode=cost_mode)
+
+
+def make_decode_step(cfg: ArchConfig, *, execution: Optional[ExecutionConfig] = None,
+                     mesh=None, act_sharding=None,
                      data_axes=("data",), model_axes=("model",), cost_mode=False):
     """Returns ``decode_fn(params, caches, tokens[B,1], pos) -> (logits, caches)``."""
+    ex = _execution(execution, mesh, act_sharding, data_axes, model_axes, cost_mode)
 
     def decode_fn(params, caches, tokens, pos):
-        ctx = Ctx(policy=None, mesh=mesh, act_sharding=act_sharding, decode=True,
-                  data_axes=data_axes, model_axes=model_axes, cost_mode=cost_mode)
+        ctx = ex.make_ctx(decode=True)
         logits, new_caches = lm.decode_step(params, caches, tokens, pos, ctx, cfg)
         return logits, new_caches
 
     return decode_fn
 
 
-def make_prefill(cfg: ArchConfig, max_len: int, *, mesh=None, act_sharding=None,
+def make_prefill(cfg: ArchConfig, max_len: int, *,
+                 execution: Optional[ExecutionConfig] = None,
+                 mesh=None, act_sharding=None,
                  data_axes=("data",), model_axes=("model",), cost_mode=False):
+    ex = _execution(execution, mesh, act_sharding, data_axes, model_axes, cost_mode)
+
     def prefill_fn(params, batch):
-        ctx = Ctx(policy=None, mesh=mesh, act_sharding=act_sharding,
-                  data_axes=data_axes, model_axes=model_axes, cost_mode=cost_mode)
+        ctx = ex.make_ctx()
         return lm.prefill(params, batch, ctx, cfg, max_len)
 
     return prefill_fn

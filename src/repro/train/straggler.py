@@ -1,64 +1,13 @@
-"""Straggler mitigation via sketch-budget buckets (paper App. B.1).
+"""Legacy location of the straggler controller (paper App. B.1).
 
-The paper observes that VJP approximation can be applied *selectively at slow
-compute nodes*. Under SPMD every device must run the same program, so we apply
-the idea step-wise: the trainer keeps a small set of pre-compiled train steps
-at different sketch budgets; a controller watches recent step times and drops
-to a cheaper backward when the measured step time exceeds the target (e.g. a
-slow host, a thermally-throttled chip, contention), recovering when times
-normalise. Unbiasedness means switching budgets mid-run never biases the
-gradient — only its variance changes (§2.2), which is exactly the trade
-Eq. (6) prices.
+The bucket machinery was absorbed into the budget-schedule front door:
+:class:`repro.api.BudgetSchedule` (``BudgetSchedule.straggler(...)``) owns
+the pre-compiled buckets and :class:`repro.api.StragglerController` the
+reactive switching. This module re-exports the controller so existing
+imports keep working.
 """
 from __future__ import annotations
 
-import time
-from collections import deque
+from repro.api.schedule import StragglerController
 
 __all__ = ["StragglerController"]
-
-
-class StragglerController:
-    def __init__(self, budgets=(1.0, 0.5, 0.2, 0.1, 0.05), *, window: int = 8,
-                 slow_factor: float = 1.3, fast_factor: float = 1.05,
-                 target_step_s: float | None = None):
-        """budgets must be sorted descending; index 0 = full backward."""
-        self.budgets = tuple(budgets)
-        self.level = 0
-        self.window = window
-        self.slow = slow_factor
-        self.fast = fast_factor
-        self.target = target_step_s
-        self._times = deque(maxlen=window)
-        self._t0 = None
-
-    @property
-    def budget(self) -> float:
-        return self.budgets[self.level]
-
-    def step_begin(self):
-        self._t0 = time.perf_counter()
-
-    def step_end(self):
-        if self._t0 is None:
-            return self.budget
-        dt = time.perf_counter() - self._t0
-        self._times.append(dt)
-        if self.target is None and len(self._times) == self.window and self.level == 0:
-            # calibrate the target from the first full window at full budget
-            self.target = sorted(self._times)[self.window // 2]
-        if self.target is None or len(self._times) < 3:
-            return self.budget
-        med = sorted(self._times)[len(self._times) // 2]
-        if med > self.slow * self.target and self.level + 1 < len(self.budgets):
-            self.level += 1
-            self._times.clear()
-        elif med < self.fast * self.target and self.level > 0:
-            self.level -= 1
-            self._times.clear()
-        return self.budget
-
-    def observe(self, dt: float):
-        """Test hook: feed an externally measured step time."""
-        self._t0 = time.perf_counter() - dt
-        return self.step_end()

@@ -25,11 +25,11 @@ import jax
 import jax.numpy as jnp
 
 from repro import compat
+from repro.api.execution import ExecutionConfig
 from repro.configs.base import ArchConfig
 from repro.core import SketchPolicy
 from repro.core import compact_grad as cgrad
 from repro.models import lm
-from repro.nn.common import Ctx
 from repro.optim import Optimizer, global_grad_norm
 
 __all__ = ["TrainState", "make_train_step", "init_state"]
@@ -50,26 +50,36 @@ def init_state(key, cfg: ArchConfig, opt: Optimizer) -> TrainState:
 
 
 def make_train_step(cfg: ArchConfig, opt: Optimizer, policy: Optional[SketchPolicy] = None,
-                    *, mesh=None, act_sharding=None, accum: int = 1,
+                    *, execution: Optional[ExecutionConfig] = None,
+                    mesh=None, act_sharding=None, accum: int = 1,
                     cost_mode: bool = False, data_axes=("data",), model_axes=("model",),
                     tp_sketch: bool = False, compact_grads: bool = False):
     """Returns ``step_fn(state, batch, key) -> (state, metrics)``.
+
+    ``execution`` is the one-object spelling (the :class:`Runtime` front door
+    passes it); the loose kwargs are the legacy spelling and are ignored when
+    ``execution`` is given.
 
     ``compact_grads=True`` threads per-site gradient slots through the params
     tree so sketched sites' dW comes out of the backward as a
     :class:`~repro.core.compact_grad.CompactGrad` (rows + indices, no
     densify-scatter) and is applied by the optimizer as a sparse-row update.
     Requires ``accum == 1`` — microbatches sample different index sets, so
-    compact gradients cannot be accumulated.
+    compact gradients cannot be accumulated (enforced by ExecutionConfig).
     """
-    if compact_grads and accum != 1:
-        raise ValueError("compact_grads requires accum == 1 (compact index "
-                         "sets differ per microbatch; accumulate densely)")
+    if execution is None:
+        execution = ExecutionConfig(mesh=mesh, act_sharding=act_sharding,
+                                    data_axes=tuple(data_axes),
+                                    model_axes=tuple(model_axes),
+                                    tp_sketch=tp_sketch,
+                                    compact_grads=compact_grads, accum=accum,
+                                    cost_mode=cost_mode)
+    ex = execution
+    accum = ex.accum
+    compact_grads = ex.compact_grads
 
     def ctx_for(key):
-        return Ctx(policy=policy, key=key, mesh=mesh, cost_mode=cost_mode,
-                   act_sharding=act_sharding, data_axes=data_axes,
-                   model_axes=model_axes, tp_sketch=tp_sketch)
+        return ex.make_ctx(policy=policy, key=key)
 
     def loss_fn(params, batch, key):
         total, metrics = lm.lm_loss(params, batch, ctx_for(key), cfg, key)
@@ -86,8 +96,8 @@ def make_train_step(cfg: ArchConfig, opt: Optimizer, policy: Optional[SketchPoli
             params_in = state.params
             if compact_grads:
                 params_in = cgrad.with_grad_slots(
-                    state.params, policy, mesh=mesh, data_axes=data_axes,
-                    model_axes=model_axes, tp_sketch=tp_sketch,
+                    state.params, policy, mesh=ex.mesh, data_axes=ex.data_axes,
+                    model_axes=ex.model_axes, tp_sketch=ex.tp_sketch,
                     n_layers=cfg.n_layers)
             loss, metrics, grads = one_micro(params_in, batch, key)
             if compact_grads:

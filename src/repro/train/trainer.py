@@ -1,58 +1,68 @@
-"""Training loop: metrics, periodic async checkpointing, straggler control,
+"""Training loop: metrics, periodic async checkpointing, budget schedules,
 auto-resume, elastic restart.
 
 The loop is deliberately thin — all heavy lifting is in the jitted step — but
 production-shaped: it survives SIGTERM-style interruption (atomic checkpoints),
-resumes from the newest checkpoint (possibly onto a different mesh), and can
-switch between precompiled sketch-budget buckets per step (paper App. B.1
-straggler mitigation; see repro/train/straggler.py).
+resumes from the newest checkpoint (possibly onto a different mesh), and
+switches between the pre-compiled budget buckets of the runtime's
+:class:`~repro.api.BudgetSchedule` per step (paper App. B.1 straggler
+mitigation and §4 warmup/anneal schedules).
+
+:func:`train_loop` is the Runtime-native loop (``Runtime.train`` delegates
+here); :func:`train` is the legacy kwarg spelling kept as a thin shim that
+constructs a Runtime internally and warns once.
 """
 from __future__ import annotations
 
 import dataclasses
-import time
+import warnings
 from typing import Callable, Iterable, Optional
 
 import jax
 import numpy as np
 
 from repro import compat
+from repro.api import Runtime
 from repro.configs.base import ArchConfig
 from repro.core import SketchPolicy
 from repro.optim import Optimizer
 from repro.train.checkpoint import CheckpointManager
-from repro.train.straggler import StragglerController
-from repro.train.train_step import TrainState, init_state, make_train_step
+from repro.train.train_step import TrainState, init_state
 
-__all__ = ["TrainerConfig", "train"]
+__all__ = ["TrainerConfig", "train", "train_loop"]
 
 
 @dataclasses.dataclass
 class TrainerConfig:
+    """Loop mechanics (steps, logging, checkpointing) — everything about the
+    *model and estimator* lives on the Runtime instead.
+
+    ``straggler_budgets`` is the legacy spelling of a reactive
+    :class:`~repro.api.BudgetSchedule` and is honoured only through the
+    legacy :func:`train` shim.
+    """
+
     steps: int = 100
     log_every: int = 10
     ckpt_dir: Optional[str] = None
     ckpt_every: int = 100
     seed: int = 0
-    straggler_budgets: tuple = ()  # e.g. (1.0, 0.5, 0.2) enables mitigation
+    straggler_budgets: tuple = ()  # legacy; use Runtime.schedule
 
 
-def train(cfg: ArchConfig, opt: Optimizer, data: Iterable, tcfg: TrainerConfig,
-          policy: Optional[SketchPolicy] = None, *, mesh=None,
-          act_sharding=None, data_axes=("data",), model_axes=("model",),
-          tp_sketch: bool = False, compact_grads: bool = False,
-          state: Optional[TrainState] = None,
-          on_metrics: Optional[Callable] = None):
-    """Run the loop; returns (final_state, history list of metric dicts).
+def train_loop(runtime: Runtime, cfg: ArchConfig, opt: Optimizer,
+               data: Iterable, tcfg: Optional[TrainerConfig] = None, *,
+               state: Optional[TrainState] = None,
+               on_metrics: Optional[Callable] = None):
+    """Run the loop under ``runtime``; returns (final_state, history).
 
-    With ``mesh`` set, the distributed kwargs (``act_sharding``, axis names,
-    ``tp_sketch``) are forwarded to every compiled step so the trainer drives
-    the same sharded sketched path as launch/dryrun — including the TP-local
-    compact sketch with the compressed DP gradient reduce-scatter.
-    ``compact_grads`` keeps sketched dW compact (rows + indices) from the
-    backward through clipping into sparse-row optimizer updates (see
-    docs/perf.md).
+    One train step is compiled per distinct budget in
+    ``runtime.schedule.buckets()`` — before the loop starts — and each step
+    dispatches to the bucket the schedule (or, in reactive mode, the
+    straggler controller) selects. Unbiasedness means bucket switches never
+    bias the gradient, only its variance (paper §2.2).
     """
+    tcfg = tcfg or TrainerConfig()
     key = compat.prng_key(tcfg.seed)
     if state is None:
         state = init_state(jax.random.fold_in(key, 0), cfg, opt)
@@ -64,21 +74,11 @@ def train(cfg: ArchConfig, opt: Optimizer, data: Iterable, tcfg: TrainerConfig,
             state, step0 = restored
             print(f"[trainer] resumed from step {step0}")
 
-    # straggler buckets: pre-built steps at descending sketch budgets
-    controller = None
-    steps_by_budget = {}
-    step_kw = dict(mesh=mesh, act_sharding=act_sharding, data_axes=data_axes,
-                   model_axes=model_axes, tp_sketch=tp_sketch,
-                   compact_grads=compact_grads)
-    if tcfg.straggler_budgets and policy is not None:
-        controller = StragglerController(tcfg.straggler_budgets)
-        for b in tcfg.straggler_budgets:
-            pol_b = policy if b >= 1.0 else policy.with_budget(b)
-            steps_by_budget[b] = jax.jit(make_train_step(cfg, opt, pol_b, **step_kw),
-                                         donate_argnums=(0,))
-    else:
-        steps_by_budget[1.0] = jax.jit(make_train_step(cfg, opt, policy, **step_kw),
-                                       donate_argnums=(0,))
+    # pre-built budget buckets: one compiled step per distinct budget
+    schedule = runtime.schedule
+    steps_by_budget = {b: runtime.train_step(cfg, opt, budget=b)
+                       for b in schedule.buckets()}
+    controller = schedule.make_controller()
 
     history = []
     data_it = iter(data)
@@ -86,8 +86,8 @@ def train(cfg: ArchConfig, opt: Optimizer, data: Iterable, tcfg: TrainerConfig,
     for step in range(start_step, tcfg.steps):
         batch = next(data_it)
         step_key = jax.random.fold_in(key, step + 1)
-        budget = controller.budget if controller else 1.0
-        fn = steps_by_budget.get(budget, steps_by_budget[max(steps_by_budget)])
+        budget = controller.budget if controller else schedule.budget_at(step)
+        fn = steps_by_budget[budget]
         if controller:
             controller.step_begin()
         state, metrics = fn(state, batch, step_key)
@@ -102,10 +102,46 @@ def train(cfg: ArchConfig, opt: Optimizer, data: Iterable, tcfg: TrainerConfig,
             if on_metrics:
                 on_metrics(m)
             else:
+                b = "exact" if budget is None else f"{budget:.2f}"
                 print(f"[trainer] step {step:6d} loss {m['loss']:.4f} "
-                      f"budget {budget:.2f}")
+                      f"budget {b}")
         if ckpt is not None:
             ckpt.maybe_save(step + 1, state)
     if ckpt is not None:
         ckpt.wait()
     return state, history
+
+
+_warned_legacy = False
+
+
+def train(cfg: ArchConfig, opt: Optimizer, data: Iterable, tcfg: TrainerConfig,
+          policy: Optional[SketchPolicy] = None, *, mesh=None,
+          act_sharding=None, data_axes=("data",), model_axes=("model",),
+          tp_sketch: bool = False, compact_grads: bool = False,
+          state: Optional[TrainState] = None,
+          on_metrics: Optional[Callable] = None):
+    """Legacy entry point — prefer ``repro.api.Runtime(...).train(...)``.
+
+    Thin deprecation shim: the loose kwargs are bundled into a
+    :class:`~repro.api.Runtime` (``tcfg.straggler_budgets`` becomes a
+    reactive :class:`~repro.api.BudgetSchedule`) and the call is forwarded to
+    :func:`train_loop`, so old calls produce bit-identical steps to the
+    equivalent Runtime. Warns ``DeprecationWarning`` once per process.
+    """
+    global _warned_legacy
+    if not _warned_legacy:
+        warnings.warn(
+            "repro.train.trainer.train(...) with loose kwargs is deprecated; "
+            "build a repro.api.Runtime and call Runtime.train(...) "
+            "(see docs/api.md for the migration table)",
+            DeprecationWarning, stacklevel=2)
+        _warned_legacy = True
+    straggler = tuple(tcfg.straggler_budgets) if (tcfg.straggler_budgets
+                                                 and policy is not None) else ()
+    runtime = Runtime.from_legacy_kwargs(
+        policy, mesh=mesh, act_sharding=act_sharding, data_axes=data_axes,
+        model_axes=model_axes, tp_sketch=tp_sketch, compact_grads=compact_grads,
+        straggler_budgets=straggler)
+    return train_loop(runtime, cfg, opt, data, tcfg, state=state,
+                      on_metrics=on_metrics)

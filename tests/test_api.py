@@ -1,0 +1,283 @@
+"""The Runtime front door: registry round-trip, hash/eq + recompile counts,
+budget schedules, and legacy-kwarg shim equivalence."""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api
+from repro.api import (BudgetSchedule, EstimatorVJP, ExecutionConfig, Runtime,
+                       SketchConfig, SketchPolicy)
+from repro.api import runtime as runtime_mod
+from repro.configs.base import ArchConfig
+from repro.data.synthetic import LMStream
+from repro.optim import sgd
+
+TINY = ArchConfig(name="tiny-api", family="dense", n_layers=2, d_model=64,
+                  n_heads=4, n_kv=2, d_ff=128, vocab=128, q_chunk=32,
+                  kv_chunk=32)
+
+
+def _batch(seed=0):
+    return next(iter(LMStream(vocab=TINY.vocab, seed=seed).batches(4, 32)))
+
+
+# ---------------------------------------------------------------------------
+# Estimator registry
+# ---------------------------------------------------------------------------
+
+
+class _ToyColumnDrop(api.Estimator):
+    """Third-party-style estimator: independent column gates z/p on G —
+    unbiased (E[Ĝ|G] = G), implemented entirely outside repro/core."""
+
+    name = "toy_coldrop"
+    supports_compact_grad = False
+
+    def validate(self, cfg):
+        if cfg.budget >= 1.0:
+            raise ValueError("toy_coldrop needs budget < 1")
+
+    def apply(self, cfg, G2d, X2d, w, key, *, has_b, score_psum_axes=None):
+        p = cfg.budget
+        z = jax.random.bernoulli(key, p, (G2d.shape[-1],)).astype(G2d.dtype)
+        Ghat = G2d * (z / p)[None, :]
+        return EstimatorVJP(dx=Ghat @ w, dw=Ghat.T @ X2d,
+                            db=jnp.sum(Ghat, axis=0) if has_b else None)
+
+
+def _ensure_toy_registered():
+    if "toy_coldrop" not in api.registered_backends():
+        api.register_estimator(_ToyColumnDrop())
+
+
+def test_registry_builtins_and_errors():
+    assert set(api.registered_backends()) >= {"mask", "compact", "pallas"}
+    assert api.get_estimator("compact").supports_compact_grad
+    assert not api.get_estimator("mask").supports_compact_grad
+    with pytest.raises(KeyError, match="register"):
+        api.get_estimator("definitely_not_registered")
+    # a SketchConfig naming an unregistered backend fails loudly
+    with pytest.raises(ValueError, match="register"):
+        SketchConfig(method="l1", budget=0.2, backend="definitely_not_registered")
+    # builtins cannot be silently replaced
+    with pytest.raises(ValueError, match="already registered"):
+        api.register_estimator(api.get_estimator("mask"), name="mask")
+
+
+def test_registry_roundtrip_toy_estimator_trains():
+    """A toy third-party estimator registers and trains end-to-end through
+    the Runtime — without modifying core/sketching.py or
+    core/sketched_linear.py."""
+    _ensure_toy_registered()
+    # registered backends validate through the estimator's own hook
+    with pytest.raises(ValueError, match="budget < 1"):
+        SketchConfig(method="per_column", budget=1.0, backend="toy_coldrop")
+    pol = SketchPolicy(base=SketchConfig(method="per_column", budget=0.5,
+                                         backend="toy_coldrop"))
+    rt = Runtime(policy=pol)
+    opt = sgd(0.1)
+    state = rt.init_state(jax.random.key(0), TINY, opt)
+    step = rt.train_step(TINY, opt, donate=False)
+    state2, metrics = step(state, _batch(), jax.random.key(1))
+    assert np.isfinite(float(metrics["loss"]))
+    assert np.isfinite(float(metrics["grad_norm"])) and float(metrics["grad_norm"]) > 0
+    # params actually moved
+    w0 = state.params["embed"] if "embed" in state.params else None
+    moved = any(not np.array_equal(np.asarray(a), np.asarray(b))
+                for a, b in zip(jax.tree.leaves(state.params),
+                                jax.tree.leaves(state2.params)))
+    assert moved
+
+
+def test_toy_estimator_is_unbiased():
+    """E over keys of the toy backward equals the exact gradient (on one
+    sketched site) — the registry contract that keeps plugins safe."""
+    _ensure_toy_registered()
+    from repro.core import sketched_linear
+
+    cfg = SketchConfig(method="per_column", budget=0.5, backend="toy_coldrop")
+    ks = jax.random.split(jax.random.key(3), 3)
+    x = jax.random.normal(ks[0], (32, 16))
+    w = jax.random.normal(ks[1], (24, 16)) / 4.0
+    g_out = jax.random.normal(ks[2], (32, 24))
+
+    def loss(w_, key):
+        return jnp.sum(sketched_linear(x, w_, key=key, cfg=cfg) * g_out)
+
+    exact = jax.grad(lambda w_: jnp.sum(sketched_linear(x, w_) * g_out))(w)
+    keys = jax.random.split(jax.random.key(7), 400)
+    gs = jax.vmap(lambda k: jax.grad(loss)(w, k))(keys)
+    mean = np.asarray(gs.mean(0))
+    se = np.asarray(gs.std(0)) / np.sqrt(len(keys)) + 1e-9
+    t = np.abs(mean - np.asarray(exact)) / se
+    assert np.mean(t) < 1.8, np.mean(t)
+
+
+# ---------------------------------------------------------------------------
+# Runtime hash/eq + recompile counting
+# ---------------------------------------------------------------------------
+
+
+def _l1_runtime(schedule=None):
+    return Runtime(policy=SketchPolicy(base=SketchConfig(method="l1", budget=0.3)),
+                   schedule=schedule if schedule is not None else BudgetSchedule())
+
+
+def test_runtime_hash_eq():
+    a, b = _l1_runtime(), _l1_runtime()
+    assert a == b and hash(a) == hash(b)
+    assert a != a.replace(schedule=BudgetSchedule.warmup_exact(5))
+    assert a != a.replace(execution=ExecutionConfig(tp_sketch=True))
+    assert a != a.replace(policy=None)
+    # usable as dict keys (the step-cache contract)
+    assert len({a: 1, b: 2}) == 1
+
+
+def test_runtime_step_cache_one_compile_per_bucket():
+    runtime_mod._cache_clear()
+    opt = sgd(0.1)
+    rt = _l1_runtime()
+    fn1 = rt.train_step(TINY, opt)
+    fn2 = rt.train_step(TINY, opt)
+    assert fn1 is fn2, "same Runtime must reuse the same compiled step"
+    assert len(runtime_mod._STEP_BUILDS) == 1
+    # a value-equal Runtime hits the same cache entry
+    fn3 = _l1_runtime().train_step(TINY, opt)
+    assert fn3 is fn1
+    assert len(runtime_mod._STEP_BUILDS) == 1
+    # a different budget is a different bucket
+    rt.train_step(TINY, opt, budget=0.5)
+    assert len(runtime_mod._STEP_BUILDS) == 2
+    # with no policy every budget is the same exact step: one compile even
+    # under a multi-bucket (straggler) schedule
+    runtime_mod._cache_clear()
+    rt0 = Runtime(schedule=BudgetSchedule.straggler((1.0, 0.5, 0.2)))
+    fns = {b: rt0.train_step(TINY, opt, budget=b) for b in rt0.schedule.buckets()}
+    assert len(set(map(id, fns.values()))) == 1
+    assert len(runtime_mod._STEP_BUILDS) == 1
+
+
+def test_budget_schedule_transition_uses_prebuilt_buckets():
+    """warmup-exact -> sketched: the loop pre-builds exactly the schedule's
+    buckets (one step per distinct budget) and switches at the boundary."""
+    from repro.train.trainer import TrainerConfig
+
+    runtime_mod._cache_clear()
+    sched = BudgetSchedule.warmup_exact(2, 1.0)
+    assert sched.buckets() == (None, 1.0)
+    rt = _l1_runtime(schedule=sched)
+    opt = sgd(0.1)
+    data = LMStream(vocab=TINY.vocab, seed=0).batches(4, 32)
+    tcfg = TrainerConfig(steps=4, log_every=1)
+    _, hist = rt.train(TINY, opt, data, tcfg, on_metrics=lambda m: None)
+    assert len(runtime_mod._STEP_BUILDS) == 2, "exactly the pre-built buckets"
+    assert [m["budget"] for m in hist] == [None, None, 1.0, 1.0]
+
+
+def test_budget_schedule_semantics():
+    s = BudgetSchedule.piecewise((0, None), (10, 0.5), (20, 0.2))
+    assert s.budget_at(0) is None and s.budget_at(9) is None
+    assert s.budget_at(10) == 0.5 and s.budget_at(19) == 0.5
+    assert s.budget_at(1000) == 0.2
+    assert s.buckets() == (None, 0.5, 0.2)
+    # a late first point runs at the implicit 1.0 before it — buckets must
+    # include it or the loop would KeyError at step 0
+    late = BudgetSchedule.piecewise((10, 0.5))
+    assert late.budget_at(0) == 1.0
+    assert late.buckets() == (1.0, 0.5)
+    for step in range(12):
+        assert late.budget_at(step) in late.buckets()
+    a = BudgetSchedule.anneal(100, start=1.0, end=0.1, n_buckets=4)
+    assert a.budget_at(0) == 1.0 and abs(a.budget_at(99) - 0.1) < 1e-9
+    assert len(a.buckets()) == 4
+    r = BudgetSchedule.straggler((1.0, 0.5))
+    assert r.is_reactive and r.make_controller() is not None
+    # degenerate constructor inputs collapse instead of crashing
+    assert BudgetSchedule.warmup_exact(0, 0.5).buckets() == (0.5,)
+    short = BudgetSchedule.anneal(3, start=1.0, end=0.1, n_buckets=4)
+    assert short.budget_at(0) == 1.0 and short.budget_at(100) == pytest.approx(0.1)
+    with pytest.raises(ValueError, match="ascend"):
+        BudgetSchedule(points=((5, 0.5), (5, 0.2)))
+    with pytest.raises(ValueError, match="mutually exclusive"):
+        BudgetSchedule(points=((0, 0.5),), reactive=(1.0, 0.5))
+    # runtime resolves budgets against the policy
+    rt = _l1_runtime()
+    assert rt.policy_at(None) is None
+    assert rt.policy_at(1.0) is rt.policy
+    assert rt.policy_at(0.1).base.budget == pytest.approx(0.1)
+
+
+def test_no_grad_slots_when_tp_sketch_without_mesh():
+    """tp_sketch without a mesh forces every compact site to the mask
+    backend (nn.common.dense), so with_grad_slots must emit NO slots — a
+    slot whose cotangent stays zero would silently freeze the site under
+    adamw(lazy=True)."""
+    from repro.core.compact_grad import with_grad_slots
+    from repro.models import lm
+
+    pol = SketchPolicy(base=SketchConfig(method="l1", budget=0.3,
+                                         backend="compact"))
+    params = lm.init_params(jax.random.key(0), TINY)
+    with_slots = with_grad_slots(params, pol, mesh=None, tp_sketch=True,
+                                 n_layers=TINY.n_layers)
+    flat, _ = jax.tree_util.tree_flatten_with_path(with_slots)
+    assert not any("gslot" in str(path) for path, _ in flat)
+    # sanity: the same call WITHOUT tp_sketch does emit slots
+    with_slots2 = with_grad_slots(params, pol, mesh=None, tp_sketch=False,
+                                  n_layers=TINY.n_layers)
+    flat2, _ = jax.tree_util.tree_flatten_with_path(with_slots2)
+    assert any("gslot" in str(path) for path, _ in flat2)
+
+
+def test_execution_config_validation():
+    with pytest.raises(ValueError, match="accum"):
+        ExecutionConfig(compact_grads=True, accum=2)
+    ex = ExecutionConfig(data_axes=["data"], model_axes=["model"])
+    assert ex.data_axes == ("data",) and isinstance(ex.data_axes, tuple)
+    hash(ex)  # list axes were coerced; config stays hashable
+
+
+# ---------------------------------------------------------------------------
+# Legacy kwarg shim
+# ---------------------------------------------------------------------------
+
+
+def test_legacy_train_kwargs_bit_match_runtime():
+    """The deprecated loose-kwarg train(...) warns once and produces
+    bit-identical steps to the equivalent Runtime.train."""
+    from repro.train import trainer
+
+    pol = SketchPolicy(base=SketchConfig(method="l1", budget=0.3))
+    opt = sgd(0.1)
+    tcfg = trainer.TrainerConfig(steps=5, log_every=1)
+
+    def data():
+        return LMStream(vocab=TINY.vocab, seed=0).batches(4, 32)
+
+    trainer._warned_legacy = False
+    with pytest.warns(DeprecationWarning, match="Runtime"):
+        s_old, h_old = trainer.train(TINY, opt, data(), tcfg, pol,
+                                     on_metrics=lambda m: None)
+    # warns once per process, not per call
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        s_old2, _ = trainer.train(TINY, opt, data(), tcfg, pol,
+                                  on_metrics=lambda m: None)
+    s_new, h_new = Runtime(policy=pol).train(TINY, opt, data(), tcfg,
+                                             on_metrics=lambda m: None)
+    assert [m["loss"] for m in h_old] == [m["loss"] for m in h_new]
+    for a, b in zip(jax.tree.leaves(s_old.params), jax.tree.leaves(s_new.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(jax.tree.leaves(s_old.params), jax.tree.leaves(s_old2.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_legacy_straggler_budgets_map_to_reactive_schedule():
+    rt = Runtime.from_legacy_kwargs(
+        SketchPolicy(base=SketchConfig(method="l1", budget=0.3)),
+        straggler_budgets=(1.0, 0.5, 0.2))
+    assert rt.schedule.is_reactive
+    assert rt.schedule.buckets() == (1.0, 0.5, 0.2)

@@ -1,0 +1,73 @@
+"""Public-API snapshot: the exported ``repro.api`` names and signatures are
+asserted against a checked-in snapshot so accidental surface breaks fail
+loudly (and intentional ones show up as a reviewed snapshot diff).
+
+Regenerate after an intentional change:
+
+    PYTHONPATH=src REPRO_UPDATE_API_SNAPSHOT=1 python -m pytest \
+        tests/test_api_surface.py
+"""
+import inspect
+import os
+
+SNAPSHOT = os.path.join(os.path.dirname(__file__), "api_surface.txt")
+
+
+def _sig(fn) -> str:
+    try:
+        return str(inspect.signature(fn))
+    except (TypeError, ValueError):
+        return "(?)"
+
+
+def _describe_class(cls) -> list:
+    lines = []
+    import dataclasses
+
+    if dataclasses.is_dataclass(cls):
+        for f in dataclasses.fields(cls):
+            lines.append(f"  field {f.name}")
+    for name, member in sorted(vars(cls).items()):
+        if name.startswith("_"):
+            continue
+        if isinstance(member, (classmethod, staticmethod)):
+            lines.append(f"  {name}{_sig(member.__func__)}")
+        elif callable(member):
+            lines.append(f"  {name}{_sig(member)}")
+        elif isinstance(member, property):
+            lines.append(f"  property {name}")
+        elif not dataclasses.is_dataclass(cls):
+            lines.append(f"  attr {name}")
+    return lines
+
+
+def describe_api() -> str:
+    from repro import api
+
+    out = []
+    for name in sorted(api.__all__):
+        obj = getattr(api, name)
+        if inspect.isclass(obj):
+            out.append(f"class {name}")
+            out.extend(_describe_class(obj))
+        elif callable(obj):
+            out.append(f"def {name}{_sig(obj)}")
+        else:
+            out.append(f"value {name}")
+    return "\n".join(out) + "\n"
+
+
+def test_api_surface_matches_snapshot():
+    got = describe_api()
+    if os.environ.get("REPRO_UPDATE_API_SNAPSHOT") == "1":
+        with open(SNAPSHOT, "w") as f:
+            f.write(got)
+    assert os.path.exists(SNAPSHOT), (
+        "missing tests/api_surface.txt — generate with "
+        "REPRO_UPDATE_API_SNAPSHOT=1")
+    with open(SNAPSHOT) as f:
+        want = f.read()
+    assert got == want, (
+        "repro.api surface changed. If intentional, regenerate the snapshot "
+        "(REPRO_UPDATE_API_SNAPSHOT=1) and review the diff.\n"
+        "--- snapshot ---\n" + want + "\n--- current ---\n" + got)

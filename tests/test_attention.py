@@ -61,6 +61,48 @@ def test_decode_matches_full_last_position():
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
 
 
+def test_gqa_repeat_gets_sharding_annotation():
+    """ROADMAP item: the GQA k/v head repeat must be pinned on BOTH sides
+    under a mesh ctx — the pre-repeat [B, S, Kv, dh] tensors arrive
+    seq-sharded from the sequence-parallel projections while the repeated
+    output is head-sharded, and without the operand annotation SPMD logs an
+    `[spmd] Involuntary full rematerialization` in the forward and the
+    remat'd backward of production train cells (4 warnings at
+    nn/attention.py; the dryrun stderr check lives in test_distributed's
+    slow subprocess test)."""
+    from repro.launch.mesh import make_mesh
+    from repro.nn.attention import AttnCfg, multi_head_attention
+    from repro.nn.common import Ctx
+
+    if jax.device_count() < 8:
+        pytest.skip("needs the 8 fake host devices forced by conftest")
+    mesh = make_mesh((2, 4), ("data", "model"))
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    ctx = Ctx(mesh=mesh, data_axes=("data",), model_axes=("model",),
+              act_sharding=NamedSharding(mesh, P(("data",), None, None)))
+    cfg = AttnCfg(n_heads=4, n_kv=2, d_head=8, q_chunk=8, kv_chunk=8)
+    ks = jax.random.split(jax.random.key(0), 3)
+    q = jax.random.normal(ks[0], (2, 16, 4, 8))
+    k = jax.random.normal(ks[1], (2, 16, 2, 8))
+    v = jax.random.normal(ks[2], (2, 16, 2, 8))
+
+    def f(constrain):
+        return lambda q, k, v: multi_head_attention(q, k, v, cfg,
+                                                    constrain=constrain)
+
+    jaxpr = str(jax.make_jaxpr(f(ctx.constrain_heads))(q, k, v))
+    # pre-repeat k and v pins + post-repeat q/k/v pins (and per-chunk pins)
+    assert jaxpr.count("sharding_constraint") >= 5
+    # no ctx -> no constraint (single-device paths unchanged)
+    jaxpr0 = str(jax.make_jaxpr(f(None))(q, k, v))
+    assert "sharding_constraint" not in jaxpr0
+    # annotated and unannotated paths compute the same thing
+    np.testing.assert_allclose(
+        np.asarray(f(ctx.constrain_heads)(q, k, v)),
+        np.asarray(f(None)(q, k, v)), rtol=1e-5, atol=1e-5)
+
+
 def test_rope_broadcast_gets_sharding_annotation():
     """ROADMAP item: RoPE's [B, S, 1, d/2] cos/sin broadcast must carry a
     sharding annotation under a mesh ctx so SPMD stops involuntarily

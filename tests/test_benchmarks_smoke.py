@@ -34,6 +34,10 @@ def test_backward_fusion_bench_tiny():
     # the fused backward streams G at most twice: score/plan + fused gather
     assert gp["g_passes_fused"] <= 2, gp
     assert gp["g_passes_fused"] <= gp["g_passes_unfused"], gp
+    # the VMEM-overflow fallback streams G at most 3 times: score/plan +
+    # the dX kernel pass + ONE shared dW/db gather (was 4 with the separate
+    # db gather next to the unfused kernel pair)
+    assert gp["g_passes_fallback"] <= 3, gp
     if jax.device_count() >= 8:
         ts = out["train_step"]
         assert set(ts) >= {"exact", "compact_pre", "compact_fused"}

@@ -55,6 +55,34 @@ def test_no_version_gated_jax_symbols_outside_compat():
         "version-gated JAX symbols outside repro/compat.py:\n" + "\n".join(offenders))
 
 
+def test_no_ctx_construction_outside_api_and_nn():
+    """The Runtime front door owns Ctx construction: outside ``repro/nn``
+    (where Ctx lives and re-derives per-layer children) and ``repro/api``
+    (whose ExecutionConfig.make_ctx is the sanctioned factory), no module may
+    build a ``Ctx(...)`` directly — that is how train() kwargs smeared across
+    the codebase in the first place. Use ``Runtime.ctx`` /
+    ``ExecutionConfig.make_ctx`` instead."""
+    pat = re.compile(r"(?<![\w.])Ctx\(")
+    offenders = []
+    for dirpath, _, files in os.walk(SRC):
+        rel = os.path.relpath(dirpath, SRC)
+        if rel == "nn" or rel.startswith("nn" + os.sep) \
+                or rel == "api" or rel.startswith("api" + os.sep):
+            continue
+        for fname in files:
+            if not fname.endswith(".py"):
+                continue
+            path = os.path.join(dirpath, fname)
+            with open(path) as f:
+                for lineno, line in enumerate(f, 1):
+                    if pat.search(line):
+                        offenders.append(f"{path}:{lineno}: {line.strip()}")
+    assert not offenders, (
+        "direct Ctx(...) construction outside repro/api + repro/nn "
+        "(route through ExecutionConfig.make_ctx / Runtime.ctx):\n"
+        + "\n".join(offenders))
+
+
 def test_compat_and_mesh_import_and_build_2x2():
     """The exact seed failure mode: mesh construction on the installed JAX."""
     from repro import compat

@@ -97,6 +97,27 @@ def test_fused_ref_matches_manual():
                                rtol=1e-5, atol=1e-5)
 
 
+def test_dw_db_ref_matches_fused_halves():
+    """The VMEM-fallback's shared-gather dW/db oracle equals the dW/db halves
+    of the fused oracle (ops.block_gather_matmul_fused composes it with the
+    dX kernel when the fused accumulators overflow VMEM on TPU)."""
+    ks = jax.random.split(jax.random.key(11), 3)
+    N, n, d, bs = 32, 96, 24, 16
+    G = jax.random.normal(ks[0], (N, n))
+    W = jax.random.normal(ks[1], (n, d))
+    X = jax.random.normal(ks[2], (N, d))
+    idx = jnp.asarray([1, 4, 5], jnp.int32)
+    sc = jnp.asarray([2.0, 0.5, 1.25], jnp.float32)
+    dWc, db = ref.block_gather_matmul_dw_db_ref(G, idx, sc, X, block=bs)
+    _, want_dw, want_db = ref.block_gather_matmul_fused_ref(G, idx, sc, W, X,
+                                                            block=bs)
+    np.testing.assert_allclose(np.asarray(dWc), np.asarray(want_dw),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(db), np.asarray(want_db),
+                               rtol=1e-5, atol=1e-5)
+    assert dWc.shape == (3, bs, d) and db.shape == (3, bs)
+
+
 @pytest.mark.parametrize("N,n,dt,mode", [
     (300, 700, jnp.float32, "l1"), (64, 128, jnp.bfloat16, "l1"),
     (128, 384, jnp.float32, "l2"), (17, 130, jnp.float32, "l1"),
