@@ -56,19 +56,17 @@ def _fused_site_bwd(cfg, G2d, X2d, w, key):
 
 
 def _fallback_site_bwd(cfg, G2d, X2d, w, key):
-    """The VMEM-overflow fallback shape of ops.block_gather_matmul_fused:
-    one pass for dX (the Pallas dX kernel on TPU; its XLA oracle here) plus
-    ONE shared gather feeding compact dW and compact db
-    (ref.block_gather_matmul_dw_db_ref) — 2 passes over kept G, not the
-    pre-PR 3 (unfused kernel pair + separate db gather)."""
+    """The VMEM-overflow fallback shape of ops.block_gather_matmul_fused
+    (ref.block_gather_matmul_fallback_ref): ONE barriered gather of kept G
+    feeds the dX matmul AND the dW matmul with db folded into its stream —
+    1 pass over kept G, not the pre-tightening 2 (dX kernel + shared dW/db
+    gather) or the pre-PR 3 (unfused kernel pair + separate db gather)."""
     from repro.kernels import ref as kref
 
     lcfg = effective_cfg(cfg, G2d.shape[-1])
     plan = column_plan(lcfg, G2d, w, key, want_compact=True)
-    dX = kref.block_gather_matmul_ref(G2d, plan.indices, plan.scales, w,
-                                      block=lcfg.block)
-    dWc, db_blk = kref.block_gather_matmul_dw_db_ref(
-        G2d, plan.indices, plan.scales, X2d, block=lcfg.block)
+    dX, dWc, db_blk = kref.block_gather_matmul_fallback_ref(
+        G2d, plan.indices, plan.scales, w, X2d, block=lcfg.block)
     bs = lcfg.block
     cols = (plan.indices[:, None] * bs + jnp.arange(bs, dtype=plan.indices.dtype)).reshape(-1)
     return dX, dWc.reshape(-1, w.shape[1]), cols, db_blk.reshape(-1)

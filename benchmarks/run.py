@@ -1,12 +1,92 @@
 """Run every benchmark (quick mode by default; --full for paper-scale).
 
 One benchmark per paper table/figure — see DESIGN.md §6 for the index.
+
+After the sweep, :func:`write_summary` distills ``results/bench/*.json``
+into a top-level ``BENCH_summary.json`` — one JSON line per benchmark with
+its key metric and the delta vs the previous summary — so the benchmark
+trajectory is machine-readable across PRs.
 """
 import argparse
+import json
+import os
 import subprocess
 import sys
 import time
 import traceback
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+RESULTS = os.path.join(ROOT, "results", "bench")
+SUMMARY_PATH = os.path.join(ROOT, "BENCH_summary.json")
+
+
+def _get(d, *path):
+    for p in path:
+        if not isinstance(d, dict) or p not in d:
+            return None
+        d = d[p]
+    return d if isinstance(d, (int, float)) else None
+
+
+# artifact file -> (key metric name, extractor). One headline number per
+# benchmark: step times for the perf benches, the FLOPs ratio for adaptive.
+_KEY_METRICS = {
+    "distributed": ("compact_step_ms",
+                    lambda d: _get(d, "variants", "compact", "step_ms")),
+    # value is null when the artifact was produced without the 8-fake-device
+    # mesh timing (never substitute a different quantity under this label —
+    # deltas across PRs must compare like with like)
+    "backward_fusion": ("block_fused_step_ms",
+                        lambda d: _get(d, "train_step", "block_fused", "step_ms")),
+    "adaptive": ("adaptive_vs_fixed_flops",
+                 lambda d: ((_get(d, "adaptive", "total_bwd_flops")
+                             / _get(d, "fixed", "total_bwd_flops"))
+                            if _get(d, "fixed", "total_bwd_flops") else None)),
+}
+
+
+def write_summary(results_dir: str = RESULTS,
+                  summary_path: str = SUMMARY_PATH) -> list:
+    """Write ``BENCH_summary.json``: one JSON object per line with
+    ``{name, metric, value, prev, delta}`` for every artifact in
+    ``results_dir`` (prev/delta come from the summary being replaced).
+    Returns the records."""
+    prev = {}
+    if os.path.exists(summary_path):
+        with open(summary_path) as f:
+            for line in f:
+                line = line.strip()
+                if line:
+                    try:
+                        r = json.loads(line)
+                        prev[r["name"]] = r
+                    except (ValueError, KeyError):
+                        pass
+    records = []
+    for fname in sorted(os.listdir(results_dir) if os.path.isdir(results_dir) else []):
+        if not fname.endswith(".json"):
+            continue
+        name = fname[:-5]
+        try:
+            with open(os.path.join(results_dir, fname)) as f:
+                data = json.load(f)
+        except ValueError:
+            continue
+        metric, extract = _KEY_METRICS.get(
+            name, ("n_entries", lambda d: float(len(d)) if isinstance(d, dict) else None))
+        value = extract(data)
+        p = prev.get(name, {})
+        prev_value = p.get("value") if p.get("metric") == metric else None
+        rec = {"name": name, "metric": metric,
+               "value": None if value is None else float(value),
+               "prev": prev_value,
+               "delta": (float(value) - prev_value
+                         if value is not None and prev_value is not None else None)}
+        records.append(rec)
+    with open(summary_path, "w") as f:
+        for rec in records:
+            f.write(json.dumps(rec) + "\n")
+    return records
 
 
 def _subprocess_bench(module: str):
@@ -33,7 +113,7 @@ def main():
     args = ap.parse_args()
     quick = not args.full
 
-    from benchmarks import (bench_block_granularity, bench_cost,
+    from benchmarks import (bench_adaptive, bench_block_granularity, bench_cost,
                             bench_fig1a_correlation, bench_fig1b_mask_vs_sketch,
                             bench_fig2a_proxies, bench_fig2b_spectral,
                             bench_fig3_larger_archs, bench_fig4_location,
@@ -48,6 +128,7 @@ def main():
         "variance_eq6": bench_variance.run,
         "cost_backends": bench_cost.run,
         "block_granularity": bench_block_granularity.run,
+        "adaptive": bench_adaptive.run,
         "distributed": _run_distributed,
         "backward_fusion": _run_backward_fusion,
     }
@@ -64,7 +145,10 @@ def main():
             failures += 1
             traceback.print_exc()
             print(f"[{name}] FAILED")
-    print(f"\nbenchmarks complete, failures={failures}")
+    records = write_summary()
+    print(f"\nBENCH_summary.json: "
+          + ", ".join(f"{r['name']}={r['value']}" for r in records))
+    print(f"benchmarks complete, failures={failures}")
     raise SystemExit(1 if failures else 0)
 
 

@@ -7,12 +7,15 @@ Uses the production stack end to end through the :class:`repro.api.Runtime`
 front door: ArchConfig (a scaled llama-style dense config), synthetic bigram
 LM data with host prefetch, AdamW + cosine schedule, sketch policy (ℓ1 @ 0.2
 by default), async checkpointing + auto-resume, and a budget schedule
-(reactive straggler buckets via ``--straggler``, or a warmup-exact schedule
-via ``--warmup-exact N``).
+(reactive straggler buckets via ``--straggler``, a warmup-exact schedule via
+``--warmup-exact N``, or the closed-loop SNR-adaptive schedule via
+``--adaptive-budget SNR`` — telemetry probes included; add
+``--telemetry-jsonl PATH`` for per-step records).
 """
 import argparse
 
-from repro.api import BudgetSchedule, Runtime, SketchConfig, SketchPolicy
+from repro.api import (BudgetSchedule, ExecutionConfig, Runtime, SketchConfig,
+                       SketchPolicy, TelemetryConfig)
 from repro.configs.base import ArchConfig
 from repro.data.pipeline import prefetch
 from repro.data.synthetic import LMStream
@@ -44,6 +47,12 @@ def main():
     ap.add_argument("--straggler", action="store_true")
     ap.add_argument("--warmup-exact", type=int, default=0,
                     help="run exact backprop for N steps, then sketched")
+    ap.add_argument("--adaptive-budget", type=float, default=0.0, metavar="SNR",
+                    help="closed-loop budget control: run the cheapest "
+                         "pre-compiled bucket whose probe-predicted gradient "
+                         "SNR stays above this target (docs/telemetry.md)")
+    ap.add_argument("--telemetry-jsonl", default=None,
+                    help="write per-step telemetry records to this JSONL file")
     args = ap.parse_args()
 
     cfg = arch_100m(args.tiny)
@@ -53,9 +62,16 @@ def main():
         schedule = BudgetSchedule.straggler((1.0, 0.5, 0.2))
     elif args.warmup_exact and policy is not None:
         schedule = BudgetSchedule.warmup_exact(args.warmup_exact)
+    elif args.adaptive_budget > 0 and policy is not None:
+        schedule = BudgetSchedule.adaptive(target_snr=args.adaptive_budget,
+                                           budgets=(1.0, 0.5, 0.2, 0.1))
     else:
         schedule = BudgetSchedule()
-    runtime = Runtime(policy=policy, schedule=schedule)
+    execution = ExecutionConfig()
+    if args.telemetry_jsonl or (args.adaptive_budget > 0 and policy is not None):
+        execution = ExecutionConfig(
+            telemetry=TelemetryConfig(jsonl=args.telemetry_jsonl))
+    runtime = Runtime(policy=policy, schedule=schedule, execution=execution)
     opt = adamw(cosine_warmup(3e-4, max(10, args.steps // 20), args.steps),
                 weight_decay=0.1, clip=1.0)
     stream = LMStream(vocab=cfg.vocab, seed=0)

@@ -7,7 +7,10 @@ One import gives the whole paper-reproduction surface:
   * :class:`ExecutionConfig` — mesh / sharding / TP-sketch / compact-grad /
     accumulation knobs, one hashable object.
   * :class:`BudgetSchedule` — budget-vs-step as pre-compiled buckets
-    (warmup-exact, anneal, reactive straggler mitigation).
+    (warmup-exact, anneal, reactive straggler mitigation, and the
+    closed-loop SNR-adaptive mode backed by telemetry probes).
+  * :class:`TelemetryConfig` — in-graph probes + sinks switchboard
+    (``ExecutionConfig.telemetry``; see docs/telemetry.md).
   * :func:`register_estimator` — plug in new unbiased-VJP estimator families
     (RAD / BASIS-style) without touching core.
   * :class:`SketchPolicy` / :class:`SketchConfig` — the paper's estimator
@@ -27,13 +30,17 @@ loudly.
 """
 from repro.api.execution import ExecutionConfig
 from repro.api.runtime import Runtime
-from repro.api.schedule import BudgetSchedule, StragglerController
+from repro.api.schedule import BudgetSchedule, Controller, StragglerController
 from repro.core import SketchConfig, SketchPolicy
 from repro.core.estimators import (Estimator, EstimatorVJP, get_estimator,
                                    register_estimator, registered_backends)
+from repro.telemetry import TelemetryConfig
+from repro.telemetry.controller import AdaptiveBudgetController
 
 __all__ = [
+    "AdaptiveBudgetController",
     "BudgetSchedule",
+    "Controller",
     "Estimator",
     "EstimatorVJP",
     "ExecutionConfig",
@@ -41,6 +48,7 @@ __all__ = [
     "SketchConfig",
     "SketchPolicy",
     "StragglerController",
+    "TelemetryConfig",
     "get_estimator",
     "register_estimator",
     "registered_backends",

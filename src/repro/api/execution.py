@@ -31,6 +31,10 @@ class ExecutionConfig:
         (core/compact_grad.py; requires ``accum == 1``).
       accum: gradient-accumulation microbatch count.
       cost_mode: python-unrolled loops for HLO cost artifacts (dry-run).
+      telemetry: a :class:`repro.telemetry.TelemetryConfig` enabling the
+        in-graph probes (per-site VJP-variance estimates emitted as a side
+        output of the train step) and naming optional sinks; ``None`` (the
+        default) disables telemetry entirely. See docs/telemetry.md.
     """
 
     mesh: Optional[Any] = None
@@ -41,6 +45,7 @@ class ExecutionConfig:
     compact_grads: bool = False
     accum: int = 1
     cost_mode: bool = False
+    telemetry: Optional[Any] = None  # repro.telemetry.TelemetryConfig
 
     def __post_init__(self):
         object.__setattr__(self, "data_axes", tuple(self.data_axes))
@@ -50,6 +55,12 @@ class ExecutionConfig:
         if self.compact_grads and self.accum != 1:
             raise ValueError("compact_grads requires accum == 1 (compact index "
                              "sets differ per microbatch; accumulate densely)")
+        if (self.telemetry is not None and self.telemetry.probes
+                and self.accum != 1):
+            raise ValueError("telemetry probes require accum == 1 (probe slot "
+                             "cotangents would silently average across "
+                             "microbatch plans); use TelemetryConfig("
+                             "probes=False) with accumulation")
 
     def make_ctx(self, *, policy=None, key=None, decode: bool = False,
                  cost_mode: Optional[bool] = None, layer_index: int = 0,

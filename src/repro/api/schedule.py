@@ -17,6 +17,14 @@ schedule whose bucket choice comes from measured step times instead of the
 step index, via the same :class:`StragglerController` that module now
 re-exports.
 
+Controller-driven modes share one :class:`Controller` protocol: the trainer
+calls ``step_begin()`` before and ``step_end(metrics)`` after each step and
+reads ``.budget`` for the next bucket. Two implementations ship:
+:class:`StragglerController` (reactive — measured step times, paper
+App. B.1) and :class:`~repro.telemetry.controller.AdaptiveBudgetController`
+(closed-loop — probe-measured gradient SNR, ``BudgetSchedule.adaptive``; see
+docs/telemetry.md).
+
 Budget values:
   * ``None``  — exact backprop (no sketching at all);
   * ``1.0``   — the policy as configured (its own per-site budgets);
@@ -30,7 +38,7 @@ import time
 from collections import deque
 from typing import Optional, Sequence, Tuple
 
-__all__ = ["BudgetSchedule", "StragglerController"]
+__all__ = ["BudgetSchedule", "Controller", "StragglerController"]
 
 Budget = Optional[float]  # None = exact; 1.0 = policy as configured
 
@@ -51,7 +59,8 @@ def _dedupe_points(points) -> Tuple[Tuple[int, Budget], ...]:
 
 @dataclasses.dataclass(frozen=True)
 class BudgetSchedule:
-    """Piecewise-constant budget-vs-step schedule, or a reactive bucket set.
+    """Piecewise-constant budget-vs-step schedule, or a controller-driven
+    (reactive / adaptive) bucket set.
 
     Attributes:
       points: ``((step, budget), ...)`` with strictly ascending non-negative
@@ -59,15 +68,27 @@ class BudgetSchedule:
         configured). Empty = constant ``1.0``.
       reactive: descending budget buckets for straggler mitigation (paper
         App. B.1); index 0 is the full backward. Non-empty ``reactive``
-        switches the schedule to reactive mode (mutually exclusive with
-        ``points``): the budget for each step comes from a
-        :class:`StragglerController` watching measured step times.
+        switches the schedule to reactive mode: the budget for each step
+        comes from a :class:`StragglerController` watching measured step
+        times.
+      adaptive_budgets: budget buckets for the closed-loop SNR controller
+        (``BudgetSchedule.adaptive``), ordered highest-fidelity first /
+        cheapest last; requires ``target_snr``. The per-step bucket comes
+        from an :class:`~repro.telemetry.controller
+        .AdaptiveBudgetController` consuming the telemetry probe summary.
+      target_snr: gradient-SNR floor for adaptive mode (see
+        docs/telemetry.md for the exact statistic).
       window / slow_factor / fast_factor / target_step_s: controller tuning
-        (reactive mode only) — see :class:`StragglerController`.
+        (``window`` is shared by both controller modes).
+
+      ``points`` / ``reactive`` / ``adaptive_budgets`` are mutually
+      exclusive.
     """
 
     points: Tuple[Tuple[int, Budget], ...] = ()
     reactive: Tuple[Budget, ...] = ()
+    adaptive_budgets: Tuple[Budget, ...] = ()
+    target_snr: Optional[float] = None
     window: int = 8
     slow_factor: float = 1.3
     fast_factor: float = 1.05
@@ -77,8 +98,13 @@ class BudgetSchedule:
         object.__setattr__(self, "points",
                            tuple((int(s), b) for s, b in self.points))
         object.__setattr__(self, "reactive", tuple(self.reactive))
-        if self.points and self.reactive:
-            raise ValueError("points and reactive are mutually exclusive")
+        object.__setattr__(self, "adaptive_budgets",
+                           tuple(self.adaptive_budgets))
+        modes = [bool(self.points), bool(self.reactive),
+                 bool(self.adaptive_budgets)]
+        if sum(modes) > 1:
+            raise ValueError("points, reactive and adaptive_budgets are "
+                             "mutually exclusive")
         last = -1
         for s, b in self.points:
             if s <= last:
@@ -87,6 +113,19 @@ class BudgetSchedule:
             _check_budget(b)
         for b in self.reactive:
             _check_budget(b)
+        prev = None
+        for b in self.adaptive_budgets:
+            _check_budget(b)
+            eff = float("inf") if b is None else b
+            if prev is not None and eff >= prev:
+                raise ValueError("adaptive buckets must strictly descend "
+                                 "(highest fidelity first, cheapest last), "
+                                 f"got {self.adaptive_budgets}")
+            prev = eff
+        if self.adaptive_budgets and not (self.target_snr or 0) > 0:
+            raise ValueError("adaptive schedule needs target_snr > 0")
+        if self.target_snr is not None and not self.adaptive_budgets:
+            raise ValueError("target_snr only applies to adaptive schedules")
 
     # -- constructors -------------------------------------------------------
 
@@ -132,11 +171,28 @@ class BudgetSchedule:
                    slow_factor=slow_factor, fast_factor=fast_factor,
                    target_step_s=target_step_s)
 
+    @classmethod
+    def adaptive(cls, target_snr: float,
+                 budgets: Sequence[Budget] = (1.0, 0.5, 0.2, 0.1),
+                 *, window: int = 4) -> "BudgetSchedule":
+        """Closed-loop schedule: each step runs the cheapest pre-compiled
+        bucket whose probe-predicted gradient SNR meets ``target_snr``
+        (docs/telemetry.md). ``budgets`` must descend (highest fidelity
+        first); the controller re-evaluates every ``window`` steps and moves
+        one bucket at a time. Requires telemetry probes — ``Runtime.train``
+        enables them automatically for adaptive schedules."""
+        return cls(adaptive_budgets=tuple(budgets),
+                   target_snr=float(target_snr), window=window)
+
     # -- queries ------------------------------------------------------------
 
     @property
     def is_reactive(self) -> bool:
         return bool(self.reactive)
+
+    @property
+    def is_adaptive(self) -> bool:
+        return bool(self.adaptive_budgets)
 
     def buckets(self) -> Tuple[Budget, ...]:
         """Distinct budget values to pre-compile, in first-use order
@@ -144,15 +200,17 @@ class BudgetSchedule:
         point)."""
         if self.reactive:
             return tuple(dict.fromkeys(self.reactive))
+        if self.adaptive_budgets:
+            return tuple(dict.fromkeys(self.adaptive_budgets))
         if not self.points:
             return (1.0,)
         lead = () if self.points[0][0] == 0 else (1.0,)
         return tuple(dict.fromkeys(lead + tuple(b for _, b in self.points)))
 
     def budget_at(self, step: int) -> Budget:
-        """Budget for ``step`` (non-reactive schedules)."""
-        if self.reactive:
-            raise ValueError("reactive schedule: use make_controller()")
+        """Budget for ``step`` (non-controller schedules)."""
+        if self.reactive or self.adaptive_budgets:
+            raise ValueError("controller-driven schedule: use make_controller()")
         b: Budget = 1.0
         for s, pb in self.points:
             if step >= s:
@@ -161,16 +219,72 @@ class BudgetSchedule:
                 break
         return b
 
-    def make_controller(self) -> Optional["StragglerController"]:
-        if not self.reactive:
-            return None
-        return StragglerController(self.reactive, window=self.window,
-                                   slow_factor=self.slow_factor,
-                                   fast_factor=self.fast_factor,
-                                   target_step_s=self.target_step_s)
+    def make_controller(self, policy=None) -> Optional["Controller"]:
+        """The per-step bucket controller, or None for step-indexed
+        schedules. ``policy`` (a SketchPolicy) lets adaptive mode map the
+        ``1.0`` bucket onto the policy's own base budget for its SNR
+        scaling law."""
+        if self.reactive:
+            return StragglerController(self.reactive, window=self.window,
+                                       slow_factor=self.slow_factor,
+                                       fast_factor=self.fast_factor,
+                                       target_step_s=self.target_step_s)
+        if self.adaptive_budgets:
+            from repro.telemetry.controller import AdaptiveBudgetController
+
+            base = getattr(getattr(policy, "base", None), "budget", None)
+            # Mapping the 1.0 bucket onto the policy's own base budget can
+            # break the descending-fidelity contract (e.g. a policy at 0.2
+            # with buckets (1.0, 0.5, 0.2, 0.1) -> effective (0.2, 0.5,
+            # 0.2, 0.1)). Re-sort by effective fidelity (stable, so the
+            # earlier-listed bucket wins a tie) and dedupe, so every bucket
+            # the user listed stays reachable — including ones ABOVE the
+            # policy's configured budget — and "later = cheaper" holds.
+            pairs = []
+            for b in self.adaptive_budgets:
+                eff = (base if (b is not None and b >= 1.0 and base is not None)
+                       else b)
+                pairs.append((float("inf") if eff is None else eff, b, eff))
+            pairs.sort(key=lambda p: -p[0])
+            budgets, effective = [], []
+            for feff, b, eff in pairs:
+                if effective and feff == (float("inf") if effective[-1] is None
+                                          else effective[-1]):
+                    continue  # duplicate fidelity: keep the first
+                budgets.append(b)
+                effective.append(eff)
+            return AdaptiveBudgetController(tuple(budgets), self.target_snr,
+                                            effective=tuple(effective),
+                                            window=self.window)
+        return None
 
 
-class StragglerController:
+class Controller:
+    """Protocol for per-step budget-bucket controllers.
+
+    The trainer calls ``step_begin()`` before launching a step, reads
+    ``.budget`` to pick the pre-compiled bucket, and calls
+    ``step_end(metrics)`` after the step completes — ``metrics`` is the
+    host-fetched step metrics dict when ``wants_metrics`` is True, else
+    None. ``budget`` must always be one of the schedule's ``buckets()``:
+    controllers select among pre-compiled executables, they never cause a
+    recompile.
+    """
+
+    wants_metrics = False  # True -> trainer device_gets metrics every step
+
+    @property
+    def budget(self):
+        raise NotImplementedError
+
+    def step_begin(self):  # noqa: B027 — optional hook
+        pass
+
+    def step_end(self, metrics=None):
+        return self.budget
+
+
+class StragglerController(Controller):
     """Reactive sketch-budget bucket switching (paper App. B.1).
 
     The paper observes that VJP approximation can be applied *selectively at
@@ -203,7 +317,7 @@ class StragglerController:
     def step_begin(self):
         self._t0 = time.perf_counter()
 
-    def step_end(self):
+    def step_end(self, metrics=None):
         if self._t0 is None:
             return self.budget
         dt = time.perf_counter() - self._t0

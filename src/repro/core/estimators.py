@@ -48,6 +48,12 @@ class EstimatorVJP:
     these into dense cotangents — or, in compact-gradient mode
     (``supports_compact_grad``), forwards them as a ``CompactGrad`` slot
     cotangent with no scatter at all.
+
+    ``probe`` (optional, telemetry): a ``[repro.telemetry.probes.PROBE_WIDTH]``
+    f32 vector of per-site probe statistics (unbiased dW-variance / gradient
+    norm estimates — see ``repro/telemetry/probes.py``). Populated only by
+    :meth:`Estimator.apply_with_probe`; ``None`` means "this estimator emits
+    no probe" and the site reports zeros.
     """
 
     dx: jax.Array  # [N, d_in] flattened-input gradient
@@ -56,6 +62,7 @@ class EstimatorVJP:
     rows: Optional[jax.Array] = None
     cols: Optional[jax.Array] = None
     db_c: Optional[jax.Array] = None
+    probe: Optional[jax.Array] = None
 
     @property
     def is_compact(self) -> bool:
@@ -72,31 +79,49 @@ class Estimator:
         (rows/cols/db_c) form, so the site may carry a CompactGrad slot and
         skip the densify-scatter (see core/compact_grad.py). Estimators that
         return the dense form must leave this False.
+      tp_shardable: OPT-IN for the TP-local sharded sketch path
+        (``core/sharded_sketch.py``): the estimator's :meth:`plan` emits a
+        compact ``ColumnPlan`` (indices + scales) that is valid on a
+        TP-local shard of the output gradient, and the sharded path owns the
+        matmuls/collectives around it. ``tp_applicable`` consults this flag
+        (and calls :meth:`validate`), so a registered estimator routes
+        through the same shard_map machinery as the builtin compact/pallas
+        backends. Estimators that leave this False fall back to the dense
+        mask estimator on TP-sharded sites under ``tp_sketch`` (see
+        ``nn.common.dense``).
 
     Methods (what the framework actually calls):
       validate(cfg): raise ValueError for unsupported SketchConfig
         combinations; called from ``SketchConfig.__post_init__`` for
-        non-builtin backends.
+        non-builtin backends AND from ``tp_applicable`` before the sharded
+        path accepts a site — a config is rejected/accepted consistently on
+        the single-device and sharded paths.
       apply(cfg, G2d, X2d, w, key, *, has_b, score_psum_axes): the estimator
         backward — returns an :class:`EstimatorVJP`. This is the hot hook:
-        ``sketched_linear._bwd`` calls it for every sketched site (today
-        with ``score_psum_axes=None`` — the TP-sharded sketch path in
-        ``core/sharded_sketch.py`` plans its batch-shared sketch outside the
-        registry and does not route through ``apply``; custom estimators run
-        single-replica semantics under ``tp_sketch``, see ``nn.common
-        .dense``).
+        ``sketched_linear._bwd`` calls it for every sketched site (with
+        ``score_psum_axes=None``; the TP-sharded path routes through
+        :meth:`plan` instead and owns the matmuls itself).
+      apply_with_probe(...): OPTIONAL telemetry hook, same signature as
+        ``apply``. Called instead of ``apply`` when the site carries a probe
+        slot (``ExecutionConfig.telemetry``); returns an EstimatorVJP whose
+        ``probe`` field carries the per-site probe vector (see
+        ``repro/telemetry/probes.py`` for the math and helpers). The default
+        delegates to ``apply`` and emits no probe — a third-party estimator
+        gets telemetry for free the moment it implements this hook.
       compact_rank(cfg, n): static number of compact rows ``apply`` emits for
         a site of width ``n`` (required when ``supports_compact_grad``;
         consumed by the grad-slot builder in ``core/compact_grad.py``).
-      plan(cfg, G2d, w, key, *, want_compact, score_psum_axes): OPTIONAL
-        diagnostic hook — expose the sampled sketch (a ``ColumnPlan`` or an
-        estimator-private object) for tests/variance tooling. Core never
-        calls it; estimators that plan inside ``apply`` may leave the
-        default (returns None).
+      plan(cfg, G2d, w, key, *, want_compact, score_psum_axes): expose the
+        sampled sketch (a ``ColumnPlan``) for tests/variance tooling — and,
+        when ``tp_shardable``, the hook the TP-sharded backward calls inside
+        shard_map (``want_compact=True``, ``score_psum_axes=data axes``).
+        Estimators that plan inside ``apply`` and are not tp_shardable may
+        leave the default (returns None).
     """
 
     name: str = "?"
     supports_compact_grad: bool = False
+    tp_shardable: bool = False
 
     def validate(self, cfg) -> None:  # noqa: B027 — optional hook
         pass
@@ -106,6 +131,15 @@ class Estimator:
 
     def apply(self, cfg, G2d, X2d, w, key, *, has_b, score_psum_axes=None) -> EstimatorVJP:
         raise NotImplementedError
+
+    def apply_with_probe(self, cfg, G2d, X2d, w, key, *, has_b,
+                         score_psum_axes=None) -> EstimatorVJP:
+        """Telemetry spelling of ``apply``: may fill ``EstimatorVJP.probe``.
+
+        Default: no probe (``probe=None``) — telemetry degrades gracefully
+        for estimators that do not implement the hook."""
+        return self.apply(cfg, G2d, X2d, w, key, has_b=has_b,
+                          score_psum_axes=score_psum_axes)
 
     def compact_rank(self, cfg, n: int) -> int:
         raise NotImplementedError(f"estimator {self.name!r} is not compact")

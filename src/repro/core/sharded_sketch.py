@@ -19,6 +19,13 @@ module is the TP-native realisation (DESIGN.md §3):
 
 Applies to sites whose d_out is TP-sharded (attn q/k/v, mlp in/gate); other
 sites keep the paper-faithful mask backend. See ``nn.common.dense``.
+
+Registry routing: the sketch *plan* inside shard_map comes from the
+registered estimator's ``plan`` hook — any estimator that sets
+``tp_shardable=True`` (see ``core/estimators.py``) runs on this path with
+its own sampling scheme, and its ``validate`` is consulted here exactly as
+on the single-device path, so configs are accepted/rejected consistently.
+The builtin compact/pallas backends are simply the first two such entries.
 """
 from __future__ import annotations
 
@@ -30,16 +37,39 @@ from jax.sharding import PartitionSpec as P
 
 from repro import compat
 
+from repro.core import estimators
 from repro.core.compact_grad import CompactGrad
-from repro.core.sketching import SketchConfig, column_plan, effective_cfg
+from repro.core.sketching import SketchConfig, effective_cfg
 
 __all__ = ["tp_sketched_linear", "tp_applicable"]
+
+
+def _tp_estimator(cfg):
+    """The registered estimator for ``cfg`` iff it opted into the TP path.
+
+    The sharded path is registry-routed: any estimator with
+    ``tp_shardable=True`` (builtin compact/pallas, or a third-party entry)
+    has its ``plan`` hook called inside shard_map; its ``validate`` runs
+    here too, so a config is rejected/accepted consistently with the
+    single-device path. Estimators without the flag return None and the
+    site falls back per ``nn.common.dense``.
+    """
+    if cfg is None or cfg.is_noop:
+        return None
+    try:
+        est = estimators.get_estimator(cfg.backend)
+    except KeyError:
+        return None
+    if not getattr(est, "tp_shardable", False):
+        return None
+    est.validate(cfg)
+    return est
 
 
 def tp_applicable(ctx, cfg, d_out: int) -> bool:
     if ctx.mesh is None or not getattr(ctx, "tp_sketch", False) or cfg is None:
         return False
-    if cfg.backend not in ("compact", "pallas") or cfg.is_noop:
+    if _tp_estimator(cfg) is None:
         return False
     n_mp = 1
     for a in ctx.model_axes:
@@ -90,9 +120,24 @@ def tp_sketched_linear(x, w, ctx, cfg: SketchConfig, key, slot=None):
     return fn(x, w, key, slot)
 
 
+def _plan_via_registry(est, lcfg, G2d, w_l, key, dp):
+    """One shard-local sketch plan, routed through the registered
+    estimator's ``plan`` hook (tp_shardable contract: a compact
+    ``ColumnPlan`` with indices + scales)."""
+    plan = est.plan(lcfg, G2d, w_l, key, want_compact=True,
+                    score_psum_axes=dp)
+    if plan is None or plan.indices is None:
+        raise ValueError(
+            f"estimator {est.name!r} is tp_shardable but plan() returned no "
+            "compact ColumnPlan — the TP-sharded backward needs indices/scales")
+    return plan
+
+
 def _build(cfg, mesh, dp, mp, x_shape, w_shape, with_slot: bool):
     B, S, din = x_shape
     n, _ = w_shape
+    est = _tp_estimator(cfg)
+    assert est is not None, "tp_sketched_linear on a non-tp_shardable backend"
     n_dp = 1
     for a in dp:
         n_dp *= mesh.shape[a]
@@ -126,8 +171,7 @@ def _build(cfg, mesh, dp, mp, x_shape, w_shape, with_slot: bool):
             G2d = g_l.reshape(-1, g_l.shape[-1])
             X2d = x_l.reshape(-1, x_l.shape[-1])
             lcfg = effective_cfg(cfg, G2d.shape[-1])
-            plan = column_plan(lcfg, G2d, w_l, kk, want_compact=True,
-                               score_psum_axes=dp)
+            plan = _plan_via_registry(est, lcfg, G2d, w_l, kk, dp)
             idx, scales = plan.indices, plan.scales
             Gc, Wc, idx = _gather_compact(lcfg, G2d, w_l, idx, scales)
             dx = (Gc @ Wc).reshape(x_l.shape)
@@ -186,7 +230,7 @@ def tp_row_applicable(ctx, cfg, d_in: int) -> bool:
     d_out is the (unsharded) residual width."""
     if ctx.mesh is None or not getattr(ctx, "tp_sketch", False) or cfg is None:
         return False
-    if cfg.backend not in ("compact", "pallas") or cfg.is_noop:
+    if _tp_estimator(cfg) is None:
         return False
     n_mp = 1
     for a in ctx.model_axes:
@@ -214,6 +258,8 @@ def tp_row_sketched_linear(x, w, ctx, cfg: SketchConfig, key, slot=None):
 
 def _build_row(cfg, mesh, dp, mp, x_shape, w_shape, with_slot: bool):
     n = w_shape[0]
+    est = _tp_estimator(cfg)
+    assert est is not None, "tp_row_sketched_linear on a non-tp_shardable backend"
     scatter_axis = dp[-1] if dp else None
     n_scatter = mesh.shape[scatter_axis] if scatter_axis else 1
     psum_rest = tuple(a for a in dp[:-1])
@@ -243,8 +289,7 @@ def _build_row(cfg, mesh, dp, mp, x_shape, w_shape, with_slot: bool):
             G2d = g_l.reshape(-1, g_l.shape[-1])
             X2d = x_l.reshape(-1, x_l.shape[-1])
             lcfg = effective_cfg(cfg, G2d.shape[-1])
-            plan = column_plan(lcfg, G2d, w_l, key, want_compact=True,
-                               score_psum_axes=dp)
+            plan = _plan_via_registry(est, lcfg, G2d, w_l, key, dp)
             idx, scales = plan.indices, plan.scales
             Gc, Wc, idx = _gather_compact(lcfg, G2d, w_l, idx, scales)
             dx = (Gc @ Wc).reshape(x_l.shape)  # stays ff-local: no collective

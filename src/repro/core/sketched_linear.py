@@ -85,6 +85,25 @@ class _MaskEstimator(estimators.Estimator):
         return EstimatorVJP(dx=Ghat @ w, dw=Ghat.T @ X2d,
                             db=jnp.sum(Ghat, axis=0) if has_b else None)
 
+    def apply_with_probe(self, cfg, G2d, X2d, w, key, *, has_b,
+                         score_psum_axes=None):
+        """Telemetry hook: column-family methods expose the plan marginals,
+        so the probe is a cheap reduction over the (already materialized)
+        sketched dW — same gate, same key, bit-identical gradients to
+        ``apply``. Other methods fall back probeless."""
+        if cfg.method not in COLUMN_METHODS or cfg.is_noop:
+            return self.apply(cfg, G2d, X2d, w, key, has_b=has_b,
+                              score_psum_axes=score_psum_axes)
+        from repro.telemetry.probes import probe_from_rows
+
+        plan = column_plan(cfg, G2d, w, key, want_compact=False,
+                           score_psum_axes=score_psum_axes)
+        Ghat = G2d * plan.gate[None, :].astype(G2d.dtype)
+        dw = Ghat.T @ X2d
+        return EstimatorVJP(dx=Ghat @ w, dw=dw,
+                            db=jnp.sum(Ghat, axis=0) if has_b else None,
+                            probe=probe_from_rows(dw, plan.probs))
+
 
 class _CompactEstimator(estimators.Estimator):
     """Exact-r compact backend: gather kept columns, reduced-shape matmuls
@@ -92,6 +111,7 @@ class _CompactEstimator(estimators.Estimator):
 
     name = "compact"
     supports_compact_grad = True
+    tp_shardable = True  # plan() is shard-local-valid; sharded_sketch routes it
 
     def validate(self, cfg) -> None:
         if cfg.method not in COLUMN_METHODS:
@@ -109,7 +129,7 @@ class _CompactEstimator(estimators.Estimator):
     def compact_rank(self, cfg, n: int) -> int:
         return compact_rank(cfg, n)
 
-    def apply(self, cfg, G2d, X2d, w, key, *, has_b, score_psum_axes=None):
+    def _apply_planned(self, cfg, G2d, X2d, w, key, *, score_psum_axes=None):
         n = G2d.shape[-1]
         cfg = effective_cfg(cfg, n)
         plan = column_plan(cfg, G2d, w, key, want_compact=True,
@@ -122,9 +142,28 @@ class _CompactEstimator(estimators.Estimator):
             bs = cfg.block
             cols = (idx[:, None] * bs
                     + jnp.arange(bs, dtype=idx.dtype)[None, :]).reshape(-1)
-            return EstimatorVJP(dx=dX2d, rows=dWc.reshape(-1, w.shape[1]),
-                                cols=cols, db_c=db_blk.reshape(-1))
-        return self._per_column(G2d, idx, scales, w, X2d)
+            out = EstimatorVJP(dx=dX2d, rows=dWc.reshape(-1, w.shape[1]),
+                               cols=cols, db_c=db_blk.reshape(-1))
+        else:
+            out = self._per_column(G2d, idx, scales, w, X2d)
+        return out, plan
+
+    def apply(self, cfg, G2d, X2d, w, key, *, has_b, score_psum_axes=None):
+        return self._apply_planned(cfg, G2d, X2d, w, key,
+                                   score_psum_axes=score_psum_axes)[0]
+
+    def apply_with_probe(self, cfg, G2d, X2d, w, key, *, has_b,
+                         score_psum_axes=None):
+        """Telemetry hook: the compact rows + the plan's keep marginals at
+        the kept columns are everything the probe needs — one [r]-sized
+        reduction on top of the backward the estimator already did."""
+        from repro.telemetry.probes import probe_from_rows
+
+        out, plan = self._apply_planned(cfg, G2d, X2d, w, key,
+                                        score_psum_axes=score_psum_axes)
+        p_kept = jnp.take(plan.probs, out.cols)
+        out.probe = probe_from_rows(out.rows, p_kept)
+        return out
 
     def _fused(self, cfg, G2d, idx, scales, w, X2d):
         from repro.kernels import ref as kref
@@ -172,29 +211,40 @@ estimators.register_estimator(_PallasEstimator())
 
 
 @partial(jax.custom_vjp, nondiff_argnums=(0,))
-def _sketched_linear(cfg: SketchConfig, x, w, b, key, slot):
+def _sketched_linear(cfg: SketchConfig, x, w, b, key, slot, pslot):
     y = jnp.einsum("...i,oi->...o", x, w)
     if b is not None:
         y = y + b
     return y
 
 
-def _fwd(cfg: SketchConfig, x, w, b, key, slot):
-    y = _sketched_linear(cfg, x, w, b, key, slot)
-    return y, (x, w, key, b is not None, slot)
+def _fwd(cfg: SketchConfig, x, w, b, key, slot, pslot):
+    y = _sketched_linear(cfg, x, w, b, key, slot, pslot)
+    return y, (x, w, key, b is not None, slot, pslot is not None)
 
 
 def _bwd(cfg: SketchConfig, res, g):
-    x, w, key, has_b, slot = res
+    x, w, key, has_b, slot, want_probe = res
     G2d, _ = _flatten_leading(g)
     X2d, _ = _flatten_leading(x)
     n = G2d.shape[-1]
 
     est = estimators.get_estimator("mask" if cfg.is_noop else cfg.backend)
-    out = est.apply(cfg, G2d, X2d, w, key, has_b=has_b)
+    if want_probe:
+        # telemetry: the optional estimator hook may fill out.probe; the
+        # probe rides the probe slot's cotangent out of jax.grad
+        out = est.apply_with_probe(cfg, G2d, X2d, w, key, has_b=has_b)
+    else:
+        out = est.apply(cfg, G2d, X2d, w, key, has_b=has_b)
+    probe_ct = None
+    if want_probe:
+        from repro.telemetry.probes import PROBE_WIDTH
+
+        probe_ct = (out.probe if out.probe is not None
+                    else jnp.zeros((PROBE_WIDTH,), jnp.float32))
     dX = out.dx.reshape(x.shape)
     if not out.is_compact:
-        return _pack(dX, out.dw.astype(w.dtype), out.db, has_b, slot)
+        return _pack(dX, out.dw.astype(w.dtype), out.db, has_b, slot, probe_ct)
 
     db = None
     if has_b:
@@ -204,26 +254,34 @@ def _bwd(cfg: SketchConfig, res, g):
         # the dense w cotangent is structural zeros (folded by XLA)
         slot_ct = CompactGrad(rows=out.rows.astype(jnp.float32),
                               idx=out.cols.astype(jnp.float32))
-        return (dX, jnp.zeros_like(w), db if has_b else None, None, slot_ct)
+        return (dX, jnp.zeros_like(w), db if has_b else None, None, slot_ct,
+                probe_ct)
     dW = jnp.zeros_like(w).at[out.cols].add(out.rows.astype(w.dtype))
-    return _pack(dX, dW, db, has_b, slot)
+    return _pack(dX, dW, db, has_b, slot, probe_ct)
 
 
-def _pack(dx, dw, db, has_b, slot):
+def _pack(dx, dw, db, has_b, slot, probe_ct):
     # slot primal is all-zeros, so returning it doubles as its zero cotangent
-    return (dx, dw, db if has_b else None, None, slot)
+    return (dx, dw, db if has_b else None, None, slot, probe_ct)
 
 
 _sketched_linear.defvjp(_fwd, _bwd)
 
 
 def sketched_linear(x, w, b=None, *, key=None, cfg: Optional[SketchConfig] = None,
-                    grad_slot: Optional[CompactGrad] = None):
-    """Public entry point. ``cfg=None`` (or noop cfg / no key) = exact linear."""
+                    grad_slot: Optional[CompactGrad] = None,
+                    probe_slot=None):
+    """Public entry point. ``cfg=None`` (or noop cfg / no key) = exact linear.
+
+    ``probe_slot`` (a zero ``[PROBE_WIDTH]`` f32 leaf, normally threaded in
+    by ``nn.common.dense`` from the params tree) switches the backward to
+    the estimator's ``apply_with_probe`` hook and routes the per-site probe
+    vector out through the slot's cotangent — see repro/telemetry/probes.py.
+    """
     if cfg is None or cfg.is_noop or key is None:
         y = jnp.einsum("...i,oi->...o", x, w)
         return y + b if b is not None else y
-    return _sketched_linear(cfg, x, w, b, key, grad_slot)
+    return _sketched_linear(cfg, x, w, b, key, grad_slot, probe_slot)
 
 
 # Alias used across the nn substrate.

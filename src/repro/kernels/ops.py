@@ -53,12 +53,12 @@ def block_gather_matmul_dw(G, block_idx, scales, X, *, block: int = 128):
 def block_gather_matmul_fused(G, block_idx, scales, W, X, *, block: int = 128):
     """One-pass fused backward (dX, compact dW, compact db); see
     ``sketch_matmul.block_gather_matmul_fused``. When the fused accumulators
-    would not fit VMEM (on TPU), falls back to a 2-pass shape: the dX kernel
-    streams kept G once, and a single shared XLA gather (the dW-side half of
-    the fused oracle, ``ref.block_gather_matmul_dw_db_ref``) feeds both
-    compact dW and compact db — the old 3rd pass (a separate db gather next
-    to the unfused dW kernel) is gone. Off-TPU the single-gather XLA oracle
-    runs directly."""
+    would not fit VMEM (on TPU), falls back to
+    ``ref.block_gather_matmul_fallback_ref``: ONE barriered XLA gather of
+    kept G feeds the dX matmul and a single dW matmul with the db
+    row-reduction folded into its stream (ones column on X) — still one pass
+    over kept G, just without the Pallas kernel's resident accumulators.
+    Off-TPU the single-gather fused XLA oracle runs directly."""
     if _use_pallas():
         rb = block_idx.shape[0]
         fits = fused_vmem_bytes(G.shape[0], W.shape[1], rb, block,
@@ -66,10 +66,8 @@ def block_gather_matmul_fused(G, block_idx, scales, W, X, *, block: int = 128):
         if fits or not on_tpu():
             return _bgm_fused_pallas(G, block_idx, scales, W, X, block=block,
                                      interpret=not on_tpu())
-        dX = _bgm_pallas(G, block_idx, scales, W, block=block)
-        dWc, db = kref.block_gather_matmul_dw_db_ref(G, block_idx, scales, X,
+        return kref.block_gather_matmul_fallback_ref(G, block_idx, scales, W, X,
                                                      block=block)
-        return dX, dWc, db
     return kref.block_gather_matmul_fused_ref(G, block_idx, scales, W, X, block=block)
 
 

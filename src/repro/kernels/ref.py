@@ -6,6 +6,7 @@ import jax.numpy as jnp
 
 __all__ = ["block_gather_matmul_ref", "block_gather_matmul_dw_ref",
            "block_gather_matmul_fused_ref", "block_gather_matmul_dw_db_ref",
+           "block_gather_matmul_fallback_ref",
            "gather_cols_matmul_ref", "gather_cols_matmul_dw_ref",
            "col_l1_scores_ref", "flash_attention_ref"]
 
@@ -60,29 +61,64 @@ def block_gather_matmul_fused_ref(G, block_idx, scales, W, X, *, block: int):
     return dX, dWc.astype(G.dtype).reshape(rb, block, -1), db.reshape(rb, block)
 
 
-def block_gather_matmul_dw_db_ref(G, block_idx, scales, X, *, block: int):
-    """(dWc, db_c) from ONE shared gather of G's kept blocks.
+def _gather_scaled_blocks(G, block_idx, scales, block: int):
+    """ONE barriered gather of G's kept column-blocks, scaled, in f32.
+    Returns ``(Gc, cols)`` — the per-column index vector is shared with any
+    sibling gather (W rows) so the layouts cannot desynchronize.
 
-    The dW-side half of :func:`block_gather_matmul_fused_ref`: the scaled
-    compact ``Gc`` is materialised once behind an optimization barrier (XLA
-    would otherwise re-fuse the gather into both consumers and read G twice)
-    and feeds the compact weight gradient AND the compact bias gradient.
-    Used by the VMEM-overflow fallback in ``ops.block_gather_matmul_fused``,
-    which pairs it with the dX kernel for a 2-pass backward over kept G.
-    Shapes: dWc [rb, block, d_in], db_c [rb, block] f32.
-    """
-    N, n = G.shape
-    rb = block_idx.shape[0]
+    The optimization barrier pins ``Gc`` as a materialised buffer: without it
+    XLA re-fuses the gather into every consumer, turning one HBM pass over
+    kept G into one pass per consumer."""
+    from repro import compat
+
     cols = (block_idx[:, None] * block
             + jnp.arange(block, dtype=block_idx.dtype)[None, :]).reshape(-1)
     col_scales = jnp.repeat(scales, block)
-    from repro import compat
-
     Gc = jnp.take(G, cols, axis=1).astype(jnp.float32) * col_scales[None, :]
     (Gc,) = compat.optimization_barrier((Gc,))
-    dWc = jax.lax.dot_general(Gc, X.astype(jnp.float32), (((0,), (0,)), ((), ())))
-    db = jnp.sum(Gc, axis=0)  # [rb*bs] f32
-    return dWc.astype(G.dtype).reshape(rb, block, -1), db.reshape(rb, block)
+    return Gc, cols
+
+
+def _dw_db_from_gc(Gc, X, rb: int, block: int, out_dtype):
+    """Compact dW with db FOLDED INTO ITS MATMUL STREAM: X is augmented with
+    a trailing ones column, so ``Gcᵀ @ [X | 1]`` emits the weight gradient
+    and the bias gradient from a single dot over a single read of ``Gc`` —
+    the db row-reduction no longer exists as a separate consumer."""
+    XA = jnp.concatenate(
+        [X.astype(jnp.float32), jnp.ones((X.shape[0], 1), jnp.float32)], axis=1)
+    out = jax.lax.dot_general(Gc, XA, (((0,), (0,)), ((), ())))  # [rb*bs, d+1]
+    dWc = out[:, :-1].astype(out_dtype).reshape(rb, block, -1)
+    db = out[:, -1].reshape(rb, block)  # f32
+    return dWc, db
+
+
+def block_gather_matmul_dw_db_ref(G, block_idx, scales, X, *, block: int):
+    """(dWc, db_c) from ONE gather of G's kept blocks, db folded into the dW
+    matmul (trailing ones column on X) — the dW/db side is literally one dot
+    over one pass of kept G. Shapes: dWc [rb, block, d_in], db_c [rb, block]
+    f32. See :func:`block_gather_matmul_fallback_ref` for the full fallback
+    backward that shares the same gather with dX."""
+    rb = block_idx.shape[0]
+    Gc, _ = _gather_scaled_blocks(G, block_idx, scales, block)
+    return _dw_db_from_gc(Gc, X, rb, block, G.dtype)
+
+
+def block_gather_matmul_fallback_ref(G, block_idx, scales, W, X, *, block: int):
+    """VMEM-overflow fallback backward: (dX, dWc, db_c) in **one pass over
+    kept G**. ONE barriered gather materialises the scaled compact ``Gc``;
+    the dX matmul reads ``Gc`` (not G), and the dW/db side is the single
+    folded dot of :func:`block_gather_matmul_dw_db_ref`. Unlike the fused
+    Pallas kernel this keeps no [r, d] accumulator resident in VMEM — XLA
+    tiles the two dots freely — so it is the shape
+    ``ops.block_gather_matmul_fused`` drops to when ``fused_vmem_bytes``
+    overflows. Shapes as the fused oracle: dX [N, d], dWc [rb, block, d],
+    db_c [rb, block] f32."""
+    rb = block_idx.shape[0]
+    Gc, cols = _gather_scaled_blocks(G, block_idx, scales, block)
+    Wc = jnp.take(W, cols, axis=0).astype(jnp.float32)  # [rb*bs, d]
+    dX = (Gc @ Wc).astype(G.dtype)
+    dWc, db = _dw_db_from_gc(Gc, X, rb, block, G.dtype)
+    return dX, dWc, db
 
 
 def gather_cols_matmul_ref(G, idx, scales, W):

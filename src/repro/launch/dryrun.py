@@ -283,6 +283,19 @@ def run_cell(arch: str, cell_name: str, *, multi_pod: bool, policy_name: str = "
         rec["n_active_params"] = n_active
         hlo_flops_global = full["flops"] * chips
         rec["model_flops_ratio"] = mf / hlo_flops_global if hlo_flops_global else None
+        if cell.kind == "train" and policy is not None and policy[0] is not None:
+            # static per-site cost attribution (telemetry join key): modelled
+            # backward FLOPs per sketched site, distributed over the
+            # HLO-measured full-depth program FLOPs
+            from repro.telemetry.sinks import (join_hlo_cost, site_cost_table,
+                                               table_totals)
+
+            table = site_cost_table(params_s, policy[0], tokens,
+                                    n_layers=cfg.n_layers)
+            rec["cost_attribution"] = {
+                "sites": join_hlo_cost(table, full),
+                "totals": table_totals(table),
+            }
     return rec
 
 

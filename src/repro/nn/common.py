@@ -112,10 +112,14 @@ def dense(params, x, ctx: Ctx, role: str):
     shard_map compact path with compressed gradient collectives; everything
     else keeps the configured (mask) backend. A ``"gslot"`` entry in
     ``params`` (compact-gradient mode, see core/compact_grad.py) is threaded
-    into the backward so the weight gradient comes out compact.
+    into the backward so the weight gradient comes out compact; a ``"pslot"``
+    entry (telemetry, see repro/telemetry/probes.py) routes the site's probe
+    vector out through its cotangent. Sites taking the TP shard_map path
+    ignore the probe slot (its cotangent stays zero).
     """
     cfg = ctx.cfg_for(role)
     slot = params.get("gslot")
+    pslot = params.get("pslot")
     if (cfg is not None and role in _TP_OUT_ROLES and x.ndim == 3
             and params.get("b") is None and ctx.key is not None):
         from repro.core.sharded_sketch import tp_applicable, tp_sketched_linear
@@ -140,7 +144,7 @@ def dense(params, x, ctx: Ctx, role: str):
 
         cfg = _dc.replace(cfg, backend="mask", block=0)
     return linear(x, params["w"], params.get("b"), key=ctx.site_key(role), cfg=cfg,
-                  grad_slot=slot)
+                  grad_slot=slot, probe_slot=pslot)
 
 
 def rmsnorm_init(d: int, dtype=jnp.float32):

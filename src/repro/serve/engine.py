@@ -7,10 +7,16 @@ jitted prefill/decode steps come from the :class:`~repro.api.Runtime` front
 door (``Runtime.serve`` constructs an Engine) — the same factories the
 dry-run lowers, so the engine exercises the production code paths end-to-end
 (examples/serve_lm.py). Pass a mesh-bearing Runtime to serve sharded.
+
+Telemetry: the engine keeps decode-path counters (prefill/decode calls,
+tokens, wall time) plus a bounded ring of per-batch records
+(:class:`repro.telemetry.sinks.RingSink`); ``Engine.telemetry()`` summarizes
+them (tokens/s etc.) for dashboards and tests. See docs/telemetry.md.
 """
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import List, Optional
 
 import jax
@@ -20,6 +26,7 @@ import numpy as np
 from repro.api.runtime import Runtime
 from repro.configs.base import ArchConfig
 from repro.serve.serve_step import greedy_sample
+from repro.telemetry.sinks import RingSink
 
 __all__ = ["Request", "Engine"]
 
@@ -41,6 +48,10 @@ class Engine:
         self.runtime = runtime if runtime is not None else Runtime()
         self._prefill = jax.jit(self.runtime.prefill_step(cfg, max_len))
         self._decode = jax.jit(self.runtime.decode_step(cfg))
+        self.counters = {"batches": 0, "prefill_calls": 0, "prefill_tokens": 0,
+                         "decode_steps": 0, "tokens_out": 0,
+                         "prefill_s": 0.0, "decode_s": 0.0}
+        self.ring = RingSink(capacity=256)
 
     def run(self, requests: List[Request]) -> List[Request]:
         """Serve a list of requests in fixed-size batches."""
@@ -57,17 +68,44 @@ class Engine:
         toks = jnp.asarray(toks)
         if B < self.batch:
             toks = jnp.pad(toks, ((0, self.batch - B), (0, 0)))
+        t0 = time.perf_counter()
         logits, caches = self._prefill(self.params, {"tokens": toks})
         cur = greedy_sample(logits[:, -1:])
+        jax.block_until_ready(cur)
+        t_prefill = time.perf_counter() - t0
         outs = [[] for _ in range(self.batch)]
         max_new = max(r.max_new for r in reqs)
         pos = plen
+        t0 = time.perf_counter()
         for _ in range(max_new):
             for j in range(self.batch):
                 outs[j].append(int(cur[j, 0]))
             logits, caches = self._decode(self.params, caches, cur, pos)
             cur = greedy_sample(logits)
             pos += 1
+        jax.block_until_ready(cur)
+        t_decode = time.perf_counter() - t0
         for j, r in enumerate(reqs):
             r.out = np.asarray(outs[j][:r.max_new], np.int32)
+        tokens_out = sum(min(r.max_new, max_new) for r in reqs)
+        c = self.counters
+        c["batches"] += 1
+        c["prefill_calls"] += 1
+        c["prefill_tokens"] += B * plen
+        c["decode_steps"] += max_new
+        c["tokens_out"] += tokens_out
+        c["prefill_s"] += t_prefill
+        c["decode_s"] += t_decode
+        self.ring.write({"batch": B, "prompt_len": plen, "decode_steps": max_new,
+                         "tokens_out": tokens_out, "prefill_s": t_prefill,
+                         "decode_s": t_decode})
         return reqs
+
+    def telemetry(self) -> dict:
+        """Decode-path counter summary (cumulative since construction)."""
+        c = dict(self.counters)
+        c["decode_tok_per_s"] = (c["tokens_out"] / c["decode_s"]
+                                 if c["decode_s"] > 0 else 0.0)
+        c["prefill_tok_per_s"] = (c["prefill_tokens"] / c["prefill_s"]
+                                  if c["prefill_s"] > 0 else 0.0)
+        return c

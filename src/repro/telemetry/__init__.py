@@ -1,0 +1,60 @@
+"""Telemetry: close the paper's cost–precision loop online.
+
+The paper's central trade-off — per-step cost reduction vs the
+gradient-variance-driven increase in steps-to-precision — ran *open loop* in
+this repo: ``BudgetSchedule`` buckets were fixed up front and nothing measured
+the realized estimator variance during training. This subsystem makes the
+loop closable:
+
+* :mod:`repro.telemetry.probes` — cheap **in-graph probes**: unbiased
+  per-site estimates of VJP variance / gradient norm / sketched-vs-exact
+  alignment, computed from quantities the estimators already materialize
+  (kept dW rows and sampling probabilities) and smuggled out of ``jax.grad``
+  as slot cotangents — no second backward, no extra pass over G.
+* :mod:`repro.telemetry.sinks` — JSONL / CSV scalar writers, an in-memory
+  ring buffer, and static per-site cost attribution joined with the HLO cost
+  model from ``launch/hlo_analysis``.
+* :mod:`repro.telemetry.controller` — the **closed-loop controller**:
+  :class:`~repro.telemetry.controller.AdaptiveBudgetController` consumes
+  probe summaries between steps and picks the cheapest pre-compiled budget
+  bucket meeting a target gradient SNR (``BudgetSchedule.adaptive``).
+
+:class:`TelemetryConfig` below is the static, hashable switchboard that rides
+on :class:`repro.api.ExecutionConfig` (``ExecutionConfig.telemetry``); see
+``docs/telemetry.md`` for probe math, SNR semantics and sink formats.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+__all__ = ["TelemetryConfig"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TelemetryConfig:
+    """Static telemetry switchboard (frozen/hashable — safe on ExecutionConfig).
+
+    Attributes:
+      probes: enable the in-graph per-site probes (adds probe slots to the
+        params tree; requires ``accum == 1``; sites routed through the
+        TP-local shard_map sketch do not probe — see docs/telemetry.md).
+      per_site: include the per-site probe vectors in the step metrics
+        (``metrics["probe_sites"]``) in addition to the step-level summary
+        scalars (``probe_gsq`` / ``probe_var`` / ``probe_snr`` /
+        ``probe_align``).
+      jsonl / csv: optional output paths; the trainer builds the matching
+        sinks and writes one record per ``interval`` steps.
+      interval: sink write cadence in steps (history/controller cadence is
+        unaffected).
+    """
+
+    probes: bool = True
+    per_site: bool = True
+    jsonl: Optional[str] = None
+    csv: Optional[str] = None
+    interval: int = 1
+
+    def __post_init__(self):
+        if self.interval < 1:
+            raise ValueError(f"interval must be >= 1, got {self.interval}")

@@ -1,0 +1,202 @@
+"""In-graph telemetry probes: unbiased per-site VJP-variance estimates.
+
+The probes answer, per sketched site and per step, "how noisy was the weight
+gradient this estimator just produced?" — from quantities the backward
+already materializes, with no second backward and no extra pass over G.
+
+Probe math (column-family estimators)
+-------------------------------------
+A column sketch keeps column ``j`` of the output gradient ``G`` with marginal
+probability ``p_j`` and rescales it by ``1/p_j``. Write ``u_j = g_jᵀ X`` for
+row ``j`` of the exact weight gradient ``dW = Gᵀ X``; the sketched rows are
+``dŴ_j = (z_j / p_j) u_j``. The backward materializes exactly the kept rows
+``rows_j = u_j / p_j`` (compact backends) or the dense ``dŴ`` whose dropped
+rows are zero (mask backend) — the same formulas cover both:
+
+* ``g_sq   = Σ_kept p_j ‖rows_j‖²``   — unbiased estimate of ``‖dW‖²_F``
+  (importance-sampling over the kept set: ``E[g_sq] = Σ_j ‖u_j‖²``).
+* ``var    = Σ_kept (1 − p_j) ‖rows_j‖²`` — unbiased estimate of the per-site
+  VJP variance ``E‖dŴ − dW‖²_F = Σ_j ((1−p_j)/p_j) ‖u_j‖²`` for
+  *independent* gates (Lemma 3.4 sampling). Under correlated exact-r
+  sampling (Lemma 3.1, the default) this estimates the **diagonal** term of
+  the variance; the correlation cross-terms are not probed (they carry
+  arbitrary sign but are small at production budgets — see
+  docs/telemetry.md).
+* ``ghat_sq = Σ_kept ‖rows_j‖²``      — realized ``‖dŴ‖²_F``.
+
+Derived step statistics: ``snr = g_sq / var`` (the controller's signal) and
+``align = sqrt(g_sq / ghat_sq)`` — an estimate of the sketched-vs-exact
+gradient alignment ``⟨dŴ, dW⟩ / ‖dŴ‖²`` in root form, since the realized
+inner product ``⟨dŴ, dW⟩ = Σ_kept p_j ‖rows_j‖²`` coincides with ``g_sq``.
+Both are exactly 1-like for exact backprop in the limit ``p → 1``.
+
+Transport out of ``jax.grad``
+-----------------------------
+A ``custom_vjp`` can only emit cotangents for its inputs, so each probed site
+gets a **probe slot**: a zero ``[PROBE_WIDTH]`` f32 leaf under key
+``"pslot"`` merged into the params tree (the same trick as
+``core/compact_grad`` gradient slots). The forward ignores the slot; the
+sketched backward *defines* its cotangent to be the probe vector. After
+``jax.grad``, :func:`collect_probes` strips the slots back out of the
+gradient tree and :func:`summarize` reduces them to step-level scalars.
+
+Coverage: column-family methods (``per_column`` + score methods) on any
+registered estimator implementing ``apply_with_probe``; sites routed through
+the TP-local shard_map sketch, non-column methods (``per_element`` /
+``per_sample`` / ``rcs``) and multi-use shared weights report zeros.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import estimators
+from repro.core.compact_grad import _site_role
+from repro.core.sketching import COLUMN_METHODS
+
+__all__ = ["PROBE_WIDTH", "PROBE_FIELDS", "probe_from_rows", "probe_capable",
+           "with_probe_slots", "mlp_probe_slots", "collect_probes",
+           "summarize"]
+
+# Probe vector layout. ok is 1.0 when the estimator actually produced a probe
+# (so a zero vector is distinguishable from a perfectly quiet site).
+PROBE_FIELDS = ("g_sq", "var", "ghat_sq", "ok")
+PROBE_WIDTH = len(PROBE_FIELDS)
+
+
+def probe_from_rows(rows: jax.Array, probs: jax.Array) -> jax.Array:
+    """The probe vector from materialized dW rows + their keep marginals.
+
+    rows: ``[r, d_in]`` kept (rescaled) dW rows — or the dense ``[n, d_in]``
+    sketched dW whose dropped rows are zero (they contribute nothing).
+    probs: matching ``[r]`` (or ``[n]``) keep marginals ``p_j``.
+    """
+    r32 = rows.astype(jnp.float32)
+    rs = jnp.einsum("rd,rd->r", r32, r32)  # ‖rows_j‖², no [r, d] temp
+    p = probs.astype(jnp.float32)
+    # one tiny dot emits all three statistics: rs · [p, 1−p, 1]
+    w3 = jnp.stack([p, 1.0 - p, jnp.ones_like(p)], axis=-1)  # [r, 3]
+    v3 = rs @ w3  # [g_sq, var, ghat_sq]
+    return jnp.concatenate([v3, jnp.ones((1,), jnp.float32)])
+
+
+def probe_capable(cfg) -> bool:
+    """Can this site's estimator produce a probe? (slot-worthiness check)."""
+    if cfg is None or cfg.is_noop or cfg.method not in COLUMN_METHODS:
+        return False
+    try:
+        est = estimators.get_estimator(cfg.backend)
+    except KeyError:
+        return False
+    # only estimators that override the optional hook emit probes
+    return (type(est).apply_with_probe
+            is not estimators.Estimator.apply_with_probe)
+
+
+# ---------------------------------------------------------------------------
+# Probe slots
+# ---------------------------------------------------------------------------
+
+
+def with_probe_slots(params, policy, *, n_layers: int = 1):
+    """Merge zero probe slots into ``params`` at every probe-capable site.
+
+    Mirrors ``core.compact_grad.with_grad_slots``: sites are matched by path
+    (attn/cross q|k|v|o, mlp in|gate|out) with the layer-0 policy config, so
+    only ``location="all"`` policies get slots (scan-stacked models cannot
+    distinguish layers statically). Unlike gradient slots, multi-use shared
+    weights MAY carry a probe slot — per-use probe cotangents sum, and probe
+    vectors are additive statistics — but we mirror the gslot exclusion for
+    the ``"shared"`` subtree anyway to keep the two slot trees congruent.
+    """
+    if policy is None or policy.location != "all":
+        return params
+
+    def walk(node, path):
+        if isinstance(node, dict):
+            out = {k: walk(v, path + (k,)) for k, v in node.items()}
+            role = None if "shared" in path else _site_role(path)
+            w = node.get("w")
+            if role is not None and w is not None and getattr(w, "ndim", 0) >= 2:
+                cfg = policy.config_for(role, 0, n_layers)
+                if probe_capable(cfg):
+                    lead = w.shape[:-2]
+                    out["pslot"] = jnp.zeros(lead + (PROBE_WIDTH,), jnp.float32)
+            return out
+        if isinstance(node, (list, tuple)):
+            return type(node)(walk(v, path) for v in node)
+        return node
+
+    return walk(params, ())
+
+
+def mlp_probe_slots(params, policy):
+    """Probe slots for the §5 MLP family (list of {"w","b"} dicts; roles
+    ``mlp_in`` per hidden layer, ``lm_head`` for the output — the
+    ``models.mlp`` convention). Static layer indices, so location policies
+    (first/last) work here."""
+    if policy is None:
+        return params
+    L = len(params)
+    out = []
+    for i, site in enumerate(params):
+        role = "lm_head" if i == L - 1 else "mlp_in"
+        cfg = policy.config_for(role, i, L)
+        site = dict(site)
+        if probe_capable(cfg):
+            site["pslot"] = jnp.zeros((PROBE_WIDTH,), jnp.float32)
+        out.append(site)
+    return out
+
+
+def collect_probes(grads) -> Tuple[object, Dict[str, jax.Array]]:
+    """Strip ``"pslot"`` cotangents out of a gradient tree.
+
+    Returns ``(clean_grads, probes)`` where ``clean_grads`` matches the
+    original (slot-free) params structure and ``probes`` maps a
+    ``/``-joined site path to its probe vector (``[PROBE_WIDTH]``, or
+    ``[L, PROBE_WIDTH]`` for scan-stacked sites).
+    """
+    probes: Dict[str, jax.Array] = {}
+
+    def walk(node, path):
+        if isinstance(node, dict):
+            out = {}
+            for k, v in node.items():
+                if k == "pslot":
+                    probes["/".join(map(str, path))] = v
+                else:
+                    out[k] = walk(v, path + (k,))
+            return out
+        if isinstance(node, (list, tuple)):
+            return type(node)(walk(v, path + (i,)) for i, v in enumerate(node))
+        return node
+
+    clean = walk(grads, ())
+    return clean, probes
+
+
+def summarize(probes: Dict[str, jax.Array], *, per_site: bool = True) -> dict:
+    """Reduce per-site probe vectors to step-level metrics (in-graph).
+
+    Returns ``probe_gsq`` / ``probe_var`` / ``probe_snr`` / ``probe_align``
+    scalars plus (optionally) ``probe_sites``: site path -> summed
+    ``[PROBE_WIDTH]`` vector (leading scan dims reduced).
+    """
+    if not probes:
+        return {}
+    site_tot = {k: v.reshape(-1, PROBE_WIDTH).sum(axis=0)
+                for k, v in probes.items()}
+    tot = sum(site_tot.values())
+    g_sq, var, ghat_sq = tot[0], tot[1], tot[2]
+    out = {
+        "probe_gsq": g_sq,
+        "probe_var": var,
+        "probe_snr": g_sq / jnp.maximum(var, jnp.float32(1e-20)),
+        "probe_align": jnp.sqrt(g_sq / jnp.maximum(ghat_sq, jnp.float32(1e-20))),
+    }
+    if per_site:
+        out["probe_sites"] = site_tot
+    return out

@@ -1,0 +1,208 @@
+"""Telemetry sinks + per-site cost attribution.
+
+Sinks consume one *record* per step — a flat dict of scalars (step, budget,
+loss, probe summary) plus an optional nested ``probe_sites`` map — and
+persist it: :class:`JsonlSink` (one JSON object per line, the
+machine-readable format ``benchmarks``/offline analysis read),
+:class:`CsvSink` (scalar columns only, for spreadsheets), and
+:class:`RingSink` (bounded in-memory buffer, used by tests and the serving
+engine's decode-path counters). The trainer builds them from
+:class:`repro.telemetry.TelemetryConfig` via :func:`build_sinks`.
+
+Cost attribution answers "what does each probed site *cost*": a static
+per-site model of backward FLOPs (exact vs sketched, from the same
+``static_rank`` / block math the estimators use) that can be joined with the
+HLO-measured program totals from ``launch/hlo_analysis.cost_summary`` — the
+modelled per-site fractions distribute the measured total, so probe rows and
+cost rows share keys. ``launch/dryrun`` records the table per train cell;
+``benchmarks/bench_adaptive`` integrates it over a realized budget schedule
+to get the loss-vs-FLOPs axis.
+"""
+from __future__ import annotations
+
+import csv
+import json
+import os
+from collections import deque
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.compact_grad import _site_role, compact_rank
+from repro.core.sketching import COLUMN_METHODS
+
+__all__ = ["Sink", "JsonlSink", "CsvSink", "RingSink", "MultiSink",
+           "build_sinks", "site_cost_table", "table_totals", "join_hlo_cost"]
+
+
+def _scalars(record: dict) -> dict:
+    return {k: v for k, v in record.items()
+            if isinstance(v, (int, float, np.integer, np.floating)) or v is None}
+
+
+class Sink:
+    """Protocol: ``write(record)`` once per step, ``close()`` at loop end."""
+
+    def write(self, record: dict):  # noqa: B027 — protocol default
+        pass
+
+    def close(self):  # noqa: B027
+        pass
+
+
+class JsonlSink(Sink):
+    """One JSON object per line (full record, nested ``probe_sites`` kept)."""
+
+    def __init__(self, path: str):
+        os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+        self._f = open(path, "a")
+
+    def write(self, record: dict):
+        self._f.write(json.dumps(record, default=float) + "\n")
+        self._f.flush()
+
+    def close(self):
+        self._f.close()
+
+
+class CsvSink(Sink):
+    """Scalar columns only; the header is fixed by the first record (later
+    records fill missing columns with empty cells, extra keys are dropped —
+    CSV is the quick-look format, JSONL is the lossless one)."""
+
+    def __init__(self, path: str):
+        os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+        self._f = open(path, "a", newline="")
+        self._writer: Optional[csv.DictWriter] = None
+
+    def write(self, record: dict):
+        row = _scalars(record)
+        if self._writer is None:
+            self._writer = csv.DictWriter(self._f, fieldnames=sorted(row),
+                                          extrasaction="ignore", restval="")
+            self._writer.writeheader()
+        self._writer.writerow(row)
+        self._f.flush()
+
+    def close(self):
+        self._f.close()
+
+
+class RingSink(Sink):
+    """Bounded in-memory buffer of the most recent records."""
+
+    def __init__(self, capacity: int = 256):
+        self._buf = deque(maxlen=int(capacity))
+
+    def write(self, record: dict):
+        self._buf.append(record)
+
+    @property
+    def records(self) -> List[dict]:
+        return list(self._buf)
+
+    def __len__(self):
+        return len(self._buf)
+
+
+class MultiSink(Sink):
+    def __init__(self, sinks):
+        self.sinks = list(sinks)
+
+    def write(self, record: dict):
+        for s in self.sinks:
+            s.write(record)
+
+    def close(self):
+        for s in self.sinks:
+            s.close()
+
+
+def build_sinks(tcfg) -> Optional[MultiSink]:
+    """Sinks for a :class:`~repro.telemetry.TelemetryConfig` (None if the
+    config names no outputs — the probe summary still rides the metrics)."""
+    if tcfg is None:
+        return None
+    sinks: List[Sink] = []
+    if tcfg.jsonl:
+        sinks.append(JsonlSink(tcfg.jsonl))
+    if tcfg.csv:
+        sinks.append(CsvSink(tcfg.csv))
+    return MultiSink(sinks) if sinks else None
+
+
+# ---------------------------------------------------------------------------
+# Static per-site cost attribution
+# ---------------------------------------------------------------------------
+
+
+def site_cost_table(params, policy, n_tokens: int, *, n_layers: int = 1) -> Dict[str, dict]:
+    """Analytic per-site backward-FLOP attribution for one train step.
+
+    Walks ``params`` (arrays or ShapeDtypeStructs — the dry-run passes the
+    latter) with the same path matching as the probe/gradient slot builders,
+    so cost rows and probe rows share keys. Per linear site ``w: [*, n, d]``
+    (leading dims = scan stacking) the backward is two matmuls:
+
+      * exact:    ``4 · T · n · d`` FLOPs per layer (dX + dW),
+      * sketched: ``4 · T · r · d + T · n`` — reduced-shape matmuls over the
+        ``r`` kept columns plus one score pass over G (column-family
+        methods; other methods keep dense-shaped masked matmuls, ``r = n``).
+    """
+    if policy is None:
+        return {}
+    table: Dict[str, dict] = {}
+
+    def walk(node, path):
+        if isinstance(node, dict):
+            for k, v in node.items():
+                walk(v, path + (k,))
+            role = None if "shared" in path else _site_role(path)
+            w = node.get("w")
+            if role is None or w is None or len(getattr(w, "shape", ())) < 2:
+                return
+            cfg = policy.config_for(role, 0, n_layers)
+            if cfg is None or cfg.is_noop:
+                return
+            lead = int(np.prod(w.shape[:-2], dtype=np.int64)) if len(w.shape) > 2 else 1
+            n, d = int(w.shape[-2]), int(w.shape[-1])
+            r = compact_rank(cfg, n) if cfg.method in COLUMN_METHODS else n
+            exact = 4.0 * n_tokens * n * d * lead
+            sketched = 4.0 * n_tokens * r * d * lead
+            if cfg.method in COLUMN_METHODS and cfg.method != "per_column":
+                sketched += float(n_tokens) * n * lead  # score pass over G
+            table["/".join(map(str, path))] = {
+                "role": role, "n": n, "d": d, "layers": lead, "r": r,
+                "budget": cfg.budget,
+                "bwd_exact_flops": exact, "bwd_sketched_flops": sketched,
+                "savings_frac": 1.0 - sketched / exact,
+            }
+        elif isinstance(node, (list, tuple)):
+            for i, v in enumerate(node):
+                walk(v, path + (i,))
+
+    walk(params, ())
+    return table
+
+
+def table_totals(table: Dict[str, dict]) -> dict:
+    exact = sum(v["bwd_exact_flops"] for v in table.values())
+    sketched = sum(v["bwd_sketched_flops"] for v in table.values())
+    return {"bwd_exact_flops": exact, "bwd_sketched_flops": sketched,
+            "savings_frac": (1.0 - sketched / exact) if exact else 0.0,
+            "n_sites": len(table)}
+
+
+def join_hlo_cost(table: Dict[str, dict], hlo_cost: dict) -> Dict[str, dict]:
+    """Join the modelled table with HLO-measured program totals
+    (``launch.hlo_analysis.cost_summary`` output): each site gains
+    ``hlo_flops_share`` — its modelled exact-backward fraction of the
+    measured per-device program FLOPs — so relative site weights come from
+    the model while the absolute scale comes from the compiler."""
+    total = sum(v["bwd_exact_flops"] for v in table.values())
+    measured = float(hlo_cost.get("flops", 0.0))
+    out = {}
+    for k, v in table.items():
+        share = (v["bwd_exact_flops"] / total) if total else 0.0
+        out[k] = dict(v, hlo_flops_share=share * measured)
+    return out

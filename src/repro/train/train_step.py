@@ -66,6 +66,15 @@ def make_train_step(cfg: ArchConfig, opt: Optimizer, policy: Optional[SketchPoli
     densify-scatter) and is applied by the optimizer as a sparse-row update.
     Requires ``accum == 1`` — microbatches sample different index sets, so
     compact gradients cannot be accumulated (enforced by ExecutionConfig).
+
+    ``execution.telemetry`` (a :class:`repro.telemetry.TelemetryConfig` with
+    ``probes=True``) additionally threads per-site *probe* slots: the step's
+    metrics gain the telemetry summary (``probe_gsq`` / ``probe_var`` /
+    ``probe_snr`` / ``probe_align`` and, optionally, per-site vectors under
+    ``probe_sites``) as a side output of the same backward — no second
+    backward, no extra pass over G. Sites routed through the TP-local
+    shard_map sketch do not probe, so probes are skipped entirely under
+    ``tp_sketch`` (see docs/telemetry.md).
     """
     if execution is None:
         execution = ExecutionConfig(mesh=mesh, act_sharding=act_sharding,
@@ -77,6 +86,9 @@ def make_train_step(cfg: ArchConfig, opt: Optimizer, policy: Optional[SketchPoli
     ex = execution
     accum = ex.accum
     compact_grads = ex.compact_grads
+    tel = ex.telemetry
+    telemetry_on = (tel is not None and tel.probes and policy is not None
+                    and not ex.tp_sketch and accum == 1)
 
     def ctx_for(key):
         return ex.make_ctx(policy=policy, key=key)
@@ -92,6 +104,7 @@ def make_train_step(cfg: ArchConfig, opt: Optimizer, policy: Optional[SketchPoli
         return loss, metrics, grads
 
     def step_fn(state: TrainState, batch, key):
+        probe_metrics = {}
         if accum == 1:
             params_in = state.params
             if compact_grads:
@@ -99,7 +112,16 @@ def make_train_step(cfg: ArchConfig, opt: Optimizer, policy: Optional[SketchPoli
                     state.params, policy, mesh=ex.mesh, data_axes=ex.data_axes,
                     model_axes=ex.model_axes, tp_sketch=ex.tp_sketch,
                     n_layers=cfg.n_layers)
+            if telemetry_on:
+                from repro.telemetry import probes as tprobes
+
+                params_in = tprobes.with_probe_slots(params_in, policy,
+                                                     n_layers=cfg.n_layers)
             loss, metrics, grads = one_micro(params_in, batch, key)
+            if telemetry_on:
+                grads, probe_vecs = tprobes.collect_probes(grads)
+                probe_metrics = tprobes.summarize(probe_vecs,
+                                                  per_site=tel.per_site)
             if compact_grads:
                 grads = cgrad.fold_slot_grads(grads)
         else:
@@ -125,7 +147,7 @@ def make_train_step(cfg: ArchConfig, opt: Optimizer, policy: Optional[SketchPoli
         new_params, new_opt = opt.update(grads, state.opt_state, state.params, state.step)
         new_state = TrainState(params=new_params, opt_state=new_opt, step=state.step + 1)
         metrics = dict(metrics, loss=loss,
-                       grad_norm=_global_norm(grads))
+                       grad_norm=_global_norm(grads), **probe_metrics)
         return new_state, metrics
 
     return step_fn

@@ -50,6 +50,37 @@ class TrainerConfig:
     straggler_budgets: tuple = ()  # legacy; use Runtime.schedule
 
 
+def _host_metrics(metrics, *, scalars_only: bool = False) -> dict:
+    """Device-get a metrics tree to plain python (floats; nested dicts — the
+    per-site probe vectors — become lists, or are dropped with
+    ``scalars_only`` for the cheap per-step controller fetch). One batched
+    ``device_get`` per call, not one transfer per key."""
+    tree = {k: v for k, v in metrics.items()
+            if not (scalars_only and isinstance(v, dict))}
+    fetched = jax.device_get(tree)
+    out = {}
+    for k, v in fetched.items():
+        if isinstance(v, dict):
+            out[k] = {kk: np.asarray(vv).astype(float).tolist()
+                      for kk, vv in v.items()}
+        else:
+            out[k] = float(np.asarray(v))
+    return out
+
+
+def _policy_can_probe(policy) -> bool:
+    """Does any site of ``policy`` emit telemetry probes? (column-family
+    method + an estimator implementing the probe hook — see
+    repro/telemetry/probes.py)."""
+    from repro.telemetry.probes import probe_capable
+
+    if policy is None or policy.location != "all":
+        return False
+    if probe_capable(policy.base):
+        return True
+    return any(probe_capable(cfg) for _, cfg in policy.overrides)
+
+
 def train_loop(runtime: Runtime, cfg: ArchConfig, opt: Optimizer,
                data: Iterable, tcfg: Optional[TrainerConfig] = None, *,
                state: Optional[TrainState] = None,
@@ -58,11 +89,44 @@ def train_loop(runtime: Runtime, cfg: ArchConfig, opt: Optimizer,
 
     One train step is compiled per distinct budget in
     ``runtime.schedule.buckets()`` — before the loop starts — and each step
-    dispatches to the bucket the schedule (or, in reactive mode, the
-    straggler controller) selects. Unbiasedness means bucket switches never
-    bias the gradient, only its variance (paper §2.2).
+    dispatches to the bucket the schedule (or, in controller mode, the
+    straggler/adaptive controller) selects. Unbiasedness means bucket
+    switches never bias the gradient, only its variance (paper §2.2).
+
+    Telemetry: with ``runtime.execution.telemetry`` set, each step's metrics
+    carry the probe summary and the configured sinks receive one record per
+    ``telemetry.interval`` steps. An adaptive schedule
+    (``BudgetSchedule.adaptive``) implies probes — they are enabled here
+    automatically when the execution config has no telemetry — and its
+    controller consumes the host-fetched ``probe_snr`` between steps to pick
+    the next (pre-compiled) bucket: no recompiles, ever.
     """
     tcfg = tcfg or TrainerConfig()
+    schedule = runtime.schedule
+    tel = runtime.execution.telemetry
+    if schedule.is_adaptive and runtime.execution.accum != 1:
+        raise ValueError(
+            "adaptive BudgetSchedule requires accum == 1: the SNR probes "
+            "cannot ride accumulated microbatches, so the controller would "
+            "have no signal — use a fixed/warmup/reactive schedule with "
+            "accumulation")
+    if schedule.is_adaptive and (tel is None or not tel.probes):
+        from repro.telemetry import TelemetryConfig
+
+        # per_site=False: the controller only consumes the probe_snr scalar,
+        # so the implicit config skips the per-site vectors (a user-supplied
+        # TelemetryConfig keeps its own per_site choice)
+        tel = (TelemetryConfig(per_site=False) if tel is None
+               else dataclasses.replace(tel, probes=True))
+        runtime = runtime.replace(execution=runtime.execution.replace(telemetry=tel))
+    if schedule.is_adaptive and (runtime.execution.tp_sketch
+                                 or not _policy_can_probe(runtime.policy)):
+        warnings.warn(
+            "adaptive BudgetSchedule cannot measure gradient SNR here "
+            "(tp_sketch, exact/location-restricted policy, or no "
+            "probe-capable site: column-family method + an estimator with "
+            "the probe hook) — the controller will hold its first bucket; "
+            "see docs/telemetry.md", stacklevel=2)
     key = compat.prng_key(tcfg.seed)
     if state is None:
         state = init_state(jax.random.fold_in(key, 0), cfg, opt)
@@ -75,10 +139,14 @@ def train_loop(runtime: Runtime, cfg: ArchConfig, opt: Optimizer,
             print(f"[trainer] resumed from step {step0}")
 
     # pre-built budget buckets: one compiled step per distinct budget
-    schedule = runtime.schedule
     steps_by_budget = {b: runtime.train_step(cfg, opt, budget=b)
                        for b in schedule.buckets()}
-    controller = schedule.make_controller()
+    controller = schedule.make_controller(policy=runtime.policy)
+    fetch_each_step = bool(controller is not None
+                           and getattr(controller, "wants_metrics", False))
+    from repro.telemetry import sinks as tsinks
+
+    sink = tsinks.build_sinks(tel)
 
     history = []
     data_it = iter(data)
@@ -91,13 +159,20 @@ def train_loop(runtime: Runtime, cfg: ArchConfig, opt: Optimizer,
         if controller:
             controller.step_begin()
         state, metrics = fn(state, batch, step_key)
+        host_m = None  # full fetch (sink/log cadence only)
         if controller:
             jax.block_until_ready(metrics["loss"])
-            controller.step_end()
+            # per-step fetch stays scalars-only: the controller consumes one
+            # scalar (probe_snr); per-site vectors are fetched on sink/log
+            # steps below
+            controller.step_end(_host_metrics(metrics, scalars_only=True)
+                                if fetch_each_step else None)
+        if sink is not None and step % tel.interval == 0:
+            host_m = _host_metrics(metrics)
+            sink.write(dict(host_m, step=step, budget=budget))
         if step % tcfg.log_every == 0 or step == tcfg.steps - 1:
-            m = {k: float(np.asarray(jax.device_get(v))) for k, v in metrics.items()}
-            m["step"] = step
-            m["budget"] = budget
+            m = host_m if host_m is not None else _host_metrics(metrics)
+            m = dict(m, step=step, budget=budget)
             history.append(m)
             if on_metrics:
                 on_metrics(m)
@@ -109,6 +184,8 @@ def train_loop(runtime: Runtime, cfg: ArchConfig, opt: Optimizer,
             ckpt.maybe_save(step + 1, state)
     if ckpt is not None:
         ckpt.wait()
+    if sink is not None:
+        sink.close()
     return state, history
 
 

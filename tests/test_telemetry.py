@@ -1,0 +1,384 @@
+"""Telemetry subsystem: probe unbiasedness (MC vs brute force), slot
+plumbing, the adaptive controller, sinks, and cost attribution."""
+import json
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import (AdaptiveBudgetController, BudgetSchedule,
+                       ExecutionConfig, Runtime, SketchConfig, SketchPolicy,
+                       TelemetryConfig)
+from repro.configs.base import ArchConfig
+from repro.core.sketched_linear import sketched_linear
+from repro.data.synthetic import LMStream
+from repro.optim import sgd
+from repro.telemetry import probes as tprobes
+from repro.telemetry import sinks as tsinks
+
+TINY = ArchConfig(name="tiny-tel", family="dense", n_layers=2, d_model=64,
+                  n_heads=4, n_kv=2, d_ff=128, vocab=128, q_chunk=32,
+                  kv_chunk=32)
+
+
+def _site(key, N=32, n=24, d=16):
+    ks = jax.random.split(key, 3)
+    x = jax.random.normal(ks[0], (N, d))
+    w = jax.random.normal(ks[1], (n, d)) / np.sqrt(d)
+    g_out = jax.random.normal(ks[2], (N, n))
+    return x, w, g_out
+
+
+def _probe_and_dw(cfg, x, w, g_out):
+    """(probe_vector, dW) per key through the real slot plumbing: the probe
+    rides the pslot cotangent of the sketched site's custom_vjp."""
+
+    def loss(w_, pslot, key):
+        y = sketched_linear(x, w_, key=key, cfg=cfg, probe_slot=pslot)
+        return jnp.sum(y * g_out)
+
+    pslot0 = jnp.zeros((tprobes.PROBE_WIDTH,), jnp.float32)
+
+    @jax.jit
+    def one(key):
+        dw, probe = jax.grad(loss, argnums=(0, 1))(w, pslot0, key)
+        return probe, dw
+
+    return one
+
+
+@pytest.mark.parametrize("method", ["l1", "per_column"])
+def test_variance_probe_unbiased_vs_bruteforce(key, method):
+    """MC check (vectorized over keys, test_variance margin style): under
+    independent gates the probe's expectation matches the brute-force
+    per-site VJP variance E‖dŴ − dW‖² exactly, and the g_sq probe matches
+    ‖dW‖²."""
+    x, w, g_out = _site(key)
+    cfg = SketchConfig(method=method, budget=0.4, exact_r=False, backend="mask")
+    one = _probe_and_dw(cfg, x, w, g_out)
+    keys = jax.random.split(jax.random.key(7), 800)
+    probes, dws = jax.lax.map(one, keys, batch_size=200)
+
+    dw_exact = np.asarray(g_out.T @ x)
+    var_mc = float(np.mean(np.sum(np.square(np.asarray(dws) - dw_exact[None]),
+                                  axis=(1, 2))))
+    probe_mean = np.asarray(probes).mean(0)
+    assert probe_mean[3] == pytest.approx(1.0)  # ok flag: probe was computed
+    assert probe_mean[1] == pytest.approx(var_mc, rel=0.15), (probe_mean, var_mc)
+    assert probe_mean[0] == pytest.approx(float(np.sum(dw_exact ** 2)), rel=0.15)
+
+
+def test_variance_probe_matches_diagonal_under_exact_r(key):
+    """Correlated exact-r sampling (the default): the probe estimates the
+    diagonal variance term Σ_j ((1−p_j)/p_j)‖u_j‖² — asserted against the
+    closed form (docs/telemetry.md states the caveat)."""
+    from repro.core.sketching import column_plan
+
+    x, w, g_out = _site(key)
+    cfg = SketchConfig(method="l1", budget=0.4, backend="compact")
+    plan = column_plan(cfg, g_out, w, jax.random.key(0), want_compact=True)
+    p = np.asarray(plan.probs)
+    u = np.asarray(g_out.T @ x)  # u_j = g_jᵀ X, rows of exact dW
+    diag = float(np.sum((1.0 - p) / p * np.sum(u ** 2, axis=1)))
+
+    one = _probe_and_dw(cfg, x, w, g_out)
+    keys = jax.random.split(jax.random.key(9), 800)
+    probes, _ = jax.lax.map(one, keys, batch_size=200)
+    probe_mean = np.asarray(probes).mean(0)
+    assert probe_mean[1] == pytest.approx(diag, rel=0.1), (probe_mean[1], diag)
+
+
+def test_probes_do_not_change_training(key):
+    """Telemetry is a pure side output: the train step with probes produces
+    bit-identical params/loss to the probeless step (same key)."""
+    pol = SketchPolicy(base=SketchConfig(method="l1", budget=0.3))
+    opt = sgd(0.1)
+    batch = next(iter(LMStream(vocab=TINY.vocab, seed=0).batches(4, 32)))
+    rt_tel = Runtime(policy=pol, execution=ExecutionConfig(telemetry=TelemetryConfig()))
+    rt_plain = Runtime(policy=pol)
+    state = rt_plain.init_state(jax.random.key(0), TINY, opt)
+    s_tel, m_tel = rt_tel.train_step(TINY, opt, donate=False)(state, batch, key)
+    s_pl, m_pl = rt_plain.train_step(TINY, opt, donate=False)(state, batch, key)
+    assert float(m_tel["loss"]) == float(m_pl["loss"])
+    for a, b in zip(jax.tree.leaves(s_tel.params), jax.tree.leaves(s_pl.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # summary scalars + per-site vectors present, finite, coherent
+    assert float(m_tel["probe_var"]) > 0 and float(m_tel["probe_gsq"]) > 0
+    assert math.isfinite(float(m_tel["probe_snr"]))
+    sites = m_tel["probe_sites"]
+    assert sites and all(np.asarray(v).shape == (tprobes.PROBE_WIDTH,)
+                         for v in sites.values())
+    tot = np.sum(np.stack([np.asarray(v) for v in sites.values()]), axis=0)
+    assert tot[0] == pytest.approx(float(m_tel["probe_gsq"]), rel=1e-5)
+
+
+def test_probes_compose_with_compact_grads(key):
+    """Probe slots and gradient slots ride the same params tree: compact-
+    gradient mode with telemetry stays bit-identical to compact-gradient
+    mode without, and still emits the probe summary."""
+    pol = SketchPolicy(base=SketchConfig(method="l1", budget=0.3,
+                                         backend="compact"))
+    opt = sgd(0.1)
+    batch = next(iter(LMStream(vocab=TINY.vocab, seed=0).batches(4, 32)))
+    ex_cg = ExecutionConfig(compact_grads=True)
+    rt_tel = Runtime(policy=pol, execution=ex_cg.replace(telemetry=TelemetryConfig()))
+    rt_plain = Runtime(policy=pol, execution=ex_cg)
+    state = rt_plain.init_state(jax.random.key(0), TINY, opt)
+    s1, m1 = rt_tel.train_step(TINY, opt, donate=False)(state, batch, key)
+    s0, m0 = rt_plain.train_step(TINY, opt, donate=False)(state, batch, key)
+    assert float(m0["loss"]) == float(m1["loss"])
+    for a, b in zip(jax.tree.leaves(s0.params), jax.tree.leaves(s1.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert float(m1["probe_var"]) > 0
+
+
+def test_no_probes_under_tp_sketch_or_exact():
+    """Probes are skipped where they cannot be computed: under tp_sketch
+    (TP shard_map sites do not probe) and for exact (no-policy) steps."""
+    from repro.train.train_step import make_train_step
+
+    pol = SketchPolicy(base=SketchConfig(method="l1", budget=0.3,
+                                         backend="compact"))
+    opt = sgd(0.1)
+    batch = next(iter(LMStream(vocab=TINY.vocab, seed=0).batches(4, 32)))
+    ex = ExecutionConfig(tp_sketch=True, telemetry=TelemetryConfig())
+    step = jax.jit(make_train_step(TINY, opt, pol, execution=ex),
+                   donate_argnums=())
+    rt = Runtime(policy=pol)
+    state = rt.init_state(jax.random.key(0), TINY, opt)
+    _, m = step(state, batch, jax.random.key(1))
+    assert "probe_snr" not in m
+    rt_exact = Runtime(execution=ExecutionConfig(telemetry=TelemetryConfig()))
+    _, m2 = rt_exact.train_step(TINY, opt, donate=False)(state, batch,
+                                                         jax.random.key(1))
+    assert "probe_snr" not in m2
+
+
+def test_telemetry_config_validation():
+    with pytest.raises(ValueError, match="accum"):
+        ExecutionConfig(telemetry=TelemetryConfig(), accum=2)
+    ex = ExecutionConfig(telemetry=TelemetryConfig(probes=False), accum=2)
+    hash(ex)  # telemetry config stays hashable on the execution config
+    with pytest.raises(ValueError, match="interval"):
+        TelemetryConfig(interval=0)
+
+
+# ---------------------------------------------------------------------------
+# Adaptive controller
+# ---------------------------------------------------------------------------
+
+
+def test_adaptive_controller_walks_buckets_deterministically():
+    c = AdaptiveBudgetController((1.0, 0.5, 0.2), target_snr=0.8,
+                                 effective=(0.6, 0.5, 0.2), window=2, ema=1.0)
+    assert c.budget == 1.0
+    c.observe(1.6)
+    assert c.budget == 1.0  # window not yet full
+    c.observe(1.6)
+    assert c.budget == 0.5  # predicted snr@0.5 = 1.07 >= 0.8, @0.2 = 0.27 < 0.8
+    c.observe(1.1), c.observe(1.1)
+    assert c.budget == 0.5  # cheapest bucket still fails the target
+    c.observe(0.5), c.observe(0.5)
+    assert c.budget == 1.0  # even current bucket fails -> back up
+    # never leaves the bucket set
+    for s in (10.0, 10.0, 10.0, 10.0, 10.0, 10.0, 0.01, 0.01, 0.01):
+        assert c.observe(s) in (1.0, 0.5, 0.2)
+
+
+def test_adaptive_controller_steps_down_from_exact():
+    c = AdaptiveBudgetController((None, 0.5), target_snr=1.0, window=3)
+    for _ in range(2):
+        c.step_end({})  # exact bucket: no probe signal
+        assert c.budget is None
+    c.step_end({})
+    assert c.budget == 0.5  # patience elapsed -> start measuring
+    c2 = AdaptiveBudgetController((1.0, 0.5), target_snr=1.0, window=1)
+    c2.step_end({})  # sketched bucket with no probe signal: hold, never blind
+    assert c2.budget == 1.0
+
+
+def test_adaptive_schedule_validation():
+    s = BudgetSchedule.adaptive(2.0, budgets=(None, 1.0, 0.5))
+    assert s.is_adaptive and not s.is_reactive
+    assert s.buckets() == (None, 1.0, 0.5)
+    with pytest.raises(ValueError, match="use make_controller"):
+        s.budget_at(0)
+    with pytest.raises(ValueError, match="descend"):
+        BudgetSchedule.adaptive(2.0, budgets=(0.5, 1.0))
+    with pytest.raises(ValueError, match="target_snr"):
+        BudgetSchedule(adaptive_budgets=(1.0, 0.5))
+    with pytest.raises(ValueError, match="target_snr"):
+        BudgetSchedule(target_snr=2.0)
+    with pytest.raises(ValueError, match="mutually exclusive"):
+        BudgetSchedule(points=((0, 0.5),), adaptive_budgets=(1.0, 0.5),
+                       target_snr=1.0)
+    # controller maps the 1.0 bucket onto the policy's own budget
+    pol = SketchPolicy(base=SketchConfig(method="l1", budget=0.6))
+    c = s.make_controller(policy=pol)
+    assert c.effective == (None, 0.6, 0.5)
+    # a policy budget that inverts the ordering: buckets are re-sorted by
+    # effective fidelity (duplicates collapse, earlier-listed bucket wins),
+    # so the 0.5 escalation path above the policy's own 0.2 stays reachable
+    # and the controller's "later = cheaper" contract holds
+    pol02 = SketchPolicy(base=SketchConfig(method="l1", budget=0.2))
+    c2 = BudgetSchedule.adaptive(1.0, budgets=(1.0, 0.5, 0.2, 0.1)) \
+        .make_controller(policy=pol02)
+    assert c2.budgets == (0.5, 1.0, 0.1)
+    assert c2.effective == (0.5, 0.2, 0.1)
+
+
+def test_adaptive_warns_when_it_cannot_measure():
+    """An adaptive schedule that can never see a probe (tp_sketch, exact
+    policy, non-column method, location-restricted policy) must say so
+    loudly instead of silently running a constant budget; adaptive with
+    accumulation is rejected up front."""
+    import warnings
+
+    from repro.train.trainer import TrainerConfig
+
+    def runs_with_warning(rt):
+        data = LMStream(vocab=TINY.vocab, seed=0).batches(2, 16)
+        with warnings.catch_warnings(record=True) as rec:
+            warnings.simplefilter("always")
+            rt.train(TINY, sgd(0.1), data, TrainerConfig(steps=2, log_every=1),
+                     on_metrics=lambda m: None)
+        return any("cannot measure gradient SNR" in str(w.message) for w in rec)
+
+    sched = BudgetSchedule.adaptive(1.0, budgets=(1.0, 0.5))
+    pol = SketchPolicy(base=SketchConfig(method="l1", budget=0.3))
+    assert runs_with_warning(Runtime(policy=pol, schedule=sched,
+                                     execution=ExecutionConfig(tp_sketch=True)))
+    # non-column method: no site is probe-capable
+    assert runs_with_warning(Runtime(
+        policy=SketchPolicy(base=SketchConfig(method="per_element", budget=0.3)),
+        schedule=sched))
+    # exact default policy (base=None)
+    assert runs_with_warning(Runtime(policy=SketchPolicy(), schedule=sched))
+    # the healthy configuration does NOT warn
+    assert not runs_with_warning(Runtime(policy=pol, schedule=sched))
+    # adaptive + accumulation is a contradiction, rejected with a clear error
+    with pytest.raises(ValueError, match="accum == 1"):
+        Runtime(policy=pol, schedule=sched,
+                execution=ExecutionConfig(accum=2)).train(
+            TINY, sgd(0.1), LMStream(vocab=TINY.vocab, seed=0).batches(2, 16),
+            TrainerConfig(steps=2))
+
+
+def test_adaptive_trains_with_only_prebuilt_buckets():
+    """Trainer-level closed loop: ``BudgetSchedule.adaptive`` through
+    ``Runtime.train`` compiles exactly one step per bucket (compile counter
+    as in test_api) and every step runs one of those buckets."""
+    from repro.api import runtime as runtime_mod
+    from repro.train.trainer import TrainerConfig
+
+    runtime_mod._cache_clear()
+    sched = BudgetSchedule.adaptive(0.05, budgets=(1.0, 0.5, 0.2), window=2)
+    rt = Runtime(policy=SketchPolicy(base=SketchConfig(method="l1", budget=0.5)),
+                 schedule=sched)
+    data = LMStream(vocab=TINY.vocab, seed=0).batches(4, 32)
+    tcfg = TrainerConfig(steps=8, log_every=1)
+    _, hist = rt.train(TINY, sgd(0.1), data, tcfg, on_metrics=lambda m: None)
+    assert len(runtime_mod._STEP_BUILDS) == len(sched.buckets()), \
+        "adaptive must only ever run pre-compiled buckets (no recompiles)"
+    assert all(m["budget"] in sched.buckets() for m in hist)
+    # the lax target lets the controller walk down; probes rode along
+    assert any(m["budget"] != 1.0 for m in hist)
+    assert all(math.isfinite(m["probe_snr"]) for m in hist if "probe_snr" in m)
+    assert len(set(m["budget"] for m in hist)) >= 2
+
+
+# ---------------------------------------------------------------------------
+# Sinks + cost attribution
+# ---------------------------------------------------------------------------
+
+
+def test_sinks_roundtrip(tmp_path):
+    jsonl = str(tmp_path / "tel.jsonl")
+    csvp = str(tmp_path / "tel.csv")
+    sink = tsinks.build_sinks(TelemetryConfig(jsonl=jsonl, csv=csvp))
+    ring = tsinks.RingSink(capacity=2)
+    sink.sinks.append(ring)
+    for step in range(3):
+        sink.write({"step": step, "budget": 0.5, "loss": 1.0 / (step + 1),
+                    "probe_sites": {"a/b": [1.0, 2.0, 3.0, 1.0]}})
+    sink.close()
+    lines = [json.loads(l) for l in open(jsonl)]
+    assert len(lines) == 3 and lines[2]["step"] == 2
+    assert lines[0]["probe_sites"]["a/b"] == [1.0, 2.0, 3.0, 1.0]
+    rows = open(csvp).read().strip().splitlines()
+    assert rows[0].split(",") == ["budget", "loss", "step"]  # scalars only
+    assert len(rows) == 4
+    assert len(ring) == 2 and ring.records[-1]["step"] == 2  # bounded
+    assert tsinks.build_sinks(TelemetryConfig()) is None
+    assert tsinks.build_sinks(None) is None
+
+
+def test_site_cost_table_and_hlo_join():
+    from repro.models import lm
+
+    pol = SketchPolicy(base=SketchConfig(method="l1", budget=0.25,
+                                         backend="compact"))
+    params = lm.init_params(jax.random.key(0), TINY)
+    table = tsinks.site_cost_table(params, pol, n_tokens=128,
+                                   n_layers=TINY.n_layers)
+    assert table, "sketched sites must be attributed"
+    for rec in table.values():
+        assert rec["bwd_sketched_flops"] < rec["bwd_exact_flops"]
+        assert 0.0 < rec["savings_frac"] < 1.0
+        assert rec["layers"] == TINY.n_layers  # scan-stacked leading dim
+    tot = tsinks.table_totals(table)
+    assert tot["n_sites"] == len(table) and tot["savings_frac"] > 0.5
+    joined = tsinks.join_hlo_cost(table, {"flops": 1e9})
+    assert sum(v["hlo_flops_share"] for v in joined.values()) == pytest.approx(1e9)
+    assert tsinks.site_cost_table(params, None, 128) == {}
+
+
+def test_probe_slot_builders():
+    from repro.models import lm
+
+    pol = SketchPolicy(base=SketchConfig(method="l1", budget=0.3))
+    params = lm.init_params(jax.random.key(0), TINY)
+    slotted = tprobes.with_probe_slots(params, pol, n_layers=TINY.n_layers)
+    flat = jax.tree_util.tree_flatten_with_path(slotted)[0]
+    n_slots = sum(1 for p, _ in flat if "pslot" in str(p))
+    assert n_slots > 0
+    # location policies can't be matched statically on scan models: no slots
+    loc = SketchPolicy(base=SketchConfig(method="l1", budget=0.3),
+                       location="first")
+    assert tprobes.with_probe_slots(params, loc, n_layers=2) is params
+    # non-column methods are not probe-capable
+    rcs = SketchPolicy(base=SketchConfig(method="rcs", budget=0.3))
+    flat2 = jax.tree_util.tree_flatten_with_path(
+        tprobes.with_probe_slots(params, rcs, n_layers=2))[0]
+    assert not any("pslot" in str(p) for p, _ in flat2)
+    # collect strips every slot and returns the original structure
+    grads, probes = tprobes.collect_probes(slotted)
+    assert len(probes) == n_slots
+    assert jax.tree_util.tree_structure(grads) == jax.tree_util.tree_structure(params)
+    # MLP family builder (static layer indices -> location-aware)
+    mlp_params = [{"w": jnp.zeros((64, 784))}, {"w": jnp.zeros((10, 64))}]
+    out = tprobes.mlp_probe_slots(mlp_params, pol)
+    assert "pslot" in out[0] and "pslot" not in out[1]  # lm_head excluded
+
+
+def test_engine_decode_counters():
+    from repro.models import lm
+    from repro.serve.engine import Engine, Request
+
+    cfg = ArchConfig(name="srv", family="dense", n_layers=1, d_model=32,
+                     n_heads=4, n_kv=2, d_ff=64, vocab=64, q_chunk=16,
+                     kv_chunk=16)
+    params = lm.init_params(jax.random.key(0), cfg)
+    eng = Engine(params, cfg, batch=2, max_len=32)
+    reqs = [Request(prompt=np.asarray([1, 2, 3], np.int32), max_new=4),
+            Request(prompt=np.asarray([4, 5], np.int32), max_new=4)]
+    eng.run(reqs)
+    assert all(r.out is not None and len(r.out) == 4 for r in reqs)
+    t = eng.telemetry()
+    assert t["batches"] == 1 and t["prefill_calls"] == 1
+    assert t["decode_steps"] == 4 and t["tokens_out"] == 8
+    assert t["decode_tok_per_s"] > 0 and t["prefill_tok_per_s"] > 0
+    assert len(eng.ring) == 1
+    assert eng.ring.records[0]["tokens_out"] == 8
