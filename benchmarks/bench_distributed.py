@@ -5,7 +5,10 @@ Measures, for one sharded train step of a small dense LM on a (2, 4)
 
   * wall time per step (median of ``reps``) for exact / mask / compact /
     block backends — the compact ones via the TP-local sketch with the
-    compressed DP gradient reduce-scatter (core/sharded_sketch.py);
+    compressed DP gradient reduce-scatter (the ``tp_column``/``tp_row``
+    plans of core/site.py) — plus ``tp_adaptive``: the probed TP step an
+    adaptive budget schedule runs, reporting the probe's step-time overhead
+    and extra collective bytes vs the fixed-budget ``compact`` run;
   * HLO collective wire bytes per step (launch/hlo_analysis.py parser), the
     quantity the paper's batch-shared sketch shrinks: the compact dW block
     moves ≈ budget × the dense gradient volume over the data axis.
@@ -38,11 +41,20 @@ from repro.train.train_step import TrainState, init_state
 
 def _variants(budget: float) -> dict:
     cfg = dict(method="l1", budget=budget)
+    compact = SketchPolicy(base=SketchConfig(backend="compact", **cfg))
     return {
-        "exact": (None, False),
-        "mask": (SketchPolicy(base=SketchConfig(backend="mask", **cfg)), False),
-        "compact": (SketchPolicy(base=SketchConfig(backend="compact", **cfg)), True),
-        "block": (SketchPolicy(base=SketchConfig(backend="compact", block=4, **cfg)), True),
+        "exact": (None, False, False),
+        "mask": (SketchPolicy(base=SketchConfig(backend="mask", **cfg)), False,
+                 False),
+        "compact": (compact, True, False),
+        "block": (SketchPolicy(base=SketchConfig(backend="compact", block=4,
+                                                 **cfg)), True, False),
+        # adaptive-under-TP: the step BudgetSchedule.adaptive actually runs —
+        # TP-local sketch with the in-body probes psum'ed over the model
+        # axis riding the probe-slot cotangents (one-spine refactor). The
+        # derived tp_probe_overhead / collective-byte delta vs the fixed-
+        # budget "compact" run is the cost of closing the loop under TP.
+        "tp_adaptive": (compact, True, True),
     }
 
 
@@ -73,10 +85,13 @@ def run(quick: bool = True, budget: float = 0.25, reps: int = 5) -> dict:
     act = NamedSharding(mesh, P(("data",), None, None))
     bspec = {k: NamedSharding(mesh, P("data", None)) for k in batch}
 
+    from repro.telemetry import TelemetryConfig
+
     out = {"mesh": "2x4", "budget": budget, "variants": {}}
-    for name, (policy, tp) in _variants(budget).items():
+    for name, (policy, tp, probes) in _variants(budget).items():
+        tel = TelemetryConfig(per_site=False) if probes else None
         runtime = Runtime(policy=policy, execution=ExecutionConfig(
-            mesh=mesh, act_sharding=act, tp_sketch=tp))
+            mesh=mesh, act_sharding=act, tp_sketch=tp, telemetry=tel))
         step = runtime.train_step(arch, opt, jitted=False)
         fn = jax.jit(step, in_shardings=(sshard, bspec, NamedSharding(mesh, P())))
         compiled = fn.lower(state, batch, key).compile()
@@ -105,6 +120,17 @@ def run(quick: bool = True, budget: float = 0.25, reps: int = 5) -> dict:
     if ex:
         for name, rec in out["variants"].items():
             rec["coll_ratio_vs_exact"] = rec["coll_bytes_total"] / ex
+    cp = out["variants"].get("compact")
+    ta = out["variants"].get("tp_adaptive")
+    if cp and ta:
+        # the cost of closing the cost-precision loop under TP: probed step
+        # time and collective bytes relative to the fixed-budget TP run
+        ta["tp_probe_overhead"] = ta["step_ms"] / cp["step_ms"]
+        ta["tp_probe_coll_bytes_delta"] = (ta["coll_bytes_total"]
+                                           - cp["coll_bytes_total"])
+        print(f"  tp_adaptive probe overhead {ta['tp_probe_overhead']:.3f}x, "
+              f"extra collective bytes "
+              f"{ta['tp_probe_coll_bytes_delta']:+,.0f}")
     save_result("distributed", out)
     return out
 

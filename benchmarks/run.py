@@ -45,23 +45,52 @@ _KEY_METRICS = {
 }
 
 
+def _parse_summary(text: str) -> dict:
+    recs = {}
+    for line in text.splitlines():
+        line = line.strip()
+        if line:
+            try:
+                r = json.loads(line)
+                recs[r["name"]] = r
+            except (ValueError, KeyError):
+                pass
+    return recs
+
+
+def _committed_summary(summary_path: str):
+    """The git-committed BENCH_summary.json (the previous PR's values), or
+    None when unavailable. Seeding prev/delta from the *checked-in* summary
+    — rather than whatever the file on disk currently holds — makes the
+    cross-PR trajectory robust to multiple write_summary calls in one
+    session (a second call would otherwise diff against its own output and
+    report delta 0 forever)."""
+    import subprocess
+
+    rel = os.path.relpath(summary_path, ROOT)
+    if rel.startswith(".."):
+        return None  # outside the repo (tests writing to tmp dirs)
+    try:
+        r = subprocess.run(["git", "show", f"HEAD:{rel.replace(os.sep, '/')}"],
+                           capture_output=True, text=True, cwd=ROOT)
+    except OSError:
+        return None
+    return _parse_summary(r.stdout) if r.returncode == 0 else None
+
+
 def write_summary(results_dir: str = RESULTS,
                   summary_path: str = SUMMARY_PATH) -> list:
     """Write ``BENCH_summary.json``: one JSON object per line with
     ``{name, metric, value, prev, delta}`` for every artifact in
-    ``results_dir`` (prev/delta come from the summary being replaced).
-    Returns the records."""
-    prev = {}
-    if os.path.exists(summary_path):
-        with open(summary_path) as f:
-            for line in f:
-                line = line.strip()
-                if line:
-                    try:
-                        r = json.loads(line)
-                        prev[r["name"]] = r
-                    except (ValueError, KeyError):
-                        pass
+    ``results_dir``. ``prev``/``delta`` are seeded from the git-committed
+    summary (the previous PR's headline values), falling back to the file
+    being replaced when git is unavailable. Returns the records."""
+    prev = _committed_summary(summary_path)
+    if prev is None:
+        prev = {}
+        if os.path.exists(summary_path):
+            with open(summary_path) as f:
+                prev = _parse_summary(f.read())
     records = []
     for fname in sorted(os.listdir(results_dir) if os.path.isdir(results_dir) else []):
         if not fname.endswith(".json"):

@@ -13,6 +13,11 @@ One import gives the whole paper-reproduction surface:
     (``ExecutionConfig.telemetry``; see docs/telemetry.md).
   * :func:`register_estimator` — plug in new unbiased-VJP estimator families
     (RAD / BASIS-style) without touching core.
+  * :class:`SiteSpec` / :class:`ExecutionPlan` / :func:`resolve_site` — the
+    declarative per-site dispatch of the one sketched-site spine
+    (``core/site.py``): which execution plan (local / tp_column / tp_row /
+    tp_exact) a site's backward takes, whether it emits compact gradient
+    rows, and whether it can probe.
   * :class:`SketchPolicy` / :class:`SketchConfig` — the paper's estimator
     placement and per-site configuration (re-exported from core).
 
@@ -34,6 +39,7 @@ from repro.api.schedule import BudgetSchedule, Controller, StragglerController
 from repro.core import SketchConfig, SketchPolicy
 from repro.core.estimators import (Estimator, EstimatorVJP, get_estimator,
                                    register_estimator, registered_backends)
+from repro.core.site import ExecutionPlan, SiteSpec, resolve_site
 from repro.telemetry import TelemetryConfig
 from repro.telemetry.controller import AdaptiveBudgetController
 
@@ -44,7 +50,9 @@ __all__ = [
     "Estimator",
     "EstimatorVJP",
     "ExecutionConfig",
+    "ExecutionPlan",
     "Runtime",
+    "SiteSpec",
     "SketchConfig",
     "SketchPolicy",
     "StragglerController",
@@ -52,4 +60,5 @@ __all__ = [
     "get_estimator",
     "register_estimator",
     "registered_backends",
+    "resolve_site",
 ]

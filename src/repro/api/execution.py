@@ -25,7 +25,9 @@ class ExecutionConfig:
       act_sharding: NamedSharding constraint pinned on [B, S, d] activations.
       data_axes / model_axes: mesh axis names carrying DP and TP/EP shards.
       tp_sketch: TP-local compact sketching with compressed DP gradient
-        collectives (core/sharded_sketch.py).
+        collectives — sites resolve onto the tp_column/tp_row execution
+        plans of the one sketched-site spine (core/site.py; see
+        :meth:`site_spec`).
       compact_grads: keep sketched dW compact (rows + indices) from the
         backward through clipping into sparse-row optimizer updates
         (core/compact_grad.py; requires ``accum == 1``).
@@ -61,6 +63,22 @@ class ExecutionConfig:
                              "cotangents would silently average across "
                              "microbatch plans); use TelemetryConfig("
                              "probes=False) with accumulation")
+
+    def site_spec(self, role: str, cfg, *, d_out: int, d_in: int,
+                  has_bias: bool = False, x_ndim: int = 3):
+        """Resolve one sketched-linear site against this execution
+        environment to its declarative :class:`~repro.core.site.SiteSpec`
+        (local / tp_column / tp_row plan, slot ranks, probe capability).
+        This is the same memoized resolution ``nn.common.dense`` and the
+        gslot/pslot builders consume — the one dispatch decision per site.
+        """
+        from repro.core.site import resolve_site
+
+        return resolve_site(role, cfg, d_out=d_out, d_in=d_in,
+                            has_bias=has_bias, x_ndim=x_ndim, mesh=self.mesh,
+                            data_axes=self.data_axes,
+                            model_axes=self.model_axes,
+                            tp_sketch=self.tp_sketch)
 
     def make_ctx(self, *, policy=None, key=None, decode: bool = False,
                  cost_mode: Optional[bool] = None, layer_index: int = 0,

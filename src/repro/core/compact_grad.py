@@ -127,26 +127,6 @@ def compact_rank(cfg: SketchConfig, n: int) -> int:
 # ---------------------------------------------------------------------------
 
 
-class _MeshCtx:
-    """Duck-typed stand-in for nn.common.Ctx accepted by tp_applicable."""
-
-    def __init__(self, mesh, data_axes, model_axes, tp_sketch):
-        self.mesh = mesh
-        self.data_axes = tuple(data_axes)
-        self.model_axes = tuple(model_axes)
-        self.tp_sketch = tp_sketch
-
-
-def _compact_capable(backend: str) -> bool:
-    """Does the registered estimator for ``backend`` emit compact gradients?"""
-    from repro.core.estimators import get_estimator
-
-    try:
-        return bool(get_estimator(backend).supports_compact_grad)
-    except KeyError:
-        return False
-
-
 def _site_role(path) -> Optional[str]:
     if len(path) < 2:
         return None
@@ -156,32 +136,6 @@ def _site_role(path) -> Optional[str]:
     if parent == "mlp" and leaf in ("in", "gate", "out"):
         return f"mlp_{leaf}"
     return None
-
-
-def _slot_rank(role, cfg, w, has_b, shim) -> Optional[int]:
-    """Mirror of nn.common.dense's backend dispatch: how many compact rows
-    the site's backward will emit, or None if it stays dense."""
-    from repro.core.estimators import get_estimator
-    from repro.core.sharded_sketch import tp_applicable, tp_row_applicable
-
-    est = get_estimator(cfg.backend)
-    n_out = w.shape[-2]
-    if shim.tp_sketch:
-        if shim.mesh is None:
-            # dense() forces the mask backend on every compact site when
-            # tp_sketch is set without a mesh — no compact rows will be
-            # emitted, so a slot here would freeze the site (its cotangent
-            # stays zero)
-            return None
-        if role in TP_OUT_ROLES and not has_b and tp_applicable(shim, cfg, n_out):
-            n_mp = 1
-            for a in shim.model_axes:
-                n_mp *= shim.mesh.shape[a]
-            return n_mp * est.compact_rank(cfg, n_out // n_mp)
-        if role in TP_ROW_ROLES and not has_b and tp_row_applicable(shim, cfg, w.shape[-1]):
-            return est.compact_rank(cfg, n_out)
-        return None  # dense() forces the mask backend on TP-incompatible sites
-    return est.compact_rank(cfg, n_out)
 
 
 def with_grad_slots(params, policy, *, mesh=None, data_axes=("data",),
@@ -197,35 +151,39 @@ def with_grad_slots(params, policy, *, mesh=None, data_axes=("data",),
     policies (whose per-layer config differs from layer 0's) therefore get
     no slots and keep the dense path.
 
+    Which sites emit slots is decided by the SAME resolved
+    :class:`~repro.core.site.SiteSpec` that ``nn.common.dense`` executes
+    (``core.site.resolve_tree_site``): a slot appears exactly when the
+    resolved execution plan produces compact rows (``spec.compact_rows``) —
+    including on the TP shard_map plans and for bias-carrying TP sites —
+    so slot emission cannot drift from backward dispatch.
+
     Weights applied more than once per step never get a slot: JAX would sum
     the per-use CompactGrad cotangents LEAFWISE — adding the index vectors
     of different plans together — which is silently corrupt. That is why
     the ``"shared"`` subtree (zamba2-style shared attention, applied every
-    period repetition) is excluded, and why ``compact_grads`` rejects
-    ``accum > 1`` (the same aliasing across microbatches).
+    period repetition) is excluded (``resolve_tree_site`` skips it), and why
+    ``compact_grads`` rejects ``accum > 1`` (the same aliasing across
+    microbatches).
     """
     if policy is None or policy.location != "all":
         return params
-    shim = _MeshCtx(mesh, data_axes, model_axes, tp_sketch)
+    from repro.core.site import resolve_tree_site
 
     def walk(node, path):
         if isinstance(node, dict):
             out = {k: walk(v, path + (k,)) for k, v in node.items()}
-            # multi-use weights (the shared-attention block is applied every
-            # period repetition) must keep the dense path: summed per-use
-            # slot cotangents would add index vectors of different plans
-            role = None if "shared" in path else _site_role(path)
-            w = node.get("w")
-            if role is not None and w is not None and getattr(w, "ndim", 0) >= 2:
-                cfg = policy.config_for(role, 0, n_layers)
-                if (cfg is not None and not cfg.is_noop
-                        and _compact_capable(cfg.backend)):
-                    r = _slot_rank(role, cfg, w, "b" in node, shim)
-                    if r is not None:
-                        lead = w.shape[:-2]
-                        out["gslot"] = CompactGrad(
-                            rows=jnp.zeros(lead + (r, w.shape[-1]), jnp.float32),
-                            idx=jnp.zeros(lead + (r,), jnp.float32))
+            spec = resolve_tree_site(path, node, policy, n_layers=n_layers,
+                                     mesh=mesh, data_axes=data_axes,
+                                     model_axes=model_axes,
+                                     tp_sketch=tp_sketch)
+            if spec is not None and spec.compact_rows is not None:
+                w = node["w"]
+                lead = w.shape[:-2]
+                r = spec.compact_rows
+                out["gslot"] = CompactGrad(
+                    rows=jnp.zeros(lead + (r, w.shape[-1]), jnp.float32),
+                    idx=jnp.zeros(lead + (r,), jnp.float32))
             return out
         if isinstance(node, (list, tuple)):
             return type(node)(walk(v, path) for v in node)

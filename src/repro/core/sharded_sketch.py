@@ -1,228 +1,51 @@
-"""Tensor-parallel compact sketching with compressed gradient collectives.
+"""Tensor-parallel sketched linears: thin instantiations of the site spine.
 
-The pjit-auto compact path breaks down under TP: gathering sketched columns of
-a model-sharded G and scattering dW rows with data-dependent indices forces
-XLA to replicate full fp32 buffers (measured in EXPERIMENTS.md §Perf). This
-module is the TP-native realisation (DESIGN.md §3):
-
-  * the column budget is split per model shard (r_loc = r / n_mp), planned
-    *locally* inside ``shard_map`` — static shapes, no score all-gather;
-    still exactly unbiased (unbiasedness is per-coordinate for any p > 0);
-  * dX: local compact matmul + the SAME psum over the model axis a dense TP
-    backward needs — no extra collectives;
-  * dW: the compact [r_loc, d_in] block is reduce-scattered over the data
-    axis BEFORE scattering into the full gradient — the DP gradient
-    collective moves ≈ budget × the dense volume. This is the compressed
-    all-reduce enabled by the paper's batch-shared sketch (R shared across
-    the minibatch ⇒ the step key is shared across DP replicas ⇒ identical
-    index sets on every data shard).
-
-Applies to sites whose d_out is TP-sharded (attn q/k/v, mlp in/gate); other
-sites keep the paper-faithful mask backend. See ``nn.common.dense``.
+The TP-native compact sketching design (DESIGN.md §3) — shard-local column
+plans inside ``shard_map``, the standard TP dX all-reduce, and the compact dW
+block reduce-scattered over the data axis (the compressed DP gradient
+collective enabled by the paper's batch-shared sketch) — now lives in the one
+sketched-site spine, ``core/site.py``, as the ``tp_column`` / ``tp_row`` /
+``tp_exact`` :class:`~repro.core.site.ExecutionPlan` kinds. This module keeps
+the historical entry points as spec constructors plus the applicability
+predicates that :func:`~repro.core.site.resolve_site` consults.
 
 Registry routing: the sketch *plan* inside shard_map comes from the
 registered estimator's ``plan`` hook — any estimator that sets
-``tp_shardable=True`` (see ``core/estimators.py``) runs on this path with
-its own sampling scheme, and its ``validate`` is consulted here exactly as
-on the single-device path, so configs are accepted/rejected consistently.
-The builtin compact/pallas backends are simply the first two such entries.
+``tp_shardable=True`` (see ``core/estimators.py``) runs on these plans with
+its own sampling scheme, and its ``validate`` is consulted here exactly as on
+the single-device path, so configs are accepted/rejected consistently. The
+builtin compact/pallas backends are simply the first two such entries.
+
+Bias and telemetry ride the same streams: ``db`` is folded into the
+kept-column gather of every TP plan, and the per-site probe is computed
+inside the shard_map backward body and ``psum``-ed over the model axis — so
+compact gradients, bias sites and adaptive budget control all work under
+tensor parallelism (see docs/distributed.md, docs/telemetry.md).
 """
 from __future__ import annotations
 
-from functools import partial
+from repro.core import site
+from repro.core.site import tp_estimator as _tp_estimator
+from repro.core.sketching import SketchConfig
 
-import jax
-import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
-
-from repro import compat
-
-from repro.core import estimators
-from repro.core.compact_grad import CompactGrad
-from repro.core.sketching import SketchConfig, effective_cfg
-
-__all__ = ["tp_sketched_linear", "tp_applicable"]
+__all__ = ["tp_sketched_linear", "tp_row_sketched_linear", "tp_exact_linear",
+           "tp_applicable", "tp_row_applicable"]
 
 
-def _tp_estimator(cfg):
-    """The registered estimator for ``cfg`` iff it opted into the TP path.
-
-    The sharded path is registry-routed: any estimator with
-    ``tp_shardable=True`` (builtin compact/pallas, or a third-party entry)
-    has its ``plan`` hook called inside shard_map; its ``validate`` runs
-    here too, so a config is rejected/accepted consistently with the
-    single-device path. Estimators without the flag return None and the
-    site falls back per ``nn.common.dense``.
-    """
-    if cfg is None or cfg.is_noop:
-        return None
-    try:
-        est = estimators.get_estimator(cfg.backend)
-    except KeyError:
-        return None
-    if not getattr(est, "tp_shardable", False):
-        return None
-    est.validate(cfg)
-    return est
+def _plan(ctx, kind):
+    return site.ExecutionPlan(kind=kind, mesh=ctx.mesh,
+                              data_axes=tuple(ctx.data_axes),
+                              model_axis=ctx.model_axes[0])
 
 
 def tp_applicable(ctx, cfg, d_out: int) -> bool:
+    """Column-parallel sites (attn q/k/v, mlp in/gate, ...): d_out is
+    TP-sharded under ``ctx.tp_sketch``."""
     if ctx.mesh is None or not getattr(ctx, "tp_sketch", False) or cfg is None:
         return False
     if _tp_estimator(cfg) is None:
         return False
-    n_mp = 1
-    for a in ctx.model_axes:
-        n_mp *= ctx.mesh.shape[a]
-    if d_out % n_mp != 0:
-        return False
-    n_loc = d_out // n_mp
-    from repro.core.sketching import static_rank, static_block_rank
-    if cfg.block > 1:
-        return n_loc % cfg.block == 0 and static_block_rank(cfg, n_loc) >= 1
-    return static_rank(cfg, n_loc) >= 1
-
-
-def _gather_compact(lcfg, G2d, w_l, idx, scales):
-    """Gather the kept G columns / W rows for the local plan.
-
-    Block-granular plans gather whole contiguous blocks (reshape + one
-    block-level take — the lane-aligned slab layout the Pallas kernels use)
-    instead of expanding to per-column indices; the returned ``idx`` is the
-    expanded per-column index vector for the dW scatter / CompactGrad.
-    """
-    if lcfg.block > 1:
-        bs = lcfg.block
-        nb = G2d.shape[-1] // bs
-        Gc = (jnp.take(G2d.reshape(-1, nb, bs), idx, axis=1)
-              * scales[None, :, None].astype(G2d.dtype)).reshape(G2d.shape[0], -1)
-        Wc = jnp.take(w_l.reshape(nb, bs, -1), idx, axis=0).reshape(-1, w_l.shape[-1])
-        idx = (idx[:, None] * bs + jnp.arange(bs, dtype=idx.dtype)).reshape(-1)
-        return Gc, Wc, idx
-    Gc = jnp.take(G2d, idx, axis=1) * scales[None, :].astype(G2d.dtype)
-    Wc = jnp.take(w_l, idx, axis=0)
-    return Gc, Wc, idx
-
-
-def tp_sketched_linear(x, w, ctx, cfg: SketchConfig, key, slot=None):
-    """x: [B, S, d_in]; w: [n, d_in] with n TP-sharded. Returns [B, S, n].
-
-    With a ``slot`` (compact-gradient mode), the backward skips the per-shard
-    densify-scatter entirely: the reduce-scattered compact dW block and its
-    global row indices ride the slot's cotangent (mp-replicated rows, din
-    dp-sharded — so the optimizer's sparse-row scatter partitions
-    collective-free), and the dense w cotangent is structural zeros.
-    """
-    mesh = ctx.mesh
-    dp = tuple(ctx.data_axes)
-    mp = ctx.model_axes[0]
-    fn = _build(cfg, mesh, dp, mp, x.shape, w.shape, slot is not None)
-    return fn(x, w, key, slot)
-
-
-def _plan_via_registry(est, lcfg, G2d, w_l, key, dp):
-    """One shard-local sketch plan, routed through the registered
-    estimator's ``plan`` hook (tp_shardable contract: a compact
-    ``ColumnPlan`` with indices + scales)."""
-    plan = est.plan(lcfg, G2d, w_l, key, want_compact=True,
-                    score_psum_axes=dp)
-    if plan is None or plan.indices is None:
-        raise ValueError(
-            f"estimator {est.name!r} is tp_shardable but plan() returned no "
-            "compact ColumnPlan — the TP-sharded backward needs indices/scales")
-    return plan
-
-
-def _build(cfg, mesh, dp, mp, x_shape, w_shape, with_slot: bool):
-    B, S, din = x_shape
-    n, _ = w_shape
-    est = _tp_estimator(cfg)
-    assert est is not None, "tp_sketched_linear on a non-tp_shardable backend"
-    n_dp = 1
-    for a in dp:
-        n_dp *= mesh.shape[a]
-    n_mp = mesh.shape[mp]
-    n_loc = n // n_mp
-    scatter_axis = dp[-1] if dp else None
-    n_scatter = mesh.shape[scatter_axis] if scatter_axis else 1
-    psum_rest = tuple(a for a in dp[:-1])
-    din_ok = din % n_scatter == 0
-
-    @partial(jax.custom_vjp, nondiff_argnums=())
-    def fwd_fn(x, w, key, slot):
-        def body(x_l, w_l):
-            return jnp.einsum("bsi,oi->bso", x_l, w_l)
-
-        return compat.shard_map(
-            body, mesh=mesh,
-            in_specs=(P(dp, None, None), P(mp, None)),
-            out_specs=P(dp, None, mp))(x, w)
-
-    def fwd(x, w, key, slot):
-        return fwd_fn(x, w, key, slot), (x, w, key, slot)
-
-    def bwd(res, g):
-        x, w, key, slot = res
-
-        def body(g_l, x_l, w_l, key):
-            # per-shard local plan: fold the (DP-shared) key with the model
-            # shard index so shards sample independent column subsets
-            kk = jax.random.fold_in(key, jax.lax.axis_index(mp))
-            G2d = g_l.reshape(-1, g_l.shape[-1])
-            X2d = x_l.reshape(-1, x_l.shape[-1])
-            lcfg = effective_cfg(cfg, G2d.shape[-1])
-            plan = _plan_via_registry(est, lcfg, G2d, w_l, kk, dp)
-            idx, scales = plan.indices, plan.scales
-            Gc, Wc, idx = _gather_compact(lcfg, G2d, w_l, idx, scales)
-            dx = (Gc @ Wc).reshape(x_l.shape)
-            dx = jax.lax.psum(dx, mp)  # the standard TP backward all-reduce
-            dWc = Gc.T.astype(jnp.float32) @ X2d.astype(jnp.float32)
-            if psum_rest:
-                dWc = jax.lax.psum(dWc, psum_rest)
-            if scatter_axis and din_ok:
-                # compressed DP gradient collective: reduce-scatter the
-                # COMPACT block (≈ budget × dense volume) along d_in
-                dWc = jax.lax.psum_scatter(dWc, scatter_axis, scatter_dimension=1,
-                                           tiled=True)
-            elif scatter_axis:
-                dWc = jax.lax.psum(dWc, scatter_axis)
-            if with_slot:
-                # global row indices into the full [n, din] weight; the
-                # compact block never gets scattered on the backward path.
-                # Rows/indices are all-gathered over mp (compact volume, ≈
-                # budget × a dense mp collective) so the optimizer's
-                # sparse-row scatter partitions collective-free: a scatter
-                # with REPLICATED updates into the (mp, dp)-sharded weight
-                # lowers to a local masked scatter per shard.
-                gidx = (jax.lax.axis_index(mp) * n_loc + idx).astype(jnp.float32)
-                rows_all = jax.lax.all_gather(dWc, mp, axis=0, tiled=True)
-                gidx_all = jax.lax.all_gather(gidx, mp, axis=0, tiled=True)
-                return dx, rows_all, gidx_all
-            if scatter_axis and din_ok:
-                dW_l = jnp.zeros((w_l.shape[0], dWc.shape[1]), w_l.dtype)
-                dW_l = dW_l.at[idx].add(dWc.astype(w_l.dtype))
-            else:
-                dW_l = jnp.zeros_like(w_l).at[idx].add(dWc.astype(w_l.dtype))
-            return dx, dW_l
-
-        din_spec = dp[-1] if (scatter_axis and din_ok) else None
-        if with_slot:
-            dx, rows, gidx = compat.shard_map(
-                body, mesh=mesh,
-                in_specs=(P(dp, None, mp), P(dp, None, None), P(mp, None), P()),
-                out_specs=(P(dp, None, None), P(None, din_spec), P(None)))(
-                    g, x, w, key)
-            slot_ct = CompactGrad(rows=rows.astype(jnp.float32), idx=gidx)
-            return dx, jnp.zeros_like(w), None, slot_ct
-        dx, dw = compat.shard_map(
-            body, mesh=mesh,
-            in_specs=(P(dp, None, mp), P(dp, None, None), P(mp, None), P()),
-            out_specs=(P(dp, None, None), P(mp, din_spec)))(
-                g, x, w, key)
-        return dx, dw, None, None
-
-    fwd_fn.defvjp(fwd, bwd)
-    return fwd_fn
+    return site._tp_column_ok(cfg, d_out, ctx.mesh, tuple(ctx.model_axes))
 
 
 def tp_row_applicable(ctx, cfg, d_in: int) -> bool:
@@ -232,162 +55,50 @@ def tp_row_applicable(ctx, cfg, d_in: int) -> bool:
         return False
     if _tp_estimator(cfg) is None:
         return False
-    n_mp = 1
-    for a in ctx.model_axes:
-        n_mp *= ctx.mesh.shape[a]
-    return d_in % n_mp == 0
+    return site._tp_row_ok(d_in, ctx.mesh, tuple(ctx.model_axes))
 
 
-def tp_row_sketched_linear(x, w, ctx, cfg: SketchConfig, key, slot=None):
+def tp_sketched_linear(x, w, ctx, cfg: SketchConfig, key, slot=None, *,
+                       b=None, pslot=None):
+    """x: [B, S, d_in]; w: [n, d_in] with n TP-sharded. Returns [B, S, n].
+
+    With a ``slot`` (compact-gradient mode), the backward skips the per-shard
+    densify-scatter entirely: the reduce-scattered compact dW block and its
+    global row indices ride the slot's cotangent. With a ``pslot``, the
+    per-shard probe is psum'ed over the model axis and rides the probe-slot
+    cotangent. ``b`` (sharded with the output dim) folds db into the same
+    kept-column stream.
+    """
+    spec = site.SiteSpec(role="tp_column", cfg=cfg, plan=_plan(ctx, "tp_column"),
+                         has_bias=b is not None, d_out=w.shape[0],
+                         d_in=w.shape[1])
+    return site.sketched_site(spec, x, w, b, key, slot, pslot)
+
+
+def tp_row_sketched_linear(x, w, ctx, cfg: SketchConfig, key, slot=None, *,
+                           b=None, pslot=None):
     """x: [B, S, d_in] (d_in TP-sharded); w: [n, d_in]. Returns [B, S, n].
 
     Megatron row-parallel: forward computes local partials + psum(mp).
     Backward sketches columns of the (mp-replicated) output gradient — the
-    plan is identical on every shard (same key, scores psum'ed over dp), so
-    dX stays local (ff-sharded) and the compact dW block reduce-scatters
-    over dp as in the column-parallel path. With a ``slot``, the compact
-    block and its (replicated) row indices ride the slot cotangent instead
-    of being scattered into a dense dW.
+    plan is identical on every shard, so dX stays local (ff-sharded) and the
+    compact dW block reduce-scatters over dp as in the column-parallel plan.
     """
-    mesh = ctx.mesh
-    dp = tuple(ctx.data_axes)
-    mp = ctx.model_axes[0]
-    fn = _build_row(cfg, mesh, dp, mp, x.shape, w.shape, slot is not None)
-    return fn(x, w, key, slot)
+    spec = site.SiteSpec(role="tp_row", cfg=cfg, plan=_plan(ctx, "tp_row"),
+                         has_bias=b is not None, d_out=w.shape[0],
+                         d_in=w.shape[1])
+    return site.sketched_site(spec, x, w, b, key, slot, pslot)
 
 
-def _build_row(cfg, mesh, dp, mp, x_shape, w_shape, with_slot: bool):
-    n = w_shape[0]
-    est = _tp_estimator(cfg)
-    assert est is not None, "tp_row_sketched_linear on a non-tp_shardable backend"
-    scatter_axis = dp[-1] if dp else None
-    n_scatter = mesh.shape[scatter_axis] if scatter_axis else 1
-    psum_rest = tuple(a for a in dp[:-1])
-    n_mp = mesh.shape[mp]
-    din_loc = w_shape[1] // n_mp
-    din_ok = din_loc % n_scatter == 0
-
-    @partial(jax.custom_vjp, nondiff_argnums=())
-    def fwd_fn(x, w, key, slot):
-        def body(x_l, w_l):
-            y_part = jnp.einsum("bsi,oi->bso", x_l, w_l)
-            return jax.lax.psum(y_part, mp)
-
-        return compat.shard_map(
-            body, mesh=mesh,
-            in_specs=(P(dp, None, mp), P(None, mp)),
-            out_specs=P(dp, None, None))(x, w)
-
-    def fwd(x, w, key, slot):
-        return fwd_fn(x, w, key, slot), (x, w, key, slot)
-
-    def bwd(res, g):
-        x, w, key, slot = res
-
-        def body(g_l, x_l, w_l, key):
-            # g is mp-replicated: plan once with the shared key (NO mp fold)
-            G2d = g_l.reshape(-1, g_l.shape[-1])
-            X2d = x_l.reshape(-1, x_l.shape[-1])
-            lcfg = effective_cfg(cfg, G2d.shape[-1])
-            plan = _plan_via_registry(est, lcfg, G2d, w_l, key, dp)
-            idx, scales = plan.indices, plan.scales
-            Gc, Wc, idx = _gather_compact(lcfg, G2d, w_l, idx, scales)
-            dx = (Gc @ Wc).reshape(x_l.shape)  # stays ff-local: no collective
-            dWc = Gc.T.astype(jnp.float32) @ X2d.astype(jnp.float32)
-            if psum_rest:
-                dWc = jax.lax.psum(dWc, psum_rest)
-            if scatter_axis and din_ok:
-                dWc = jax.lax.psum_scatter(dWc, scatter_axis, scatter_dimension=1,
-                                           tiled=True)
-            elif scatter_axis:
-                dWc = jax.lax.psum(dWc, scatter_axis)
-            if with_slot:
-                return dx, dWc, idx.astype(jnp.float32)
-            if scatter_axis and din_ok:
-                dW_l = jnp.zeros((w_l.shape[0], dWc.shape[1]), w_l.dtype)
-                dW_l = dW_l.at[idx].add(dWc.astype(w_l.dtype))
-            else:
-                dW_l = jnp.zeros_like(w_l).at[idx].add(dWc.astype(w_l.dtype))
-            return dx, dW_l
-
-        rows_spec = P(None, (mp, scatter_axis) if (scatter_axis and din_ok) else mp)
-        if with_slot:
-            dx, rows, gidx = compat.shard_map(
-                body, mesh=mesh,
-                in_specs=(P(dp, None, None), P(dp, None, mp), P(None, mp), P()),
-                out_specs=(P(dp, None, mp), rows_spec, P(None)))(
-                    g, x, w, key)
-            slot_ct = CompactGrad(rows=rows.astype(jnp.float32), idx=gidx)
-            return dx, jnp.zeros_like(w), None, slot_ct
-        dx, dw = compat.shard_map(
-            body, mesh=mesh,
-            in_specs=(P(dp, None, None), P(dp, None, mp), P(None, mp), P()),
-            out_specs=(P(dp, None, mp), rows_spec))(
-                g, x, w, key)
-        return dx, dw, None, None
-
-    fwd_fn.defvjp(fwd, bwd)
-    return fwd_fn
-
-
-def tp_exact_linear(x, w, ctx, key=None):
+def tp_exact_linear(x, w, ctx, key=None, *, b=None):
     """Explicit Megatron column-parallel linear with EXACT backward.
 
     Used for sites excluded from sketching (e.g. the vocabulary head, which
-    the paper keeps exact): same shard_map structure as the sketched path so
-    the dW einsum never hits the pjit sharding conflict that replicates
-    full fp32 weight gradients (EXPERIMENTS.md §Perf It.3).
+    the paper keeps exact): same shard_map structure as the sketched plans so
+    the dW einsum never hits the pjit sharding conflict that replicates full
+    fp32 weight gradients (EXPERIMENTS.md §Perf It.3).
     """
-    mesh = ctx.mesh
-    dp = tuple(ctx.data_axes)
-    mp = ctx.model_axes[0]
-    fn = _build_exact(mesh, dp, mp, w.shape)
-    return fn(x, w)
-
-
-def _build_exact(mesh, dp, mp, w_shape):
-    scatter_axis = dp[-1] if dp else None
-    n_scatter = mesh.shape[scatter_axis] if scatter_axis else 1
-    psum_rest = tuple(a for a in dp[:-1])
-    din_ok = w_shape[1] % n_scatter == 0
-
-    @partial(jax.custom_vjp, nondiff_argnums=())
-    def fwd_fn(x, w):
-        def body(x_l, w_l):
-            return jnp.einsum("bsi,oi->bso", x_l, w_l)
-
-        return compat.shard_map(body, mesh=mesh,
-                             in_specs=(P(dp, None, None), P(mp, None)),
-                             out_specs=P(dp, None, mp))(x, w)
-
-    def fwd(x, w):
-        return fwd_fn(x, w), (x, w)
-
-    def bwd(res, g):
-        x, w = res
-
-        def body(g_l, x_l, w_l):
-            G2d = g_l.reshape(-1, g_l.shape[-1])
-            X2d = x_l.reshape(-1, x_l.shape[-1])
-            dx = (G2d @ w_l).reshape(x_l.shape)
-            dx = jax.lax.psum(dx, mp)
-            dW = jax.lax.dot_general(G2d.astype(jnp.float32), X2d.astype(jnp.float32),
-                                     (((0,), (0,)), ((), ())))
-            if psum_rest:
-                dW = jax.lax.psum(dW, psum_rest)
-            if scatter_axis and din_ok:
-                dW = jax.lax.psum_scatter(dW, scatter_axis, scatter_dimension=1,
-                                          tiled=True)
-            elif scatter_axis:
-                dW = jax.lax.psum(dW, scatter_axis)
-            return dx, dW.astype(w_l.dtype)
-
-        out_w_spec = P(mp, scatter_axis if (scatter_axis and din_ok) else None)
-        dx, dw = compat.shard_map(body, mesh=mesh,
-                               in_specs=(P(dp, None, mp), P(dp, None, None), P(mp, None)),
-                               out_specs=(P(dp, None, None), out_w_spec),
-                               )(g, x, w)
-        return dx, dw
-
-    fwd_fn.defvjp(fwd, bwd)
-    return fwd_fn
+    spec = site.SiteSpec(role="tp_exact", cfg=None, plan=_plan(ctx, "tp_exact"),
+                         has_bias=b is not None, d_out=w.shape[0],
+                         d_in=w.shape[1])
+    return site.sketched_site(spec, x, w, b, key)

@@ -17,7 +17,9 @@ unbiased estimator, resolved through the open registry in
 Third-party estimators (RAD / BASIS-style families) register additional
 backends via ``repro.api.register_estimator`` — this module never needs to
 change for them. Estimators own only the backward *math*; the custom_vjp
-plumbing, residuals, and CompactGrad slot handling below are shared.
+plumbing, residuals, and CompactGrad slot handling live in the one
+sketched-site spine (``core/site.py``) and are shared across the local and
+tensor-parallel execution plans.
 
 The RNG key rides through the forward as a regular argument and is consumed
 only in the backward (stored in residuals), so a jitted ``grad`` of a model
@@ -33,7 +35,6 @@ core/compact_grad.py.
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Optional
 
 import jax
@@ -46,11 +47,6 @@ from repro.core.sketching import (COLUMN_METHODS, SketchConfig, column_plan,
                                   effective_cfg, sketch_dense)
 
 __all__ = ["sketched_linear", "linear"]
-
-
-def _flatten_leading(x):
-    lead = x.shape[:-1]
-    return x.reshape((-1, x.shape[-1])), lead
 
 
 # ---------------------------------------------------------------------------
@@ -206,66 +202,8 @@ estimators.register_estimator(_PallasEstimator())
 
 
 # ---------------------------------------------------------------------------
-# custom_vjp plumbing (shared by every registered estimator).
+# Spine instantiation: the shared custom_vjp plumbing lives in core/site.py.
 # ---------------------------------------------------------------------------
-
-
-@partial(jax.custom_vjp, nondiff_argnums=(0,))
-def _sketched_linear(cfg: SketchConfig, x, w, b, key, slot, pslot):
-    y = jnp.einsum("...i,oi->...o", x, w)
-    if b is not None:
-        y = y + b
-    return y
-
-
-def _fwd(cfg: SketchConfig, x, w, b, key, slot, pslot):
-    y = _sketched_linear(cfg, x, w, b, key, slot, pslot)
-    return y, (x, w, key, b is not None, slot, pslot is not None)
-
-
-def _bwd(cfg: SketchConfig, res, g):
-    x, w, key, has_b, slot, want_probe = res
-    G2d, _ = _flatten_leading(g)
-    X2d, _ = _flatten_leading(x)
-    n = G2d.shape[-1]
-
-    est = estimators.get_estimator("mask" if cfg.is_noop else cfg.backend)
-    if want_probe:
-        # telemetry: the optional estimator hook may fill out.probe; the
-        # probe rides the probe slot's cotangent out of jax.grad
-        out = est.apply_with_probe(cfg, G2d, X2d, w, key, has_b=has_b)
-    else:
-        out = est.apply(cfg, G2d, X2d, w, key, has_b=has_b)
-    probe_ct = None
-    if want_probe:
-        from repro.telemetry.probes import PROBE_WIDTH
-
-        probe_ct = (out.probe if out.probe is not None
-                    else jnp.zeros((PROBE_WIDTH,), jnp.float32))
-    dX = out.dx.reshape(x.shape)
-    if not out.is_compact:
-        return _pack(dX, out.dw.astype(w.dtype), out.db, has_b, slot, probe_ct)
-
-    db = None
-    if has_b:
-        db = jnp.zeros((n,), g.dtype).at[out.cols].add(out.db_c.astype(g.dtype))
-    if slot is not None:
-        # compact-gradient mode: rows/indices ride the slot cotangent,
-        # the dense w cotangent is structural zeros (folded by XLA)
-        slot_ct = CompactGrad(rows=out.rows.astype(jnp.float32),
-                              idx=out.cols.astype(jnp.float32))
-        return (dX, jnp.zeros_like(w), db if has_b else None, None, slot_ct,
-                probe_ct)
-    dW = jnp.zeros_like(w).at[out.cols].add(out.rows.astype(w.dtype))
-    return _pack(dX, dW, db, has_b, slot, probe_ct)
-
-
-def _pack(dx, dw, db, has_b, slot, probe_ct):
-    # slot primal is all-zeros, so returning it doubles as its zero cotangent
-    return (dx, dw, db if has_b else None, None, slot, probe_ct)
-
-
-_sketched_linear.defvjp(_fwd, _bwd)
 
 
 def sketched_linear(x, w, b=None, *, key=None, cfg: Optional[SketchConfig] = None,
@@ -273,15 +211,20 @@ def sketched_linear(x, w, b=None, *, key=None, cfg: Optional[SketchConfig] = Non
                     probe_slot=None):
     """Public entry point. ``cfg=None`` (or noop cfg / no key) = exact linear.
 
+    This is the *local* :class:`~repro.core.site.ExecutionPlan` instantiation
+    of the one sketched-site spine (``core/site.py``) — the custom_vjp
+    plumbing, residuals and slot cotangents are owned there and shared with
+    the TP plans.
+
     ``probe_slot`` (a zero ``[PROBE_WIDTH]`` f32 leaf, normally threaded in
     by ``nn.common.dense`` from the params tree) switches the backward to
     the estimator's ``apply_with_probe`` hook and routes the per-site probe
     vector out through the slot's cotangent — see repro/telemetry/probes.py.
     """
-    if cfg is None or cfg.is_noop or key is None:
-        y = jnp.einsum("...i,oi->...o", x, w)
-        return y + b if b is not None else y
-    return _sketched_linear(cfg, x, w, b, key, grad_slot, probe_slot)
+    from repro.core import site
+
+    return site.sketched_site(site.local_spec(cfg), x, w, b, key,
+                              grad_slot, probe_slot)
 
 
 # Alias used across the nn substrate.

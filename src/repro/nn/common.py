@@ -69,6 +69,19 @@ class Ctx:
             return None
         return jax.random.fold_in(self.key, _ROLE_IDS[role])
 
+    def site_spec(self, role: str, cfg, w, *, has_bias: bool = False,
+                  x_ndim: int = 3):
+        """Resolve one linear site against this context's execution
+        environment (memoized in core/site.py — the ONE dispatch shared with
+        the gslot/pslot builders)."""
+        from repro.core.site import resolve_site
+
+        return resolve_site(role, cfg, d_out=w.shape[-2], d_in=w.shape[-1],
+                            has_bias=has_bias, x_ndim=x_ndim, mesh=self.mesh,
+                            data_axes=tuple(self.data_axes),
+                            model_axes=tuple(self.model_axes),
+                            tp_sketch=self.tp_sketch)
+
     def cfg_for(self, role: str):
         if self.policy is None:
             return None
@@ -97,54 +110,35 @@ def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32, *, scale: float | 
     return p
 
 
-# TP role sets and the compact-capability check live in core.compact_grad
-# (shared with the grad-slot builder, which must mirror this dispatch
-# exactly — including for estimators registered after import).
-from repro.core.compact_grad import TP_OUT_ROLES as _TP_OUT_ROLES  # noqa: E402
-from repro.core.compact_grad import TP_ROW_ROLES as _TP_ROW_ROLES  # noqa: E402
-from repro.core.compact_grad import _compact_capable  # noqa: E402
-
-
 def dense(params, x, ctx: Ctx, role: str):
     """Linear site; sketched iff the policy covers ``role``.
 
-    Under ``ctx.tp_sketch``, sites whose d_out is TP-sharded use the
-    shard_map compact path with compressed gradient collectives; everything
-    else keeps the configured (mask) backend. A ``"gslot"`` entry in
-    ``params`` (compact-gradient mode, see core/compact_grad.py) is threaded
-    into the backward so the weight gradient comes out compact; a ``"pslot"``
-    entry (telemetry, see repro/telemetry/probes.py) routes the site's probe
-    vector out through its cotangent. Sites taking the TP shard_map path
-    ignore the probe slot (its cotangent stays zero).
+    Thin resolver over the one sketched-site spine (``core/site.py``): the
+    site is resolved once to a declarative :class:`~repro.core.site.SiteSpec`
+    (local / tp_column / tp_row execution plan, TP-incompatible sites falling
+    back to the dense-mask estimator) and executed by the spine. The
+    CompactGrad and probe slot builders consume the *same* resolved specs, so
+    a ``"gslot"`` entry in ``params`` (compact-gradient mode, see
+    core/compact_grad.py) is present exactly when the backward emits compact
+    rows, and a ``"pslot"`` entry (telemetry, see repro/telemetry/probes.py)
+    exactly when the site can probe — including on the TP shard_map plans.
     """
     cfg = ctx.cfg_for(role)
     slot = params.get("gslot")
     pslot = params.get("pslot")
-    if (cfg is not None and role in _TP_OUT_ROLES and x.ndim == 3
-            and params.get("b") is None and ctx.key is not None):
-        from repro.core.sharded_sketch import tp_applicable, tp_sketched_linear
+    key = ctx.site_key(role)
+    w = params["w"]
+    b = params.get("b")
+    if cfg is None or key is None:
+        return linear(x, w, b, key=key, cfg=cfg, grad_slot=slot,
+                      probe_slot=pslot)
+    spec = ctx.site_spec(role, cfg, w, has_bias=b is not None, x_ndim=x.ndim)
+    if spec.plan.kind == "local":
+        return linear(x, w, b, key=key, cfg=spec.cfg, grad_slot=slot,
+                      probe_slot=pslot)
+    from repro.core.site import sketched_site
 
-        if tp_applicable(ctx, cfg, params["w"].shape[0]):
-            return tp_sketched_linear(x, params["w"], ctx, cfg, ctx.site_key(role),
-                                      slot=slot)
-    if (cfg is not None and role in _TP_ROW_ROLES and x.ndim == 3
-            and params.get("b") is None and ctx.key is not None):
-        from repro.core.sharded_sketch import tp_row_applicable, tp_row_sketched_linear
-
-        if tp_row_applicable(ctx, cfg, params["w"].shape[1]):
-            return tp_row_sketched_linear(x, params["w"], ctx, cfg, ctx.site_key(role),
-                                          slot=slot)
-    if (cfg is not None and ctx.tp_sketch and _compact_capable(cfg.backend)):
-        # TP-incompatible site (e.g. kv heads < model axis): fall back to the
-        # dense-mask estimator rather than the scatter-hostile compact path
-        # (applies to ANY registered compact-form estimator — the grad-slot
-        # builder emits no slot for these sites, so the backward must not
-        # produce compact rows here).
-        import dataclasses as _dc
-
-        cfg = _dc.replace(cfg, backend="mask", block=0)
-    return linear(x, params["w"], params.get("b"), key=ctx.site_key(role), cfg=cfg,
-                  grad_slot=slot, probe_slot=pslot)
+    return sketched_site(spec, x, w, b, key, slot, pslot)
 
 
 def rmsnorm_init(d: int, dtype=jnp.float32):

@@ -37,8 +37,9 @@ class TelemetryConfig:
 
     Attributes:
       probes: enable the in-graph per-site probes (adds probe slots to the
-        params tree; requires ``accum == 1``; sites routed through the
-        TP-local shard_map sketch do not probe — see docs/telemetry.md).
+        params tree; requires ``accum == 1``; sites on the TP shard_map
+        plans probe in-body, psum'ed over the model axis — see
+        docs/telemetry.md).
       per_site: include the per-site probe vectors in the step metrics
         (``metrics["probe_sites"]``) in addition to the step-level summary
         scalars (``probe_gsq`` / ``probe_var`` / ``probe_snr`` /

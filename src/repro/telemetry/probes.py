@@ -41,8 +41,10 @@ sketched backward *defines* its cotangent to be the probe vector. After
 gradient tree and :func:`summarize` reduces them to step-level scalars.
 
 Coverage: column-family methods (``per_column`` + score methods) on any
-registered estimator implementing ``apply_with_probe``; sites routed through
-the TP-local shard_map sketch, non-column methods (``per_element`` /
+registered estimator implementing ``apply_with_probe``, plus every site
+routed through a TP shard_map plan (the spine computes the probe inside the
+backward body from the estimator's plan marginals and psums it over the
+model axis — see ``core/site.py``); non-column methods (``per_element`` /
 ``per_sample`` / ``rcs``) and multi-use shared weights report zeros.
 """
 from __future__ import annotations
@@ -53,7 +55,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import estimators
-from repro.core.compact_grad import _site_role
 from repro.core.sketching import COLUMN_METHODS
 
 __all__ = ["PROBE_WIDTH", "PROBE_FIELDS", "probe_from_rows", "probe_capable",
@@ -100,12 +101,18 @@ def probe_capable(cfg) -> bool:
 # ---------------------------------------------------------------------------
 
 
-def with_probe_slots(params, policy, *, n_layers: int = 1):
+def with_probe_slots(params, policy, *, n_layers: int = 1, mesh=None,
+                     data_axes=("data",), model_axes=("model",),
+                     tp_sketch: bool = False):
     """Merge zero probe slots into ``params`` at every probe-capable site.
 
-    Mirrors ``core.compact_grad.with_grad_slots``: sites are matched by path
-    (attn/cross q|k|v|o, mlp in|gate|out) with the layer-0 policy config, so
-    only ``location="all"`` policies get slots (scan-stacked models cannot
+    Mirrors ``core.compact_grad.with_grad_slots`` — both consume the same
+    resolved :class:`~repro.core.site.SiteSpec` as ``nn.common.dense``
+    (``core.site.resolve_tree_site``), so a slot appears exactly when the
+    site's resolved execution plan can emit a probe: via the estimator's
+    ``apply_with_probe`` hook on local plans, via the in-body plan marginals
+    on the TP shard_map plans (psum'ed over the model axis). Only
+    ``location="all"`` policies get slots (scan-stacked models cannot
     distinguish layers statically). Unlike gradient slots, multi-use shared
     weights MAY carry a probe slot — per-use probe cotangents sum, and probe
     vectors are additive statistics — but we mirror the gslot exclusion for
@@ -113,17 +120,18 @@ def with_probe_slots(params, policy, *, n_layers: int = 1):
     """
     if policy is None or policy.location != "all":
         return params
+    from repro.core.site import resolve_tree_site
 
     def walk(node, path):
         if isinstance(node, dict):
             out = {k: walk(v, path + (k,)) for k, v in node.items()}
-            role = None if "shared" in path else _site_role(path)
-            w = node.get("w")
-            if role is not None and w is not None and getattr(w, "ndim", 0) >= 2:
-                cfg = policy.config_for(role, 0, n_layers)
-                if probe_capable(cfg):
-                    lead = w.shape[:-2]
-                    out["pslot"] = jnp.zeros(lead + (PROBE_WIDTH,), jnp.float32)
+            spec = resolve_tree_site(path, node, policy, n_layers=n_layers,
+                                     mesh=mesh, data_axes=data_axes,
+                                     model_axes=model_axes,
+                                     tp_sketch=tp_sketch)
+            if spec is not None and spec.probe_capable:
+                lead = node["w"].shape[:-2]
+                out["pslot"] = jnp.zeros(lead + (PROBE_WIDTH,), jnp.float32)
             return out
         if isinstance(node, (list, tuple)):
             return type(node)(walk(v, path) for v in node)

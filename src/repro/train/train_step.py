@@ -72,9 +72,9 @@ def make_train_step(cfg: ArchConfig, opt: Optimizer, policy: Optional[SketchPoli
     metrics gain the telemetry summary (``probe_gsq`` / ``probe_var`` /
     ``probe_snr`` / ``probe_align`` and, optionally, per-site vectors under
     ``probe_sites``) as a side output of the same backward — no second
-    backward, no extra pass over G. Sites routed through the TP-local
-    shard_map sketch do not probe, so probes are skipped entirely under
-    ``tp_sketch`` (see docs/telemetry.md).
+    backward, no extra pass over G. Sites routed through a TP shard_map plan
+    probe too: the spine computes the per-shard probe inside the backward
+    body and psums it over the model axis (see docs/telemetry.md).
     """
     if execution is None:
         execution = ExecutionConfig(mesh=mesh, act_sharding=act_sharding,
@@ -88,7 +88,7 @@ def make_train_step(cfg: ArchConfig, opt: Optimizer, policy: Optional[SketchPoli
     compact_grads = ex.compact_grads
     tel = ex.telemetry
     telemetry_on = (tel is not None and tel.probes and policy is not None
-                    and not ex.tp_sketch and accum == 1)
+                    and accum == 1)
 
     def ctx_for(key):
         return ex.make_ctx(policy=policy, key=key)
@@ -115,8 +115,10 @@ def make_train_step(cfg: ArchConfig, opt: Optimizer, policy: Optional[SketchPoli
             if telemetry_on:
                 from repro.telemetry import probes as tprobes
 
-                params_in = tprobes.with_probe_slots(params_in, policy,
-                                                     n_layers=cfg.n_layers)
+                params_in = tprobes.with_probe_slots(
+                    params_in, policy, n_layers=cfg.n_layers, mesh=ex.mesh,
+                    data_axes=ex.data_axes, model_axes=ex.model_axes,
+                    tp_sketch=ex.tp_sketch)
             loss, metrics, grads = one_micro(params_in, batch, key)
             if telemetry_on:
                 grads, probe_vecs = tprobes.collect_probes(grads)

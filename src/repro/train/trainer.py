@@ -68,17 +68,26 @@ def _host_metrics(metrics, *, scalars_only: bool = False) -> dict:
     return out
 
 
-def _policy_can_probe(policy) -> bool:
+def _policy_can_probe(policy, execution=None) -> bool:
     """Does any site of ``policy`` emit telemetry probes? (column-family
-    method + an estimator implementing the probe hook — see
-    repro/telemetry/probes.py)."""
+    method + an estimator implementing the probe hook, or — under
+    ``tp_sketch`` — a TP-shardable estimator whose shard_map plans probe
+    in-body; see repro/telemetry/probes.py and core/site.py)."""
+    from repro.core.site import tp_estimator
     from repro.telemetry.probes import probe_capable
 
     if policy is None or policy.location != "all":
         return False
-    if probe_capable(policy.base):
-        return True
-    return any(probe_capable(cfg) for _, cfg in policy.overrides)
+    tp = execution is not None and execution.tp_sketch
+
+    def can(cfg):
+        if probe_capable(cfg):
+            return True
+        # TP plans probe from the in-body plan marginals even when the
+        # estimator has no apply_with_probe hook
+        return tp and tp_estimator(cfg) is not None
+
+    return can(policy.base) or any(can(cfg) for _, cfg in policy.overrides)
 
 
 def train_loop(runtime: Runtime, cfg: ArchConfig, opt: Optimizer,
@@ -119,14 +128,14 @@ def train_loop(runtime: Runtime, cfg: ArchConfig, opt: Optimizer,
         tel = (TelemetryConfig(per_site=False) if tel is None
                else dataclasses.replace(tel, probes=True))
         runtime = runtime.replace(execution=runtime.execution.replace(telemetry=tel))
-    if schedule.is_adaptive and (runtime.execution.tp_sketch
-                                 or not _policy_can_probe(runtime.policy)):
+    if schedule.is_adaptive and not _policy_can_probe(runtime.policy,
+                                                      runtime.execution):
         warnings.warn(
             "adaptive BudgetSchedule cannot measure gradient SNR here "
-            "(tp_sketch, exact/location-restricted policy, or no "
-            "probe-capable site: column-family method + an estimator with "
-            "the probe hook) — the controller will hold its first bucket; "
-            "see docs/telemetry.md", stacklevel=2)
+            "(exact/location-restricted policy, or no probe-capable site: "
+            "column-family method + an estimator with the probe hook or a "
+            "TP-shardable plan) — the controller will hold its first "
+            "bucket; see docs/telemetry.md", stacklevel=2)
     key = compat.prng_key(tcfg.seed)
     if state is None:
         state = init_state(jax.random.fold_in(key, 0), cfg, opt)

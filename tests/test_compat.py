@@ -55,6 +55,40 @@ def test_no_version_gated_jax_symbols_outside_compat():
         "version-gated JAX symbols outside repro/compat.py:\n" + "\n".join(offenders))
 
 
+def test_no_custom_vjp_spines_outside_core_site():
+    """Exactly ONE sketched-site ``custom_vjp`` spine exists: the local and
+    TP execution plans all route through ``core/site.py``. Any new
+    ``jax.custom_vjp`` in ``src/`` is a second spine in the making — the
+    exact duplication (sketched_linear + the three sharded_sketch builds)
+    this repo just collapsed — unless explicitly allowlisted below.
+
+    Allowlist: core/site.py (THE spine); launch/pipeline.py (the
+    pipeline-parallel stage-boundary vjp — not a sketched site). The
+    serve/ and kernels/ trees currently define none; a Pallas kernel or
+    decode path that genuinely needs its own vjp must be added here
+    explicitly, with a comment.
+    """
+    allow = {"core/site.py", "launch/pipeline.py"}
+    pat = re.compile(r"jax\.custom_vjp|custom_vjp\s*\(")
+    offenders = []
+    for dirpath, _, files in os.walk(SRC):
+        for fname in files:
+            if not fname.endswith(".py"):
+                continue
+            path = os.path.join(dirpath, fname)
+            rel = os.path.relpath(path, SRC).replace(os.sep, "/")
+            if rel in allow:
+                continue
+            with open(path) as f:
+                for lineno, line in enumerate(f, 1):
+                    if pat.search(line):
+                        offenders.append(f"{rel}:{lineno}: {line.strip()}")
+    assert not offenders, (
+        "new custom_vjp spine outside core/site.py — route the site through "
+        "the one spine (SiteSpec/ExecutionPlan) or extend the allowlist "
+        "explicitly:\n" + "\n".join(offenders))
+
+
 def test_no_ctx_construction_outside_api_and_nn():
     """The Runtime front door owns Ctx construction: outside ``repro/nn``
     (where Ctx lives and re-derives per-layer children) and ``repro/api``

@@ -342,6 +342,154 @@ def test_registry_estimator_routes_through_tp_sharded_path(mesh24):
 
 
 # ---------------------------------------------------------------------------
+# TP probes + bias streams + adaptive-under-TP (the one-spine refactor):
+# telemetry and compact gradients are properties of every sketched site,
+# including the shard_map plans.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kind", ["column", "column_block", "row"])
+def test_tp_probe_unbiased_vs_bruteforce(mesh24, kind):
+    """MC check: the per-shard probe computed inside the shard_map backward
+    body and psum'ed over the model axis is unbiased — its ``var`` entry
+    matches the brute-force per-site VJP variance E‖dŴ − dW‖² and its
+    ``g_sq`` entry matches ‖dW‖², on both the column- and row-parallel
+    plans (ROADMAP open item: "probe the TP-local sharded sketch")."""
+    from repro.core.sharded_sketch import (tp_row_sketched_linear,
+                                           tp_sketched_linear)
+    from repro.nn.common import Ctx
+    from repro.telemetry.probes import PROBE_WIDTH
+
+    ctx = Ctx(mesh=mesh24, data_axes=("data",), model_axes=("model",),
+              tp_sketch=True)
+    block = 4 if kind == "column_block" else 0
+    cfg = SketchConfig(method="l1", budget=0.5, backend="compact", block=block)
+    B, S, din, n = 2, 8, 16, 32
+    x = jax.random.normal(compat.prng_key(0), (B, S, din))
+    w = jax.random.normal(compat.prng_key(1), (n, din)) / 4
+    fn = tp_row_sketched_linear if kind == "row" else tp_sketched_linear
+    g_out = jax.random.normal(compat.prng_key(2), (B, S, n))
+    pslot0 = jnp.zeros((PROBE_WIDTH,), jnp.float32)
+
+    def loss(w_, pslot, key):
+        return jnp.sum(fn(x, w_, ctx, cfg, key, pslot=pslot) * g_out)
+
+    @jax.jit
+    def one(key):
+        dw, probe = jax.grad(loss, argnums=(0, 1))(w, pslot0, key)
+        return dw, probe
+
+    keys = jax.random.split(compat.prng_key(7), 384)
+    dws, probes = jax.lax.map(one, keys, batch_size=48)
+
+    G2d = np.asarray(g_out).reshape(-1, n)
+    X2d = np.asarray(x).reshape(-1, din)
+    dw_exact = G2d.T @ X2d
+    var_mc = float(np.mean(np.sum(np.square(np.asarray(dws) - dw_exact[None]),
+                                  axis=(1, 2))))
+    probe_mean = np.asarray(probes).mean(0)
+    assert probe_mean[3] == pytest.approx(1.0)  # ok flag, exactly once
+    assert probe_mean[1] == pytest.approx(var_mc, rel=0.15), \
+        (kind, probe_mean, var_mc)
+    assert probe_mean[0] == pytest.approx(float(np.sum(dw_exact ** 2)),
+                                          rel=0.15)
+
+
+@pytest.mark.parametrize("role,kind", [("attn_q", "tp_column"),
+                                       ("mlp_out", "tp_row")])
+def test_tp_bias_sites_route_sharded_and_grads_unbiased(mesh24, role, kind):
+    """Satellite: ``dense`` used to silently skip the shard_map plans when
+    ``params["b"]`` was present. Now bias sites resolve to the TP plans, the
+    forward stays exact (bias added inside the body), and dw AND db come
+    out unbiased — db folded into the same kept-column stream."""
+    import dataclasses
+
+    from repro.nn.common import Ctx, dense
+
+    cfg = SketchConfig(method="l1", budget=0.5, backend="compact")
+    pol = SketchPolicy(base=cfg)
+    ctx = Ctx(policy=pol, key=compat.prng_key(3), mesh=mesh24,
+              data_axes=("data",), model_axes=("model",), tp_sketch=True)
+    B, S, din, n = 2, 8, 16, 32
+    x = jax.random.normal(compat.prng_key(0), (B, S, din))
+    params = {"w": jax.random.normal(compat.prng_key(1), (n, din)) / 4,
+              "b": jax.random.normal(compat.prng_key(2), (n,)) / 4}
+
+    spec = ctx.site_spec(role, cfg, params["w"], has_bias=True)
+    assert spec.plan.kind == kind and spec.has_bias
+    assert spec.compact_rows is not None  # bias TP sites slot too
+
+    # forward exact incl. the bias
+    y = dense(params, x, ctx, role)
+    np.testing.assert_allclose(
+        np.asarray(y),
+        np.asarray(jnp.einsum("bsi,oi->bso", x, params["w"]) + params["b"]),
+        rtol=1e-5, atol=1e-5)
+
+    def loss(p, key):
+        c = dataclasses.replace(ctx, key=key)
+        return jnp.sum(jnp.sin(dense(p, x, c, role)))
+
+    exact = jax.grad(lambda p: jnp.sum(jnp.sin(
+        jnp.einsum("bsi,oi->bso", x, p["w"]) + p["b"])))(params)
+    keys = jax.random.split(compat.prng_key(5), 480)
+    gs = jax.lax.map(lambda k: jax.grad(loss)(params, k), keys, batch_size=48)
+    for name in ("w", "b"):
+        got, want = gs[name], np.asarray(exact[name])
+        mean, std = np.asarray(got.mean(0)), np.asarray(got.std(0))
+        scale = np.abs(want).max() + 1e-9
+        det = std < 1e-5 * scale
+        np.testing.assert_allclose(mean[det], want[det], rtol=1e-3,
+                                   atol=1e-3 * scale)
+        if det.all():
+            continue
+        se = std[~det] / np.sqrt(len(keys))
+        t = np.abs(mean[~det] - want[~det]) / se
+        assert np.mean(t) < 1.8, (name, np.mean(t))
+
+
+def test_adaptive_schedule_under_tp_sketch(mesh24):
+    """The ROADMAP north-star configuration: ``BudgetSchedule.adaptive``
+    under ``tp_sketch`` must measure SNR from the TP probes (no "can never
+    see a probe" warning), run exactly one compiled step per bucket (zero
+    retraces), and actually switch buckets."""
+    import math
+    import warnings
+
+    from repro.api import (BudgetSchedule, ExecutionConfig, Runtime)
+    from repro.api import runtime as runtime_mod
+    from repro.data.synthetic import LMStream
+    from repro.optim import sgd
+    from repro.train.trainer import TrainerConfig
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    runtime_mod._cache_clear()
+    cfg = _arch()
+    sched = BudgetSchedule.adaptive(0.05, budgets=(1.0, 0.5, 0.2), window=2)
+    pol = SketchPolicy(base=SketchConfig(method="l1", budget=0.5,
+                                         backend="compact"))
+    act = NamedSharding(mesh24, P(("data",), None, None))
+    rt = Runtime(policy=pol, schedule=sched,
+                 execution=ExecutionConfig(mesh=mesh24, act_sharding=act,
+                                           tp_sketch=True))
+    data = LMStream(vocab=cfg.vocab, seed=0).batches(8, 16)
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        _, hist = rt.train(cfg, sgd(0.1), data,
+                           TrainerConfig(steps=8, log_every=1),
+                           on_metrics=lambda m: None)
+    assert not any("cannot measure gradient SNR" in str(w.message)
+                   for w in rec), "TP probes must feed the adaptive controller"
+    assert len(runtime_mod._STEP_BUILDS) == len(sched.buckets()), \
+        "adaptive under tp_sketch must only ever run pre-compiled buckets"
+    assert all(m["budget"] in sched.buckets() for m in hist)
+    assert len(set(m["budget"] for m in hist)) >= 2, \
+        "the controller must actually switch buckets under TP"
+    assert all(math.isfinite(m["probe_snr"]) for m in hist
+               if "probe_snr" in m)
+
+
+# ---------------------------------------------------------------------------
 # Subprocess isolation path (slow, opt-in with -m slow): a fresh interpreter
 # with its own XLA_FLAGS, exercising the dry-run machinery end to end.
 # ---------------------------------------------------------------------------

@@ -134,22 +134,26 @@ def test_probes_compose_with_compact_grads(key):
     assert float(m1["probe_var"]) > 0
 
 
-def test_no_probes_under_tp_sketch_or_exact():
-    """Probes are skipped where they cannot be computed: under tp_sketch
-    (TP shard_map sites do not probe) and for exact (no-policy) steps."""
+def test_probes_survive_tp_sketch_and_skip_exact():
+    """Since the one-spine refactor (core/site.py), tp_sketch no longer
+    disables telemetry: TP-incompatible sites fall back to the probing mask
+    estimator and TP shard_map plans probe in-body, so the probe summary is
+    present and finite. Exact (no-policy) steps still emit nothing."""
     from repro.train.train_step import make_train_step
 
     pol = SketchPolicy(base=SketchConfig(method="l1", budget=0.3,
                                          backend="compact"))
     opt = sgd(0.1)
     batch = next(iter(LMStream(vocab=TINY.vocab, seed=0).batches(4, 32)))
+    # tp_sketch without a mesh: every site falls back to the mask estimator,
+    # which probes on the local plan — telemetry must flow
     ex = ExecutionConfig(tp_sketch=True, telemetry=TelemetryConfig())
     step = jax.jit(make_train_step(TINY, opt, pol, execution=ex),
                    donate_argnums=())
     rt = Runtime(policy=pol)
     state = rt.init_state(jax.random.key(0), TINY, opt)
     _, m = step(state, batch, jax.random.key(1))
-    assert "probe_snr" not in m
+    assert float(m["probe_var"]) > 0 and math.isfinite(float(m["probe_snr"]))
     rt_exact = Runtime(execution=ExecutionConfig(telemetry=TelemetryConfig()))
     _, m2 = rt_exact.train_step(TINY, opt, donate=False)(state, batch,
                                                          jax.random.key(1))
@@ -230,10 +234,11 @@ def test_adaptive_schedule_validation():
 
 
 def test_adaptive_warns_when_it_cannot_measure():
-    """An adaptive schedule that can never see a probe (tp_sketch, exact
-    policy, non-column method, location-restricted policy) must say so
-    loudly instead of silently running a constant budget; adaptive with
-    accumulation is rejected up front."""
+    """An adaptive schedule that can never see a probe (exact policy,
+    non-column method, location-restricted policy) must say so loudly
+    instead of silently running a constant budget; adaptive with
+    accumulation is rejected up front. Since the one-spine refactor,
+    tp_sketch is NOT such a case — TP plans probe in-body."""
     import warnings
 
     from repro.train.trainer import TrainerConfig
@@ -248,8 +253,10 @@ def test_adaptive_warns_when_it_cannot_measure():
 
     sched = BudgetSchedule.adaptive(1.0, budgets=(1.0, 0.5))
     pol = SketchPolicy(base=SketchConfig(method="l1", budget=0.3))
-    assert runs_with_warning(Runtime(policy=pol, schedule=sched,
-                                     execution=ExecutionConfig(tp_sketch=True)))
+    # tp_sketch no longer blinds the controller: sites fall back to the
+    # probing mask estimator (no mesh) or probe inside the TP plans
+    assert not runs_with_warning(Runtime(policy=pol, schedule=sched,
+                                         execution=ExecutionConfig(tp_sketch=True)))
     # non-column method: no site is probe-capable
     assert runs_with_warning(Runtime(
         policy=SketchPolicy(base=SketchConfig(method="per_element", budget=0.3)),
