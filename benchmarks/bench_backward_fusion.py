@@ -32,6 +32,7 @@ import numpy as np
 
 from benchmarks.common import save_result
 from repro import compat
+from repro.analysis.invariants import g_reader_passes
 from repro.core import SketchConfig, SketchPolicy
 from repro.core.sketching import column_plan, effective_cfg
 
@@ -91,35 +92,6 @@ def _unfused_site_bwd(cfg, G2d, X2d, w, key):
     return dX, dW, db
 
 
-def _g_reader_ops(hlo_text: str, N: int, n: int) -> int:
-    """Number of instructions that read THE G entry parameter in the
-    optimized HLO. Each reader is at most one HBM pass over G (gathers of
-    kept columns read less), so the count upper-bounds the true pass count."""
-    import re
-
-    shape = re.escape(f"f32[{N},{n}]")
-    # only the ENTRY computation: nested fusion/call bodies re-declare their
-    # operands as parameters and would double count
-    entry = hlo_text.split("\nENTRY ", 1)[-1]
-    entry = entry.split("\n}", 1)[0]
-    g_syms = set()
-    for m in re.finditer(rf"(%\S+)\s*=\s*{shape}\S*\s+parameter\(", entry):
-        g_syms.add(m.group(1))
-    readers = 0
-    for line in entry.splitlines():
-        line = line.strip()
-        m = re.match(r"(?:ROOT\s+)?(%\S+)\s*=\s*\S+\s+(\S+)\((.*)", line)
-        if not m:
-            continue
-        sym, op, operands = m.groups()
-        if op in ("parameter", "copy", "bitcast", "get-tuple-element", "tuple"):
-            continue
-        if any(g + "," in operands or g + ")" in operands or g + " " in operands
-               for g in g_syms):
-            readers += 1
-    return readers
-
-
 def g_pass_accounting(budget: float, *, N=2048, n=1024, d=256, block=128) -> dict:
     """How many times does the backward stream the gradient matrix G from
     HBM? Counted as HLO instructions reading a G-shaped buffer in the
@@ -146,7 +118,7 @@ def g_pass_accounting(budget: float, *, N=2048, n=1024, d=256, block=128) -> dic
         ca = compiled.cost_analysis()
         if isinstance(ca, list):
             ca = ca[0]
-        return (_g_reader_ops(compiled.as_text(), N, n),
+        return (g_reader_passes(compiled.as_text(), N, n),
                 float(ca.get("bytes accessed", 0.0)))
 
     readers_fused, bytes_fused = stats(c_fused)

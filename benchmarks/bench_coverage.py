@@ -1,0 +1,60 @@
+"""Sketch-coverage sweep: escaped-FLOP fraction per architecture family.
+
+For one representative arch per family (dense / MoE / SSM-hybrid / RWKV),
+trace the smoke-size train cell's backward with
+:func:`repro.analysis.coverage.analyze_runtime`, record the fraction of
+backward matmul FLOPs that escape the sketched-site spine, and gate each
+report against ``src/repro/analysis/baseline.json``. The headline metric
+(``escaped_flop_frac``, worst case over the swept archs) ratchets in
+``BENCH_summary.json``: it may only go DOWN as the ROADMAP MoE/SSM gap
+closes — a new dense matmul off the spine pushes it up and fails the
+baseline gate outright.
+
+Pure abstract tracing (ShapeDtypeStructs end to end) — nothing executes, so
+quick and full mode are the same sweep.
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import save_result
+from repro.analysis.coverage import analyze_runtime, check_baseline
+from repro.api import ExecutionConfig, Runtime, SketchConfig, SketchPolicy
+from repro.configs.registry import smoke_config
+
+# one per family; the dense entry pins the zero baseline
+ARCHS = ("llama3_405b", "olmoe_1b_7b", "zamba2_7b", "rwkv6_3b")
+
+
+def run(quick: bool = True) -> dict:
+    policy = SketchPolicy(base=SketchConfig(method="l1", budget=0.1,
+                                            backend="compact", block=4))
+    rt = Runtime(policy=policy, execution=ExecutionConfig())
+    per_arch = {}
+    worst = 0.0
+    ok = True
+    for arch in ARCHS:
+        t0 = time.time()
+        rep = analyze_runtime(rt, smoke_config(arch))
+        gate = check_baseline(rep)
+        per_arch[arch] = {
+            **rep.summary(),
+            "baseline_ok": gate.ok,
+            "baseline_used": gate.used,
+            "trace_s": round(time.time() - t0, 2),
+        }
+        worst = max(worst, rep.escaped_flop_frac)
+        ok = ok and gate.ok
+        print(f"[coverage] {arch}: escaped_frac={rep.escaped_flop_frac:.4f} "
+              f"unresolved_frac={rep.unresolved_flop_frac:.4f} "
+              f"gate={'ok' if gate.ok else 'FAIL'}")
+
+    out = {"archs": per_arch, "escaped_flop_frac": worst, "baseline_ok": ok}
+    save_result("coverage", out)
+    if not ok:
+        raise RuntimeError("coverage baseline gate failed — see artifact")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -42,6 +42,10 @@ _KEY_METRICS = {
                  lambda d: ((_get(d, "adaptive", "total_bwd_flops")
                              / _get(d, "fixed", "total_bwd_flops"))
                             if _get(d, "fixed", "total_bwd_flops") else None)),
+    # worst-case escaped-FLOP fraction across the swept archs; ratchets
+    # DOWN as the MoE/SSM baseline.json waivers get retired
+    "coverage": ("escaped_flop_frac",
+                 lambda d: _get(d, "escaped_flop_frac")),
 }
 
 
@@ -142,7 +146,8 @@ def main():
     args = ap.parse_args()
     quick = not args.full
 
-    from benchmarks import (bench_adaptive, bench_block_granularity, bench_cost,
+    from benchmarks import (bench_adaptive, bench_block_granularity,
+                            bench_cost, bench_coverage,
                             bench_fig1a_correlation, bench_fig1b_mask_vs_sketch,
                             bench_fig2a_proxies, bench_fig2b_spectral,
                             bench_fig3_larger_archs, bench_fig4_location,
@@ -158,6 +163,7 @@ def main():
         "cost_backends": bench_cost.run,
         "block_granularity": bench_block_granularity.run,
         "adaptive": bench_adaptive.run,
+        "coverage": bench_coverage.run,
         "distributed": _run_distributed,
         "backward_fusion": _run_backward_fusion,
     }

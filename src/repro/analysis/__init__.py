@@ -1,0 +1,74 @@
+"""Static analysis for the sketched-backprop repo: AST lint + sketch coverage.
+
+Two layers, one subsystem (ISSUE 6):
+
+* :mod:`repro.analysis.lint` — an AST lint engine (``python -m
+  repro.analysis.lint src/``) whose rules replace the regex greps that used
+  to live in ``tests/test_compat.py``: import-resolving detection of
+  version-gated JAX symbols outside ``compat.py``, second ``custom_vjp``
+  spines outside ``core/site.py``, direct ``Ctx(...)`` construction outside
+  ``api``/``nn`` — plus JAX-specific hygiene rules (PRNG-key reuse,
+  host-sync inside jitted step functions, Python ``if`` on traced values).
+* :mod:`repro.analysis.coverage` — a jaxpr sketch-coverage analyzer that
+  traces a Runtime train cell's backward, attributes every ``dot_general``
+  to the sketched-site spine (``core/site.py``) or flags it as an escaped
+  dense matmul, and gates the result against the checked-in
+  ``baseline.json`` waiver set so new escapes fail while the known MoE/SSM
+  gap stays documented and machine-readable.
+* :mod:`repro.analysis.invariants` — the cross-cutting compiled-program
+  invariants (zero involuntary remats, G-reader passes <= 2, donation) that
+  used to live as per-test helpers.
+
+The lint layer is import-light (stdlib ``ast`` only — safe for <10 s CI
+gates); the coverage layer imports JAX lazily inside its functions.
+"""
+# Lazy exports (PEP 562): `python -m repro.analysis.lint` must not trigger
+# an eager sibling import of the submodule runpy is about to execute, and
+# importing the package stays as light as its lightest member.
+_EXPORTS = {
+    "Finding": "findings", "LintResult": "findings",
+    "format_findings": "findings",
+    "run_lint": "lint",
+    "Rule": "rules", "DEFAULT_RULES": "rules", "rule_ids": "rules",
+    "BaselineResult": "coverage", "CoverageReport": "coverage",
+    "SiteCoverage": "coverage", "analyze_loss": "coverage",
+    "analyze_runtime": "coverage", "check_baseline": "coverage",
+    "load_baseline": "coverage", "role_hint": "coverage",
+    "donated_input_bytes": "invariants", "g_reader_passes": "invariants",
+    "involuntary_remat_count": "invariants",
+}
+
+
+def __getattr__(name):
+    if name in _EXPORTS:
+        import importlib
+
+        mod = importlib.import_module(f"repro.analysis.{_EXPORTS[name]}")
+        return getattr(mod, name)
+    raise AttributeError(f"module 'repro.analysis' has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_EXPORTS))
+
+
+__all__ = [
+    "Finding",
+    "LintResult",
+    "Rule",
+    "DEFAULT_RULES",
+    "rule_ids",
+    "format_findings",
+    "run_lint",
+    "CoverageReport",
+    "SiteCoverage",
+    "BaselineResult",
+    "analyze_loss",
+    "analyze_runtime",
+    "role_hint",
+    "load_baseline",
+    "check_baseline",
+    "g_reader_passes",
+    "involuntary_remat_count",
+    "donated_input_bytes",
+]

@@ -1,0 +1,91 @@
+"""Cross-cutting compiled-program invariants, in one place.
+
+Three checks that used to live as per-test/per-bench helpers:
+
+* :func:`g_reader_passes` — HLO G-reader accounting (lifted from
+  ``benchmarks/bench_backward_fusion.py``, which now imports it from here):
+  the compact backward must stream the gradient matrix G from HBM at most
+  twice (score pass + fused dX/dW/db pass).
+* :func:`involuntary_remat_count` — compile a function while capturing the
+  process-level stderr (GSPMD logs ``[spmd] Involuntary full
+  rematerialization`` from C++, invisible to ``contextlib.redirect_stderr``)
+  and count the warnings. Production train cells must report zero.
+* :func:`donated_input_bytes` — bytes of donated (aliased) inputs in a
+  compiled executable; a train step compiled with ``donate_argnums`` must
+  alias its state or it silently doubles peak memory.
+"""
+from __future__ import annotations
+
+import os
+import re
+import tempfile
+from typing import Optional, Tuple
+
+__all__ = ["g_reader_passes", "involuntary_remat_count",
+           "donated_input_bytes", "REMAT_WARNING"]
+
+REMAT_WARNING = "Involuntary full rematerialization"
+
+
+def g_reader_passes(hlo_text: str, N: int, n: int) -> int:
+    """Number of instructions that read THE ``f32[N,n]`` G entry parameter
+    in the optimized HLO. Each reader is at most one HBM pass over G
+    (gathers of kept columns read less), so the count upper-bounds the true
+    pass count."""
+    shape = re.escape(f"f32[{N},{n}]")
+    # only the ENTRY computation: nested fusion/call bodies re-declare their
+    # operands as parameters and would double count
+    entry = hlo_text.split("\nENTRY ", 1)[-1]
+    entry = entry.split("\n}", 1)[0]
+    g_syms = set()
+    for m in re.finditer(rf"(%\S+)\s*=\s*{shape}\S*\s+parameter\(", entry):
+        g_syms.add(m.group(1))
+    readers = 0
+    for line in entry.splitlines():
+        line = line.strip()
+        m = re.match(r"(?:ROOT\s+)?(%\S+)\s*=\s*\S+\s+(\S+)\((.*)", line)
+        if not m:
+            continue
+        sym, op, operands = m.groups()
+        if op in ("parameter", "copy", "bitcast", "get-tuple-element", "tuple"):
+            continue
+        if any(g + "," in operands or g + ")" in operands or g + " " in operands
+               for g in g_syms):
+            readers += 1
+    return readers
+
+
+def involuntary_remat_count(compile_fn) -> Tuple[int, object]:
+    """Run ``compile_fn()`` (typically ``lambda: jax.jit(f).lower(*a).compile()``)
+    with the OS-level stderr captured; return (warning count, result).
+
+    XLA's SPMD partitioner emits the warning from C++ directly to fd 2, so
+    Python-level redirection misses it — the capture swaps the fd itself.
+    """
+    import sys
+
+    sys.stderr.flush()
+    saved_fd = os.dup(2)
+    with tempfile.TemporaryFile(mode="w+b") as tmp:
+        os.dup2(tmp.fileno(), 2)
+        try:
+            result = compile_fn()
+        finally:
+            sys.stderr.flush()
+            os.dup2(saved_fd, 2)
+            os.close(saved_fd)
+        tmp.seek(0)
+        text = tmp.read().decode("utf-8", errors="replace")
+    return text.count(REMAT_WARNING), result
+
+
+def donated_input_bytes(compiled) -> Optional[float]:
+    """Aliased (donated) input bytes of a compiled executable, or None when
+    the runtime exposes no memory analysis."""
+    try:
+        ma = compiled.memory_analysis()
+        if isinstance(ma, list):
+            ma = ma[0]
+        return float(ma.alias_size_in_bytes)
+    except Exception:
+        return None

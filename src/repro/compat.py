@@ -46,6 +46,7 @@ __all__ = [
     "tree_map_with_path",
     "tree_flatten_with_path",
     "register_dataclass",
+    "user_frames",
 ]
 
 
@@ -187,6 +188,22 @@ def prng_key(seed: int) -> jax.Array:
 def key_dtype():
     """dtype of a step key — for ShapeDtypeStructs fed to ``jit.lower``."""
     return prng_key(0).dtype
+
+
+def user_frames(source_info):
+    """User-code (file_name, start_line) frames of one jaxpr equation.
+
+    ``eqn.source_info`` provenance lives in ``jax._src.source_info_util``,
+    which is internal and has moved across releases — every consumer (the
+    sketch-coverage analyzer) goes through here so absence degrades to "no
+    provenance" instead of an ImportError.
+    """
+    try:
+        from jax._src import source_info_util as siu
+        return [(f.file_name, f.start_line)
+                for f in siu.user_frames(source_info)]
+    except Exception:
+        return []
 
 
 # ---------------------------------------------------------------------------

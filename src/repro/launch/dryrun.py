@@ -296,6 +296,31 @@ def run_cell(arch: str, cell_name: str, *, multi_pod: bool, policy_name: str = "
                 "sites": join_hlo_cost(table, full),
                 "totals": table_totals(table),
             }
+    if cell.kind == "train" and policy is not None and policy[0] is not None:
+        # sketch-coverage gate: every backward matmul on the spine, or named
+        # in analysis/baseline.json. Abstract tracing only — never executes
+        # the cell (so it runs even under --skip-cost); defensive so an
+        # analyzer bug can't sink a dry-run sweep. The HLO join uses the
+        # full-depth FLOPs when the cost pass ran, else the rolled program.
+        try:
+            from repro.analysis.coverage import (analyze_runtime,
+                                                 check_baseline)
+
+            rep = analyze_runtime(Runtime(policy=policy[0]), cfg,
+                                  batch_size=cell.global_batch,
+                                  seq_len=cell.seq_len)
+            gate = check_baseline(rep)
+            hlo_flops = rec.get("cost_full_depth", rec["rolled_cost"])
+            rec["coverage"] = {
+                **rep.summary(),
+                "escaped_frac_vs_hlo": rep.escaped_frac_vs_hlo(
+                    hlo_flops["flops"] * chips),
+                "baseline_ok": gate.ok,
+                "baseline_used": gate.used,
+                "baseline_message": gate.message(),
+            }
+        except Exception:
+            rec["coverage"] = {"error": traceback.format_exc(limit=3)}
     return rec
 
 

@@ -1,0 +1,9 @@
+"""Fixture: direct Ctx construction outside api/nn (ctx-outside-api-nn)."""
+from repro.nn.blocks import Ctx
+from repro.nn import blocks
+
+
+def make(key):
+    a = Ctx(key=key)
+    b = blocks.Ctx(key=key)
+    return a, b

@@ -1,0 +1,8 @@
+"""Fixture: a second custom_vjp spine (custom-vjp-outside-site)."""
+from jax import custom_vjp as cv
+import jax
+
+
+def make(f):
+    g = jax.custom_vjp(f)
+    return cv, g

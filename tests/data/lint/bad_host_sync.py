@@ -1,0 +1,18 @@
+"""Fixture: host syncs inside jitted step functions (host-sync-in-jit)."""
+from functools import partial
+
+import jax
+import numpy as np
+
+
+@jax.jit
+def step(x):
+    loss = x.sum()
+    scalar = float(loss)
+    host = np.asarray(x)
+    return scalar, host, loss.item()
+
+
+@partial(jax.jit, donate_argnums=(0,))
+def step2(x):
+    return x.tolist()

@@ -1,0 +1,9 @@
+"""Fixture: the same key consumed twice (prng-key-reuse)."""
+import jax
+import jax.random as jrandom
+
+
+def sample(key):
+    a = jax.random.normal(key, (2,))
+    b = jrandom.uniform(key, (2,))
+    return a + b

@@ -1,0 +1,11 @@
+"""Fixture: Python control flow on traced values (tracer-branch)."""
+import jax
+
+
+@jax.jit
+def step(x, y):
+    if x.sum() > 0:
+        y = y + 1
+    while y > 0:
+        y = y - 1
+    return y

@@ -1,0 +1,7 @@
+"""Fixture: sanctioned Ctx access — factory methods, not the constructor."""
+
+
+def make(rt, execution, key):
+    a = rt.ctx(key)
+    b = execution.make_ctx(key)
+    return a, b

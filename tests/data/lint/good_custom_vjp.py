@@ -1,0 +1,7 @@
+"""Fixture: mentions jax.custom_vjp in prose only, and calls a non-jax
+function that happens to be named custom_vjp — neither is a finding."""
+from repro.core import site
+
+
+def use(f):
+    return site.custom_vjp_like_helper(f)

@@ -1,0 +1,14 @@
+"""Fixture: constants and static metadata inside jit, host ops outside."""
+import jax
+import numpy as np
+
+
+@jax.jit
+def step(x):
+    scale = float(2)
+    width = float(x.shape[0])
+    return x * scale * width
+
+
+def outside(x):
+    return float(x.sum()), np.asarray(x), x.item()

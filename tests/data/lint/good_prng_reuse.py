@@ -1,0 +1,22 @@
+"""Fixture: split / fold_in / rebinding / exclusive branches — no reuse."""
+import jax
+
+
+def sample(key, flag):
+    k1, k2 = jax.random.split(key)
+    a = jax.random.normal(k1, (2,))
+    if flag:
+        b = jax.random.uniform(k2, (2,))
+    else:
+        b = jax.random.normal(k2, (2,))
+    key = jax.random.fold_in(key, 1)
+    c = jax.random.normal(key, (2,))
+    return a + b + c
+
+
+def loop(key):
+    out = []
+    for i in range(3):
+        key = jax.random.fold_in(key, i)
+        out.append(jax.random.normal(key, (2,)))
+    return out

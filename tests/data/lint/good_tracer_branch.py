@@ -1,0 +1,13 @@
+"""Fixture: static checks (`is None`, .ndim, .shape) branch fine under jit."""
+import jax
+
+
+@jax.jit
+def step(x, y=None):
+    if y is None:
+        y = x
+    if x.ndim == 2:
+        y = y.sum(axis=0)
+    if isinstance(y, tuple):
+        y = y[0]
+    return y

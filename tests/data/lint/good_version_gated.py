@@ -1,0 +1,10 @@
+"""Fixture: prose mentions of shard_map and AxisType in a docstring are not
+findings, and routing through the shard_map compact path in repro.compat is
+the sanctioned spelling."""
+from repro import compat
+
+
+def build():
+    # "the shard_map compact path" — comment prose, also not a finding
+    mesh = compat.make_mesh((2,), ("data",))
+    return compat.shard_map, mesh

@@ -1,6 +1,7 @@
-"""Public-API snapshot: the exported ``repro.api`` names and signatures are
-asserted against a checked-in snapshot so accidental surface breaks fail
-loudly (and intentional ones show up as a reviewed snapshot diff).
+"""Public-API snapshot: the exported ``repro.api`` and ``repro.analysis``
+names and signatures are asserted against a checked-in snapshot so
+accidental surface breaks fail loudly (and intentional ones show up as a
+reviewed snapshot diff).
 
 Regenerate after an intentional change:
 
@@ -41,12 +42,10 @@ def _describe_class(cls) -> list:
     return lines
 
 
-def describe_api() -> str:
-    from repro import api
-
+def _describe_module(mod) -> list:
     out = []
-    for name in sorted(api.__all__):
-        obj = getattr(api, name)
+    for name in sorted(mod.__all__):
+        obj = getattr(mod, name)
         if inspect.isclass(obj):
             out.append(f"class {name}")
             out.extend(_describe_class(obj))
@@ -54,6 +53,16 @@ def describe_api() -> str:
             out.append(f"def {name}{_sig(obj)}")
         else:
             out.append(f"value {name}")
+    return out
+
+
+def describe_api() -> str:
+    from repro import analysis, api
+
+    out = ["== repro.api =="]
+    out.extend(_describe_module(api))
+    out.append("== repro.analysis ==")
+    out.extend(_describe_module(analysis))
     return "\n".join(out) + "\n"
 
 

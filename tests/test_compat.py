@@ -7,50 +7,32 @@ These tests pin the two invariants that prevent a recurrence:
   1. ``repro.compat`` + ``repro.launch.mesh`` import and build meshes on the
      *installed* JAX — whatever its version;
   2. no module outside ``repro/compat.py`` touches a version-gated JAX
-     symbol directly (grep-based).
+     symbol directly.
+
+The second family used to be regex greps living here; they are now thin
+wrappers over the AST lint engine (``repro.analysis.lint``), which resolves
+import aliases (``from jax.experimental import shard_map as sm`` no longer
+slips through) and does not false-positive on docstring prose. The
+allowlists live on the rules themselves in ``repro/analysis/rules.py``.
 """
 import os
-import re
 
 import jax
 import numpy as np
 import pytest
 
+from repro.analysis import run_lint
+
 SRC = os.path.join(os.path.dirname(__file__), "..", "src", "repro")
 
-# Version-gated JAX surfaces: present/absent or renamed across the supported
-# range (see repro/compat.py and docs/distributed.md). Calls must go through
-# compat; these regexes catch direct use (word-ish boundaries keep prose
-# mentions in docstrings from tripping, e.g. "the shard_map compact path").
-_FORBIDDEN = [
-    r"AxisType",
-    r"axis_types\s*=",
-    r"jax\.shard_map",
-    r"experimental\.shard_map",
-    r"experimental\s+import\s+shard_map",
-    r"check_vma",
-    r"check_rep",
-    r"jax\.make_mesh",
-    # primitive exists in-range but ships without a vmap batching rule on
-    # some releases — compat.optimization_barrier backfills it
-    r"jax\.lax\.optimization_barrier",
-]
+
+def _lint(rule_id):
+    return run_lint([SRC], select=[rule_id])
 
 
 def test_no_version_gated_jax_symbols_outside_compat():
-    offenders = []
-    for dirpath, _, files in os.walk(SRC):
-        for fname in files:
-            if not fname.endswith(".py"):
-                continue
-            path = os.path.join(dirpath, fname)
-            if os.path.relpath(path, SRC) == "compat.py":
-                continue
-            with open(path) as f:
-                for lineno, line in enumerate(f, 1):
-                    for pat in _FORBIDDEN:
-                        if re.search(pat, line):
-                            offenders.append(f"{path}:{lineno}: {line.strip()}")
+    result = _lint("jax-version-gated")
+    offenders = [str(f) for f in result.findings] + [str(f) for f in result.waived]
     assert not offenders, (
         "version-gated JAX symbols outside repro/compat.py:\n" + "\n".join(offenders))
 
@@ -60,29 +42,18 @@ def test_no_custom_vjp_spines_outside_core_site():
     TP execution plans all route through ``core/site.py``. Any new
     ``jax.custom_vjp`` in ``src/`` is a second spine in the making — the
     exact duplication (sketched_linear + the three sharded_sketch builds)
-    this repo just collapsed — unless explicitly allowlisted below.
+    this repo just collapsed — unless explicitly allowlisted on the rule.
 
-    Allowlist: core/site.py (THE spine); launch/pipeline.py (the
-    pipeline-parallel stage-boundary vjp — not a sketched site). The
-    serve/ and kernels/ trees currently define none; a Pallas kernel or
-    decode path that genuinely needs its own vjp must be added here
-    explicitly, with a comment.
-    """
-    allow = {"core/site.py", "launch/pipeline.py"}
-    pat = re.compile(r"jax\.custom_vjp|custom_vjp\s*\(")
-    offenders = []
-    for dirpath, _, files in os.walk(SRC):
-        for fname in files:
-            if not fname.endswith(".py"):
-                continue
-            path = os.path.join(dirpath, fname)
-            rel = os.path.relpath(path, SRC).replace(os.sep, "/")
-            if rel in allow:
-                continue
-            with open(path) as f:
-                for lineno, line in enumerate(f, 1):
-                    if pat.search(line):
-                        offenders.append(f"{rel}:{lineno}: {line.strip()}")
+    Allowlist (see CustomVjpRule): core/site.py (THE spine);
+    launch/pipeline.py (the pipeline-parallel stage-boundary vjp — not a
+    sketched site). The serve/ and kernels/ trees currently define none; a
+    Pallas kernel or decode path that genuinely needs its own vjp must be
+    added there explicitly, with a comment.
+
+    Inline ``# lint: waive=`` comments are also treated as offenders here:
+    a second spine cannot be self-waived at the call site."""
+    result = _lint("custom-vjp-outside-site")
+    offenders = [str(f) for f in result.findings] + [str(f) for f in result.waived]
     assert not offenders, (
         "new custom_vjp spine outside core/site.py — route the site through "
         "the one spine (SiteSpec/ExecutionPlan) or extend the allowlist "
@@ -96,21 +67,8 @@ def test_no_ctx_construction_outside_api_and_nn():
     build a ``Ctx(...)`` directly — that is how train() kwargs smeared across
     the codebase in the first place. Use ``Runtime.ctx`` /
     ``ExecutionConfig.make_ctx`` instead."""
-    pat = re.compile(r"(?<![\w.])Ctx\(")
-    offenders = []
-    for dirpath, _, files in os.walk(SRC):
-        rel = os.path.relpath(dirpath, SRC)
-        if rel == "nn" or rel.startswith("nn" + os.sep) \
-                or rel == "api" or rel.startswith("api" + os.sep):
-            continue
-        for fname in files:
-            if not fname.endswith(".py"):
-                continue
-            path = os.path.join(dirpath, fname)
-            with open(path) as f:
-                for lineno, line in enumerate(f, 1):
-                    if pat.search(line):
-                        offenders.append(f"{path}:{lineno}: {line.strip()}")
+    result = _lint("ctx-outside-api-nn")
+    offenders = [str(f) for f in result.findings] + [str(f) for f in result.waived]
     assert not offenders, (
         "direct Ctx(...) construction outside repro/api + repro/nn "
         "(route through ExecutionConfig.make_ctx / Runtime.ctx):\n"
