@@ -1,0 +1,111 @@
+"""Resilience benchmark: wasted work and steps-to-recover under a fault drill.
+
+The §5 MLP (784-64-64-10, l1 sketching) is trained twice through the full
+``Runtime``/``train_loop`` stack with checkpointing every ``ckpt_every``
+steps:
+
+1. **fault-free** — resilience enabled, no faults: the baseline trajectory
+   (and the wall-clock the sentinel costs when nothing ever trips);
+2. **faulted** — the same run under :meth:`repro.resilience.FaultPlan.drill`
+   (checkpoint IO error, non-finite gradients, a loss spike, and an
+   M-consecutive-trip burst forcing a checkpoint rollback), supervised by
+   :class:`repro.resilience.Supervisor`.
+
+Reported headline numbers (``results/bench/resilience.json`` →
+``BENCH_summary.json``):
+
+* ``wasted_work_frac`` — Σ steps_lost over recovery events / total steps
+  executed (the recompute tax of the recovery ladder);
+* ``steps_to_recover_mean``/``max`` — steps lost per rollback/re-shard event;
+* ``loss_gap`` — |final faulted loss − final fault-free loss| (the drill must
+  land within tolerance of the clean run: recovery, not just survival).
+
+Usage: PYTHONPATH=src python -m benchmarks.bench_resilience [--steps N]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks.common import save_result
+from repro.api import ExecutionConfig, Runtime, SketchConfig, SketchPolicy
+from repro.data.synthetic import ClassStream
+from repro.models.mlp import mlp_arch
+from repro.optim import adamw, constant
+from repro.resilience import FaultPlan, ResilienceConfig, Supervisor
+from repro.train.trainer import TrainerConfig
+
+SIZES = (784, 64, 64, 10)
+
+
+def _runtime():
+    policy = SketchPolicy(base=SketchConfig(method="l1", budget=0.2))
+    rcfg = ResilienceConfig(rollback_after=3, escalate_steps=4)
+    return Runtime(policy=policy,
+                   execution=ExecutionConfig(resilience=rcfg))
+
+
+def _one_run(steps: int, ckpt_every: int, batch: int, workdir: str,
+             plan: FaultPlan | None):
+    cfg = mlp_arch(SIZES)
+    opt = adamw(constant(1e-3), clip=1.0)
+    tcfg = TrainerConfig(steps=steps, log_every=max(1, steps // 10),
+                         ckpt_dir=os.path.join(workdir, "ckpt"),
+                         ckpt_every=ckpt_every, seed=0)
+    data = ClassStream(dim=SIZES[0], n_classes=SIZES[-1]).batches(batch)
+    sup = Supervisor(_runtime(), cfg, opt, tcfg, fault_plan=plan)
+    t0 = time.perf_counter()
+    state, hist = sup.run(data, on_metrics=lambda m: None)
+    wall = time.perf_counter() - t0
+    return {"final_loss": float(hist[-1]["loss"]),
+            "wall_s": round(wall, 3),
+            "n_recoveries": sup.recoveries,
+            "events": sup.events}
+
+
+def run(quick: bool = True, steps: int | None = None, batch: int = 64):
+    steps = steps or (40 if quick else 200)
+    ckpt_every = 5
+    out = {"steps": steps, "ckpt_every": ckpt_every, "batch": batch,
+           "sizes": list(SIZES)}
+
+    with tempfile.TemporaryDirectory() as d:
+        out["fault_free"] = _one_run(steps, ckpt_every, batch, d, plan=None)
+    plan = FaultPlan.drill(ckpt_every=ckpt_every)
+    with tempfile.TemporaryDirectory() as d:
+        out["faulted"] = _one_run(steps, ckpt_every, batch, d, plan=plan)
+
+    recov = [e for e in out["faulted"]["events"]
+             if e.get("event") in ("rollback", "device_loss_reshard")]
+    lost = [int(e.get("steps_lost", 0)) for e in recov]
+    executed = steps + sum(lost)
+    out["drill_faults"] = [[f.step, f.kind] for f in plan.faults]
+    out["n_rollbacks"] = len(lost)
+    out["wasted_work_frac"] = (sum(lost) / executed) if executed else 0.0
+    out["steps_to_recover_mean"] = float(np.mean(lost)) if lost else 0.0
+    out["steps_to_recover_max"] = max(lost) if lost else 0
+    out["loss_gap"] = abs(out["faulted"]["final_loss"]
+                          - out["fault_free"]["final_loss"])
+    out["sentinel_trips"] = sum(1 for e in out["faulted"]["events"]
+                                if e.get("event") == "sentinel_trip")
+
+    save_result("resilience", out)
+    print(f"fault-free loss {out['fault_free']['final_loss']:.4f} | "
+          f"faulted loss {out['faulted']['final_loss']:.4f} | "
+          f"trips {out['sentinel_trips']} rollbacks {out['n_rollbacks']} | "
+          f"wasted work {out['wasted_work_frac']:.3f} | "
+          f"steps-to-recover mean {out['steps_to_recover_mean']:.1f} "
+          f"max {out['steps_to_recover_max']}")
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=None)
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    run(quick=not args.full, steps=args.steps)

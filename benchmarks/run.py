@@ -46,6 +46,9 @@ _KEY_METRICS = {
     # DOWN as the MoE/SSM baseline.json waivers get retired
     "coverage": ("escaped_flop_frac",
                  lambda d: _get(d, "escaped_flop_frac")),
+    # recompute tax of the recovery ladder under the canned fault drill
+    "resilience": ("wasted_work_frac",
+                   lambda d: _get(d, "wasted_work_frac")),
 }
 
 
@@ -151,7 +154,7 @@ def main():
                             bench_fig1a_correlation, bench_fig1b_mask_vs_sketch,
                             bench_fig2a_proxies, bench_fig2b_spectral,
                             bench_fig3_larger_archs, bench_fig4_location,
-                            bench_variance)
+                            bench_resilience, bench_variance)
     jobs = {
         "fig1a_correlation": bench_fig1a_correlation.run,
         "fig1b_mask_vs_sketch": bench_fig1b_mask_vs_sketch.run,
@@ -164,6 +167,7 @@ def main():
         "block_granularity": bench_block_granularity.run,
         "adaptive": bench_adaptive.run,
         "coverage": bench_coverage.run,
+        "resilience": bench_resilience.run,
         "distributed": _run_distributed,
         "backward_fusion": _run_backward_fusion,
     }

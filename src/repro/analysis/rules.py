@@ -513,6 +513,112 @@ class TracerBranchRule:
         return sorted(out)
 
 
+# ---------------------------------------------------------------------------
+# Rule 7: swallowed exceptions
+# ---------------------------------------------------------------------------
+
+_BROAD_EXC = frozenset({"Exception", "BaseException"})
+
+
+def _broad_handler(handler: ast.ExceptHandler, ctx: FileContext) -> bool:
+    """Bare ``except:``, or a handler naming Exception/BaseException
+    (directly or inside a tuple). Narrow handlers (``except TypeError``)
+    are the caller saying exactly what it expects — never flagged."""
+    t = handler.type
+    if t is None:
+        return True
+    elts = t.elts if isinstance(t, ast.Tuple) else [t]
+    for e in elts:
+        r = ctx.resolve(e)
+        if r is not None and r.split(".")[-1] in _BROAD_EXC:
+            return True
+    return False
+
+
+def _handles_or_records(handler: ast.ExceptHandler) -> bool:
+    """Does the handler body *do* anything with the failure? Re-raising,
+    returning/yielding a fallback, assigning (recording) or calling
+    (logging, forwarding through a queue) all count; ``pass``/docstrings/
+    ``continue``/``break`` alone do not."""
+    for node in ast.walk(handler):
+        if isinstance(node, (ast.Raise, ast.Return, ast.Yield, ast.YieldFrom,
+                             ast.Call, ast.Assign, ast.AugAssign,
+                             ast.AnnAssign, ast.Delete)):
+            return True
+    return False
+
+
+@dataclasses.dataclass(frozen=True)
+class SwallowedExceptionRule:
+    id: str = "swallowed-exception"
+    description: str = ("broad except (bare / Exception / BaseException) that "
+                        "neither re-raises nor records — failures vanish "
+                        "silently")
+    allow: Tuple[str, ...] = ()
+
+    def check(self, ctx: FileContext) -> List[Finding]:
+        if _allowed(self, ctx):
+            return []
+        out = []
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.ExceptHandler) \
+                    and _broad_handler(node, ctx) \
+                    and not _handles_or_records(node):
+                out.append(Finding(
+                    ctx.path, node.lineno, self.id,
+                    "broad exception handler swallows the failure — "
+                    "re-raise, narrow the type, or record it (log / store / "
+                    "forward), with a `# lint: waive=swallowed-exception` "
+                    "comment only for a justified sink"))
+        return sorted(out)
+
+
+# ---------------------------------------------------------------------------
+# Rule 8: threading.Thread targets that lose their exceptions
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ThreadUncapturedTargetRule:
+    id: str = "thread-uncaptured-target"
+    description: str = ("threading.Thread(target=...) whose target cannot "
+                        "surface an exception — a failing worker dies "
+                        "silently on the daemon thread")
+    allow: Tuple[str, ...] = ()
+
+    def check(self, ctx: FileContext) -> List[Finding]:
+        if _allowed(self, ctx):
+            return []
+        defs = {node.name: node for node in ast.walk(ctx.tree)
+                if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef))}
+        out = []
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            r = ctx.resolve(node.func)
+            if r is None or r.split(".")[-1] != "Thread" \
+                    or not (r == "Thread" or r.startswith("threading.")):
+                continue
+            target = None
+            for kw in node.keywords:
+                if kw.arg == "target":
+                    target = kw.value
+            if target is None:
+                continue  # subclass style (run() overridden) — its job
+            captured = False
+            if isinstance(target, ast.Name) and target.id in defs:
+                captured = any(isinstance(n, ast.ExceptHandler)
+                               for n in ast.walk(defs[target.id]))
+            if not captured:
+                out.append(Finding(
+                    ctx.path, node.lineno, self.id,
+                    "Thread target has no exception capture — wrap the "
+                    "worker body in try/except and store or forward the "
+                    "failure (re-raised on join/wait), or subclass Thread "
+                    "with an error-capturing run()"))
+        return sorted(out)
+
+
 DEFAULT_RULES: Tuple[Rule, ...] = (
     JaxVersionGatedRule(),
     CustomVjpRule(),
@@ -520,6 +626,8 @@ DEFAULT_RULES: Tuple[Rule, ...] = (
     PrngKeyReuseRule(),
     HostSyncInJitRule(),
     TracerBranchRule(),
+    SwallowedExceptionRule(),
+    ThreadUncapturedTargetRule(),
 )
 
 

@@ -11,6 +11,11 @@ One import gives the whole paper-reproduction surface:
     closed-loop SNR-adaptive mode backed by telemetry probes).
   * :class:`TelemetryConfig` — in-graph probes + sinks switchboard
     (``ExecutionConfig.telemetry``; see docs/telemetry.md).
+  * :class:`ResilienceConfig` / :class:`FaultPlan` / :class:`GradSentinel` /
+    :class:`Supervisor` — the fault-handling layer (``ExecutionConfig.
+    resilience``): in-graph gradient sentinel with exact-budget escalation,
+    seeded fault injection, and checkpoint-rollback / elastic-remesh
+    recovery (see docs/resilience.md).
   * :func:`register_estimator` — plug in new unbiased-VJP estimator families
     (RAD / BASIS-style) without touching core.
   * :class:`SiteSpec` / :class:`ExecutionPlan` / :func:`resolve_site` — the
@@ -40,6 +45,8 @@ from repro.core import SketchConfig, SketchPolicy
 from repro.core.estimators import (Estimator, EstimatorVJP, get_estimator,
                                    register_estimator, registered_backends)
 from repro.core.site import ExecutionPlan, SiteSpec, resolve_site
+from repro.resilience import (FaultPlan, FaultSpec, GradSentinel,
+                              ResilienceConfig, Supervisor)
 from repro.telemetry import TelemetryConfig
 from repro.telemetry.controller import AdaptiveBudgetController
 
@@ -51,11 +58,16 @@ __all__ = [
     "EstimatorVJP",
     "ExecutionConfig",
     "ExecutionPlan",
+    "FaultPlan",
+    "FaultSpec",
+    "GradSentinel",
+    "ResilienceConfig",
     "Runtime",
     "SiteSpec",
     "SketchConfig",
     "SketchPolicy",
     "StragglerController",
+    "Supervisor",
     "TelemetryConfig",
     "get_estimator",
     "register_estimator",

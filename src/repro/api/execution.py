@@ -37,6 +37,13 @@ class ExecutionConfig:
         in-graph probes (per-site VJP-variance estimates emitted as a side
         output of the train step) and naming optional sinks; ``None`` (the
         default) disables telemetry entirely. See docs/telemetry.md.
+      resilience: a :class:`repro.resilience.ResilienceConfig` enabling the
+        fault-handling plumbing: the compiled step takes a traced
+        ``fault_scale`` operand (fault injection without recompiles) and,
+        with ``sentinel=True``, gates the optimizer update on an in-graph
+        non-finite/norm-explosion flag — bit-identical training when the
+        sentinel never trips. ``None`` (the default) compiles the plain
+        three-argument step. See docs/resilience.md.
     """
 
     mesh: Optional[Any] = None
@@ -48,6 +55,7 @@ class ExecutionConfig:
     accum: int = 1
     cost_mode: bool = False
     telemetry: Optional[Any] = None  # repro.telemetry.TelemetryConfig
+    resilience: Optional[Any] = None  # repro.resilience.ResilienceConfig
 
     def __post_init__(self):
         object.__setattr__(self, "data_axes", tuple(self.data_axes))
@@ -63,6 +71,10 @@ class ExecutionConfig:
                              "cotangents would silently average across "
                              "microbatch plans); use TelemetryConfig("
                              "probes=False) with accumulation")
+        if self.resilience is not None and not hasattr(self.resilience,
+                                                       "sentinel"):
+            raise ValueError("resilience must be a repro.resilience."
+                             f"ResilienceConfig, got {self.resilience!r}")
 
     def site_spec(self, role: str, cfg, *, d_out: int, d_in: int,
                   has_bias: bool = False, x_ndim: int = 3):

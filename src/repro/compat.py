@@ -27,6 +27,7 @@ from __future__ import annotations
 import dataclasses
 import inspect
 import os
+import warnings
 from typing import Any, Optional
 
 import jax
@@ -162,8 +163,13 @@ def _ensure_barrier_batchable() -> None:
                 return prim.bind(*args), dims
 
             batching.primitive_batchers[prim] = _rule
-    except Exception:  # pragma: no cover - private path moved; barrier still works unbatched
-        pass
+    except Exception as e:  # pragma: no cover - private path moved
+        # degraded, not broken: the barrier still works outside vmap — but
+        # say so instead of failing silently on the next vmap'd barrier
+        warnings.warn(
+            f"could not backfill the optimization_barrier batching rule "
+            f"({type(e).__name__}: {e}); vmap over barrier-guarded code may "
+            f"raise NotImplementedError on this JAX release", stacklevel=2)
 
 
 def optimization_barrier(values):

@@ -10,7 +10,7 @@ __all__ = ["ArchConfig", "ShapeCell", "SHAPE_CELLS"]
 @dataclasses.dataclass(frozen=True)
 class ArchConfig:
     name: str
-    family: str  # dense | moe | vlm | audio | hybrid | ssm
+    family: str  # dense | moe | vlm | audio | hybrid | ssm | mlp
     n_layers: int
     d_model: int
     n_heads: int

@@ -30,7 +30,9 @@ def prefetch(it, size: int = 2, shardings: dict | None = None):
         try:
             for item in it:
                 q.put(shard_batch(item, shardings))
-        finally:
+        except BaseException as e:  # forwarded: the consumer re-raises below
+            q.put(e)
+        else:
             q.put(_END)
 
     t = threading.Thread(target=worker, daemon=True)
@@ -39,4 +41,6 @@ def prefetch(it, size: int = 2, shardings: dict | None = None):
         item = q.get()
         if item is _END:
             return
+        if isinstance(item, BaseException):
+            raise item
         yield item

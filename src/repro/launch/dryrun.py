@@ -369,11 +369,12 @@ def main():
         if args.skip_existing and os.path.exists(out_path):
             try:
                 with open(out_path) as f:
-                    if json.load(f).get("status") == "ok":
-                        print(f"=== {tag} === (cached)", flush=True)
-                        continue
-            except Exception:
-                pass
+                    cached = json.load(f)
+            except (OSError, ValueError):
+                cached = None  # unreadable/corrupt cache: recompute the cell
+            if isinstance(cached, dict) and cached.get("status") == "ok":
+                print(f"=== {tag} === (cached)", flush=True)
+                continue
         print(f"=== {tag} ===", flush=True)
         try:
             rec = run_cell(a, c, multi_pod=args.multipod, policy_name=args.policy,

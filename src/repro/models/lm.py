@@ -136,6 +136,10 @@ def _init_segment(key, period, n_rep, cfg: ArchConfig, dtype):
 
 def init_params(key, cfg: ArchConfig):
     dtype = jnp.dtype(cfg.param_dtype)
+    if cfg.family == "mlp":
+        from repro.models import mlp as mlpmod
+
+        return mlpmod.mlp_init(key, mlpmod.mlp_sizes(cfg), dtype)
     ks = jax.random.split(key, 8)
     d = cfg.d_model
     params = {
@@ -517,7 +521,17 @@ def lm_loss(params, batch, ctx: Ctx, cfg: ArchConfig, step_key=None):
     """Next-token cross-entropy (vocab-shard friendly masked reduce).
 
     Returns (loss, metrics dict).
+
+    ``family="mlp"`` configs (:func:`repro.models.mlp.mlp_arch`) dispatch to
+    the §5 classification MLP instead — batch is ``{"x", "y"}`` and the
+    metrics gain ``acc`` — so the one trainer/checkpoint/resilience stack
+    drives both model families.
     """
+    if cfg.family == "mlp":
+        from repro.models import mlp as mlpmod
+
+        loss, acc = mlpmod.mlp_loss(params, batch, ctx)
+        return loss, {"loss": loss, "acc": acc, "nll": loss}
     logits, aux = forward(params, batch, ctx, cfg, step_key)
     labels = batch["labels"]
     lg32 = logits.astype(jnp.float32)

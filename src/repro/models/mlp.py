@@ -11,7 +11,33 @@ import jax.numpy as jnp
 
 from repro.nn.common import Ctx, dense, dense_init
 
-__all__ = ["mlp_init", "mlp_apply", "mlp_loss"]
+__all__ = ["mlp_arch", "mlp_init", "mlp_apply", "mlp_loss", "mlp_sizes"]
+
+
+def mlp_arch(sizes=(784, 64, 64, 10), name: str = "mlp"):
+    """The §5 MLP as an :class:`~repro.configs.base.ArchConfig`
+    (``family="mlp"``), so it rides the standard ``init_params``/``lm_loss``
+    dispatch — and with it the trainer, checkpointing, elastic restart and
+    the resilience supervisor. Field reuse: ``d_ff`` = input dim,
+    ``d_model`` = hidden width, ``vocab`` = class count (recovered by
+    :func:`mlp_sizes`); head fields are placeholders.
+    """
+    from repro.configs.base import ArchConfig
+
+    sizes = tuple(int(s) for s in sizes)
+    if len(sizes) < 2:
+        raise ValueError(f"mlp_arch needs >= 2 sizes, got {sizes}")
+    hidden = set(sizes[1:-1])
+    if len(hidden) > 1:
+        raise ValueError(f"mlp_arch encodes one hidden width, got {sizes}")
+    return ArchConfig(name=name, family="mlp", n_layers=len(sizes) - 1,
+                      d_model=(sizes[1] if len(sizes) > 2 else sizes[0]),
+                      n_heads=1, n_kv=1, d_ff=sizes[0], vocab=sizes[-1])
+
+
+def mlp_sizes(cfg) -> tuple:
+    """Layer sizes back out of an ``mlp_arch``-built config."""
+    return (cfg.d_ff,) + (cfg.d_model,) * (cfg.n_layers - 1) + (cfg.vocab,)
 
 
 def mlp_init(key, sizes=(784, 64, 64, 10), dtype=jnp.float32):

@@ -1,0 +1,108 @@
+"""repro.resilience — fault injection, gradient sentinels, recovery.
+
+Randomized unbiased VJPs trade per-step cost for gradient noise (paper §3),
+so a production run must *detect* divergence — non-finite grads, loss
+spikes, probe-SNR collapse — and *degrade gracefully* instead of silently
+corrupting a long training job. Three pieces (docs/resilience.md):
+
+  * :class:`ResilienceConfig` — frozen/hashable switchboard riding
+    ``ExecutionConfig.resilience`` (the one front door). With it set, the
+    compiled train step takes a traced ``fault_scale`` operand and gates the
+    optimizer update on an in-graph finiteness/norm flag; training is
+    bit-identical when the sentinel never trips.
+  * :mod:`~repro.resilience.faults` — a seeded, declarative
+    :class:`FaultPlan` (step -> fault) injecting realistic failures
+    (non-finite cotangents, loss spikes, slow steps, checkpoint-write IO
+    errors, simulated device loss) so every recovery path is
+    deterministically testable on the fake-device mesh.
+  * :class:`~repro.resilience.sentinel.GradSentinel` (host side) and
+    :class:`~repro.resilience.supervisor.Supervisor` — escalate the budget
+    to exact for K steps on a trip (the paper-native fallback: when the
+    estimator is the suspect, buy variance down before buying a rollback),
+    and roll back to the last *verified* checkpoint / re-shard onto the
+    surviving mesh on hard faults.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.resilience.faults import (DeviceLossFault, FaultInjector,
+                                     FaultPlan, FaultSpec)
+from repro.resilience.sentinel import GradSentinel, RollbackRequired
+
+__all__ = [
+    "DeviceLossFault",
+    "FaultInjector",
+    "FaultPlan",
+    "FaultSpec",
+    "GradSentinel",
+    "ResilienceConfig",
+    "RollbackRequired",
+    "Supervisor",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class ResilienceConfig:
+    """Fault detection + recovery policy (hashable; rides
+    ``ExecutionConfig.resilience``).
+
+    Attributes:
+      sentinel: compile the in-graph gate — the step emits a one-scalar
+        ``sentinel_trip`` flag from quantities it already materializes
+        (loss + global grad norm) and skips the optimizer update when the
+        flag trips. ``jnp.where(ok, new, old)`` returns ``new`` bitwise
+        when ``ok`` — an untripped run is bit-identical to sentinel-off.
+      max_grad_norm: global-grad-norm explosion threshold for the in-graph
+        gate (non-finite loss/grads always trip).
+      spike_factor: host-side loss-spike EMA — trip when the fetched loss
+        exceeds ``spike_factor x EMA(loss)`` after ``warmup_steps`` clean
+        steps (faulty losses never update the EMA).
+      ema_decay: EMA decay for the loss tracker.
+      warmup_steps: clean steps before spike detection arms.
+      escalate_steps: K — steps to force the *exact* (budget=None) bucket
+        after a trip, via the same pre-compiled-bucket switching the
+        Controller protocol uses (no recompiles).
+      rollback_after: M — consecutive trips before the sentinel gives up on
+        escalation and raises :class:`RollbackRequired` (0 disables).
+      max_recoveries: supervisor retry budget across rollbacks + device
+        losses before the original fault is re-raised.
+      min_snr: optional probe-SNR floor (requires telemetry probes); a
+        fetched ``probe_snr`` below it counts as a trip.
+    """
+
+    sentinel: bool = True
+    max_grad_norm: float = 1e3
+    spike_factor: float = 8.0
+    ema_decay: float = 0.9
+    warmup_steps: int = 5
+    escalate_steps: int = 4
+    rollback_after: int = 3
+    max_recoveries: int = 8
+    min_snr: Optional[float] = None
+
+    def __post_init__(self):
+        if self.max_grad_norm <= 0:
+            raise ValueError(f"max_grad_norm must be > 0, got {self.max_grad_norm}")
+        if self.spike_factor <= 1.0:
+            raise ValueError(f"spike_factor must be > 1, got {self.spike_factor}")
+        if not (0.0 < self.ema_decay < 1.0):
+            raise ValueError(f"ema_decay must be in (0, 1), got {self.ema_decay}")
+        for name in ("warmup_steps", "escalate_steps", "rollback_after",
+                     "max_recoveries"):
+            if getattr(self, name) < 0:
+                raise ValueError(f"{name} must be >= 0")
+
+    def replace(self, **kw) -> "ResilienceConfig":
+        return dataclasses.replace(self, **kw)
+
+
+def __getattr__(name):
+    # Supervisor imports the trainer (which imports repro.api); loading it
+    # lazily keeps `repro.api -> repro.resilience` import-cycle free.
+    if name == "Supervisor":
+        from repro.resilience.supervisor import Supervisor
+
+        return Supervisor
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

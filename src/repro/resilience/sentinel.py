@@ -1,0 +1,136 @@
+"""Gradient sentinel: in-graph trip flag + host-side escalation logic.
+
+Two halves, split by where the information lives:
+
+  * **In graph** (:func:`gate_update`, compiled into the train step when
+    ``ResilienceConfig.sentinel`` is set): from quantities the step already
+    materializes — the loss and the global grad norm — compute one boolean
+    ``ok = isfinite(loss) & isfinite(gn) & (gn <= max_grad_norm)`` and gate
+    the optimizer update with ``jnp.where(ok, new, old)``. ``where`` with a
+    true predicate returns its first operand bitwise, so an untripped run
+    is bit-identical to a sentinel-off run; a tripped step keeps the old
+    params/opt state (the step counter still advances) and reports
+    ``sentinel_trip = 1``.
+  * **Host side** (:class:`GradSentinel`, consulted by the trainer between
+    steps): reads the fetched scalars, adds a loss-spike EMA and an
+    optional probe-SNR floor, and decides *escalate vs rollback*. On a trip
+    it forces the exact (budget=None) pre-compiled bucket for K steps —
+    the paper-native fallback: unbiasedness means swapping buckets never
+    biases the gradient, so when the estimator is the suspect the cheapest
+    remedy is buying its variance down. After M *consecutive* trips the
+    estimator is exonerated (the exact bucket tripped too) and the
+    sentinel raises :class:`RollbackRequired` for the supervisor.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro import compat
+
+__all__ = ["GradSentinel", "RollbackRequired", "gate_update"]
+
+
+class RollbackRequired(RuntimeError):
+    """Escalation exhausted: restore the last verified checkpoint.
+
+    Raised by the trainer when the sentinel sees ``rollback_after``
+    consecutive trips; carries the trip step, the last cause, and the
+    history accumulated so far for the supervisor to stitch.
+    """
+
+    def __init__(self, step: int, cause: str, *, history=None):
+        super().__init__(f"sentinel requires rollback at step {step} "
+                         f"({cause})")
+        self.step = int(step)
+        self.cause = cause
+        self.history = list(history or [])
+
+
+def gate_update(ok, new_tree, old_tree):
+    """``jnp.where(ok, new, old)`` leafwise — bitwise ``new`` when ``ok``."""
+    return compat.tree_map(lambda n, o: jnp.where(ok, n, o),
+                           new_tree, old_tree)
+
+
+def trip_flag(loss, grad_norm, max_grad_norm: float):
+    """The in-graph sentinel scalar: 0.0 when the update is safe, 1.0 when
+    it must be skipped (non-finite loss/grads or norm explosion)."""
+    ok = (jnp.isfinite(loss) & jnp.isfinite(grad_norm)
+          & (grad_norm <= max_grad_norm))
+    return ok, 1.0 - ok.astype(jnp.float32)
+
+
+class GradSentinel:
+    """Host-side trip accounting: spike EMA, budget escalation, rollback.
+
+    Mirrors the :class:`repro.api.Controller` step cadence (the trainer
+    feeds it the same scalars-only fetched metrics) but composes *with* a
+    schedule controller instead of replacing it: :meth:`override` rewrites
+    the controller/schedule-chosen budget to ``None`` (exact) while an
+    escalation window is open.
+    """
+
+    wants_metrics = True  # the trainer must fetch scalars every step
+
+    def __init__(self, rcfg):
+        self.rcfg = rcfg
+        self.consecutive = 0
+        self.escalate_left = 0
+        self.trips: list = []
+        self._ema: Optional[float] = None
+        self._clean_steps = 0
+
+    # -- budget composition --------------------------------------------------
+
+    def override(self, budget):
+        """The budget actually run this step: exact while escalating."""
+        return None if self.escalate_left > 0 else budget
+
+    # -- per-step observation ------------------------------------------------
+
+    def observe(self, step: int, metrics: dict) -> Optional[str]:
+        """Digest one step's fetched scalars; returns the trip cause (or
+        None for a clean step). Faulty losses never update the spike EMA."""
+        r = self.rcfg
+        loss = metrics.get("loss")
+        cause = None
+        if metrics.get("sentinel_trip", 0.0) > 0.5:
+            cause = "nonfinite_or_norm"
+        elif loss is not None and not math.isfinite(loss):
+            cause = "nonfinite_loss"
+        elif (loss is not None and self._ema is not None
+                and self._clean_steps >= r.warmup_steps
+                and loss > r.spike_factor * self._ema + 1e-6):
+            cause = "loss_spike"
+        else:
+            snr = metrics.get("probe_snr")
+            if (r.min_snr is not None and snr is not None
+                    and math.isfinite(snr) and snr < r.min_snr):
+                cause = "snr_collapse"
+
+        if cause is not None:
+            self.consecutive += 1
+            self.escalate_left = r.escalate_steps
+            self.trips.append({"step": int(step), "cause": cause})
+        else:
+            self.consecutive = 0
+            if self.escalate_left > 0:
+                self.escalate_left -= 1
+            if loss is not None and math.isfinite(loss):
+                d = 1.0 - r.ema_decay
+                self._ema = (loss if self._ema is None
+                             else (1.0 - d) * self._ema + d * loss)
+                self._clean_steps += 1
+        return cause
+
+    @property
+    def should_rollback(self) -> bool:
+        return (self.rcfg.rollback_after > 0
+                and self.consecutive >= self.rcfg.rollback_after)
+
+    @property
+    def last_cause(self) -> str:
+        return self.trips[-1]["cause"] if self.trips else "unknown"

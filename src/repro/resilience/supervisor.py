@@ -1,0 +1,146 @@
+"""Retry/rollback orchestrator: the outermost loop of a resilient run.
+
+:class:`Supervisor` wraps ``trainer.train_loop`` and owns the recovery
+ladder the sentinel cannot climb alone (docs/resilience.md):
+
+  * :class:`~repro.resilience.sentinel.RollbackRequired` (M consecutive
+    trips — escalation to the exact bucket did not help) — restore the
+    newest *verified* checkpoint (CRC-checked; ``train_loop`` auto-resumes)
+    and retry with a per-attempt PRNG salt, so the retried trajectory
+    *resamples* every sketch: a rare bad index draw cannot recur.
+  * :class:`~repro.resilience.faults.DeviceLossFault` (hard fault) — build
+    the surviving mesh (``elastic.surviving_mesh``), re-shard the newest
+    checkpoint onto it (``elastic.resume_on_mesh``), rebind the runtime's
+    execution config to the new mesh, and continue.
+
+Every recovery is recorded — cause, steps lost, wall-time cost — through
+the runtime's telemetry sinks and kept on ``Supervisor.events``;
+``benchmarks/bench_resilience.py`` distills them into wasted-work fraction
+and steps-to-recover.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Iterable, Optional
+
+from repro.resilience.faults import DeviceLossFault, FaultInjector
+from repro.resilience.sentinel import RollbackRequired
+
+__all__ = ["Supervisor"]
+
+
+class Supervisor:
+    """Run ``train_loop`` to completion across rollbacks and device loss.
+
+    ``runtime.execution.resilience`` must be set (a default
+    :class:`~repro.resilience.ResilienceConfig` is installed if absent —
+    the supervisor is pointless without the sentinel/fault plumbing).
+    Rollback recovery requires ``tcfg.ckpt_dir``; without one, a rollback
+    restarts from scratch (recorded as such).
+    """
+
+    def __init__(self, runtime, cfg, opt, tcfg, *, fault_plan=None):
+        from repro.resilience import ResilienceConfig
+
+        if runtime.execution.resilience is None:
+            runtime = runtime.replace(
+                execution=runtime.execution.replace(
+                    resilience=ResilienceConfig()))
+        self.runtime = runtime
+        self.cfg = cfg
+        self.opt = opt
+        self.tcfg = tcfg
+        self.injector = FaultInjector.wrap(fault_plan)
+        self.events: list = []
+        self.recoveries = 0
+
+    # -- event plumbing ------------------------------------------------------
+
+    def _record(self, rec: dict, sink=None):
+        self.events.append(dict(rec))
+        if sink is not None:
+            sink.write(dict(rec))
+
+    # -- recovery actions ----------------------------------------------------
+
+    def _remesh(self, mesh_shape):
+        """Rebind the runtime onto the surviving mesh (same axis names)."""
+        from repro.train import elastic
+
+        ex = self.runtime.execution
+        new_mesh = elastic.surviving_mesh(ex.mesh, mesh_shape)
+        act = ex.act_sharding
+        if act is not None and hasattr(act, "spec"):
+            from jax.sharding import NamedSharding
+
+            act = NamedSharding(new_mesh, act.spec)
+        self.runtime = self.runtime.replace(
+            execution=ex.replace(mesh=new_mesh, act_sharding=act))
+        return new_mesh
+
+    # -- the loop ------------------------------------------------------------
+
+    def run(self, data: Iterable, *, state=None,
+            on_metrics: Optional[Callable] = None):
+        """Returns ``(final_state, history)`` — history stitched across
+        attempts; recovery events on ``self.events`` and the sinks."""
+        from repro.telemetry import sinks as tsinks
+        from repro.train import checkpoint as ckptlib
+        from repro.train import elastic, trainer
+
+        rcfg = self.runtime.execution.resilience
+        sink = tsinks.build_sinks(self.runtime.execution.telemetry)
+        history: list = []
+        attempt = 0
+        try:
+            while True:
+                try:
+                    state, hist = trainer.train_loop(
+                        self.runtime, self.cfg, self.opt, data, self.tcfg,
+                        state=state, faults=self.injector,
+                        seed_salt=attempt, on_event=self.events.append,
+                        on_metrics=on_metrics)
+                    history.extend(hist)
+                    return state, history
+                except RollbackRequired as e:
+                    history.extend(e.history)
+                    self._bump(e, rcfg)
+                    attempt += 1
+                    t0 = time.perf_counter()
+                    resume = (ckptlib.latest_verified_step(self.tcfg.ckpt_dir)
+                              if self.tcfg.ckpt_dir else None)
+                    state = None  # train_loop auto-restores (verified) or re-inits
+                    self._record(tsinks.recovery_record(
+                        "rollback", step=e.step, cause=e.cause,
+                        resume_step=int(resume or 0),
+                        steps_lost=e.step + 1 - int(resume or 0),
+                        wall_s=time.perf_counter() - t0), sink)
+                except DeviceLossFault as e:
+                    history.extend(e.history)
+                    self._bump(e, rcfg)
+                    attempt += 1
+                    if not self.tcfg.ckpt_dir:
+                        raise
+                    t0 = time.perf_counter()
+                    old = self.runtime.execution.mesh
+                    old_shape = tuple(old.devices.shape) if old is not None else ()
+                    new_mesh = self._remesh(e.mesh_shape)
+                    state, resume = elastic.resume_on_mesh(
+                        self.tcfg.ckpt_dir, e.state, new_mesh)
+                    self._record(tsinks.recovery_record(
+                        "device_loss_reshard", step=e.step, cause="device_loss",
+                        resume_step=int(resume),
+                        steps_lost=e.step - int(resume),
+                        old_mesh=list(old_shape),
+                        new_mesh=list(e.mesh_shape),
+                        wall_s=time.perf_counter() - t0), sink)
+        finally:
+            if sink is not None:
+                sink.close()
+
+    def _bump(self, exc, rcfg):
+        self.recoveries += 1
+        if self.recoveries > rcfg.max_recoveries:
+            raise RuntimeError(
+                f"supervisor exceeded max_recoveries={rcfg.max_recoveries}"
+            ) from exc

@@ -50,21 +50,48 @@ class Engine:
         self._decode = jax.jit(self.runtime.decode_step(cfg))
         self.counters = {"batches": 0, "prefill_calls": 0, "prefill_tokens": 0,
                          "decode_steps": 0, "tokens_out": 0,
+                         "truncated_tokens": 0, "dead_slot_steps": 0,
                          "prefill_s": 0.0, "decode_s": 0.0}
         self.ring = RingSink(capacity=256)
 
     def run(self, requests: List[Request]) -> List[Request]:
-        """Serve a list of requests in fixed-size batches."""
+        """Serve a list of requests in fixed-size batches.
+
+        Admission checks up front (before any device work): an empty prompt
+        is rejected, as is a ``max_new`` that cannot fit the engine's
+        ``max_len`` KV budget even with the whole prompt truncated away.
+        Over-long prompts are *left*-truncated to ``max_len - max_new`` —
+        the most recent context survives — and the dropped token count is
+        recorded (``counters["truncated_tokens"]`` + the per-batch ring).
+        """
+        for i, r in enumerate(requests):
+            if len(r.prompt) == 0:
+                raise ValueError(f"request {i}: empty prompt")
+            if r.max_new <= 0:
+                raise ValueError(f"request {i}: max_new must be >= 1, "
+                                 f"got {r.max_new}")
+            if r.max_new >= self.max_len:
+                raise ValueError(
+                    f"request {i}: max_new={r.max_new} leaves no room for "
+                    f"any prompt token within max_len={self.max_len}")
         for i in range(0, len(requests), self.batch):
             self._run_batch(requests[i:i + self.batch])
         return requests
 
     def _run_batch(self, reqs: List[Request]):
         B = len(reqs)
-        plen = max(len(r.prompt) for r in reqs)
+        prompts, truncated = [], 0
+        for r in reqs:
+            p = np.asarray(r.prompt, np.int32)
+            keep = self.max_len - r.max_new
+            if len(p) > keep:
+                truncated += len(p) - keep
+                p = p[-keep:]  # keep the most recent context
+            prompts.append(p)
+        plen = max(len(p) for p in prompts)
         toks = np.zeros((B, plen), np.int32)
-        for j, r in enumerate(reqs):
-            toks[j, plen - len(r.prompt):] = r.prompt  # left-pad
+        for j, p in enumerate(prompts):
+            toks[j, plen - len(p):] = p  # left-pad
         toks = jnp.asarray(toks)
         if B < self.batch:
             toks = jnp.pad(toks, ((0, self.batch - B), (0, 0)))
@@ -73,13 +100,16 @@ class Engine:
         cur = greedy_sample(logits[:, -1:])
         jax.block_until_ready(cur)
         t_prefill = time.perf_counter() - t0
-        outs = [[] for _ in range(self.batch)]
+        outs = [[] for _ in range(B)]
         max_new = max(r.max_new for r in reqs)
         pos = plen
         t0 = time.perf_counter()
         for _ in range(max_new):
-            for j in range(self.batch):
-                outs[j].append(int(cur[j, 0]))
+            # one B-element host transfer per step — padded dead slots (and
+            # their per-slot int() syncs) never reach the host
+            step_tok = np.asarray(cur[:B, 0])
+            for j in range(B):
+                outs[j].append(int(step_tok[j]))
             logits, caches = self._decode(self.params, caches, cur, pos)
             cur = greedy_sample(logits)
             pos += 1
@@ -94,10 +124,13 @@ class Engine:
         c["prefill_tokens"] += B * plen
         c["decode_steps"] += max_new
         c["tokens_out"] += tokens_out
+        c["truncated_tokens"] += truncated
+        c["dead_slot_steps"] += (self.batch - B) * max_new
         c["prefill_s"] += t_prefill
         c["decode_s"] += t_decode
         self.ring.write({"batch": B, "prompt_len": plen, "decode_steps": max_new,
-                         "tokens_out": tokens_out, "prefill_s": t_prefill,
+                         "tokens_out": tokens_out, "truncated_tokens": truncated,
+                         "dead_slots": self.batch - B, "prefill_s": t_prefill,
                          "decode_s": t_decode})
         return reqs
 

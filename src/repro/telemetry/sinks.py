@@ -32,7 +32,19 @@ from repro.core.compact_grad import _site_role, compact_rank
 from repro.core.sketching import COLUMN_METHODS
 
 __all__ = ["Sink", "JsonlSink", "CsvSink", "RingSink", "MultiSink",
-           "build_sinks", "site_cost_table", "table_totals", "join_hlo_cost"]
+           "build_sinks", "recovery_record", "site_cost_table", "table_totals",
+           "join_hlo_cost"]
+
+
+def recovery_record(event: str, **fields) -> dict:
+    """One resilience event as a sink record: ``{"event": <kind>, ...}``.
+
+    The trainer/supervisor route every sentinel trip, rollback, checkpoint
+    IO recovery and elastic re-shard through this shape so offline analysis
+    (``benchmarks/bench_resilience.py``) can filter the JSONL stream on the
+    ``event`` key alone; regular step records never carry one.
+    """
+    return dict({"event": str(event)}, **fields)
 
 
 def _scalars(record: dict) -> dict:

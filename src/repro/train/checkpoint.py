@@ -1,4 +1,4 @@
-"""Fault-tolerant checkpointing: atomic, sharded, async, mesh-elastic.
+"""Fault-tolerant checkpointing: atomic, sharded, async, mesh-elastic, verified.
 
 Design (DESIGN.md §4):
   * atomic: write to ``step_<n>.tmp/`` then ``os.rename`` — a crash mid-save
@@ -8,29 +8,69 @@ Design (DESIGN.md §4):
     process saves only the addressable shards of its leaves (process 0 saves
     replicated leaves); this container is single-process so leaves are whole.
   * async: ``save_async`` snapshots to host memory (device_get) and writes in
-    a background thread — training continues during I/O.
+    a background thread — training continues during I/O. The writer thread
+    *captures* its exception: :meth:`CheckpointManager.wait` (and hence the
+    next ``maybe_save``) re-raises it as :class:`CheckpointError` instead of
+    letting the failure die silently on a daemon thread.
   * elastic: restore takes only (tree structure, target shardings); because
     every leaf is saved as a full logical array, a checkpoint from a (16,16)
     mesh restores onto (2,16,16) or (4,8) meshes unchanged — re-sharding
     happens at ``device_put`` (tested in tests/test_checkpoint.py with fake
     device counts).
+  * verified: the manifest (version 2) records a CRC32 per leaf, computed
+    over the exact ``.npy`` bytes written. :func:`verify` re-hashes the files;
+    :func:`restore` refuses a corrupt/truncated checkpoint — falling back to
+    the newest *verified* step when picking automatically, raising
+    :class:`CheckpointError` when the step was requested explicitly. The
+    resilience drill's ``ckpt_io`` fault rides :func:`inject_fault_once`.
 """
 from __future__ import annotations
 
+import io
 import json
 import os
 import re
 import shutil
 import threading
+import warnings
+import zlib
 
 import jax
 import numpy as np
 
 from repro import compat
 
-__all__ = ["save", "save_async", "restore", "latest_step", "CheckpointManager"]
+__all__ = ["CheckpointError", "save", "save_async", "restore", "latest_step",
+           "latest_verified_step", "verify", "inject_fault_once",
+           "CheckpointManager"]
 
 _SEP = "__"
+
+
+class CheckpointError(RuntimeError):
+    """A checkpoint write failed (sync, or async surfaced on ``wait()``) or a
+    requested checkpoint failed CRC verification."""
+
+
+# -- fault injection hook (repro.resilience) ----------------------------------
+# arm once; the next _write (sync or async) raises before touching disk —
+# deterministic stand-in for a failing/filled filesystem in the tier-1 drill.
+
+_fault_lock = threading.Lock()
+_fault_armed = [False]
+
+
+def inject_fault_once():
+    """Arm a one-shot IO failure for the next checkpoint write."""
+    with _fault_lock:
+        _fault_armed[0] = True
+
+
+def _take_fault() -> bool:
+    with _fault_lock:
+        armed = _fault_armed[0]
+        _fault_armed[0] = False
+        return armed
 
 
 def _flatten(tree):
@@ -56,16 +96,36 @@ def save(ckpt_dir: str, step: int, tree, *, keep: int = 3):
     _write(ckpt_dir, step, host_tree, keep)
 
 
-def save_async(ckpt_dir: str, step: int, tree, *, keep: int = 3) -> threading.Thread:
-    """Snapshot to host, write in background. Returns the writer thread."""
+class _Writer(threading.Thread):
+    """Async checkpoint writer. A raised exception is captured on
+    ``self.error`` (not swallowed by the dying daemon thread) and re-raised
+    as :class:`CheckpointError` by :meth:`CheckpointManager.wait`."""
+
+    def __init__(self, ckpt_dir, step, host_tree, keep):
+        super().__init__(daemon=True)
+        self.error: BaseException | None = None
+        self._job = (ckpt_dir, step, host_tree, keep)
+
+    def run(self):
+        try:
+            _write(*self._job)
+        except BaseException as e:  # captured for wait(); never swallowed
+            self.error = e
+
+
+def save_async(ckpt_dir: str, step: int, tree, *, keep: int = 3) -> _Writer:
+    """Snapshot to host, write in background. Returns the writer thread;
+    check ``.error`` after ``.join()`` (CheckpointManager does both)."""
     host_tree = compat.tree_map(lambda x: np.asarray(jax.device_get(x)), tree)
-    t = threading.Thread(target=_write, args=(ckpt_dir, step, host_tree, keep),
-                         daemon=True)
+    t = _Writer(ckpt_dir, step, host_tree, keep)
     t.start()
     return t
 
 
 def _write(ckpt_dir, step, host_tree, keep):
+    if _take_fault():
+        raise CheckpointError(
+            f"injected IO fault writing step {step} (inject_fault_once)")
     os.makedirs(ckpt_dir, exist_ok=True)
     final = os.path.join(ckpt_dir, f"step_{step:012d}")
     tmp = final + ".tmp"
@@ -73,9 +133,17 @@ def _write(ckpt_dir, step, host_tree, keep):
         shutil.rmtree(tmp)
     os.makedirs(tmp)
     flat = _flatten(host_tree)
-    manifest = {"step": int(step), "keys": sorted(flat.keys()), "version": 1}
+    crc = {}
     for k, v in flat.items():
-        np.save(os.path.join(tmp, k + ".npy"), v)
+        # hash the exact bytes that hit disk, so verify() is a pure re-read
+        buf = io.BytesIO()
+        np.save(buf, v)
+        data = buf.getvalue()
+        crc[k] = zlib.crc32(data) & 0xFFFFFFFF
+        with open(os.path.join(tmp, k + ".npy"), "wb") as f:
+            f.write(data)
+    manifest = {"step": int(step), "keys": sorted(flat.keys()), "version": 2,
+                "crc": crc}
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f)
     if os.path.exists(final):
@@ -106,16 +174,70 @@ def latest_step(ckpt_dir: str):
     return max(steps) if steps else None
 
 
+def verify(ckpt_dir: str, step: int) -> bool:
+    """CRC-check every leaf of ``step`` against its manifest.
+
+    A version-1 manifest (pre-CRC) has nothing to check and verifies
+    trivially; a missing/truncated/bit-flipped ``.npy`` fails.
+    """
+    d = os.path.join(ckpt_dir, f"step_{step:012d}")
+    try:
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+    except (OSError, ValueError):
+        return False
+    crc = manifest.get("crc")
+    if crc is None:
+        return True  # legacy manifest: no hashes recorded
+    for k in manifest.get("keys", []):
+        try:
+            with open(os.path.join(d, k + ".npy"), "rb") as f:
+                data = f.read()
+        except OSError:
+            return False
+        if (zlib.crc32(data) & 0xFFFFFFFF) != crc.get(k):
+            return False
+    return True
+
+
+def latest_verified_step(ckpt_dir: str):
+    """Newest step whose every leaf passes CRC; None if no step does."""
+    for s in sorted(_all_steps(ckpt_dir), reverse=True):
+        if verify(ckpt_dir, s):
+            return s
+    return None
+
+
 def restore(ckpt_dir: str, tree_like, *, step=None, shardings=None):
     """Restore into the structure of ``tree_like``; optionally re-shard.
 
     ``shardings``: a congruent tree of NamedShardings (elastic restore onto a
     *different* mesh than the one that saved) — or None for host arrays.
+
+    With ``step=None`` the newest checkpoint is CRC-verified first; a corrupt
+    newest falls back to the newest *verified* step (with a warning), and
+    :class:`CheckpointError` is raised only when no step verifies. An
+    explicit ``step`` that fails verification raises — the caller asked for
+    that exact state and must not silently get another.
     """
     if step is None:
         step = latest_step(ckpt_dir)
         if step is None:
             raise FileNotFoundError(f"no checkpoint in {ckpt_dir}")
+        if not verify(ckpt_dir, step):
+            fallback = latest_verified_step(ckpt_dir)
+            if fallback is None:
+                raise CheckpointError(
+                    f"no verified checkpoint in {ckpt_dir} "
+                    f"(newest step {step} failed CRC)")
+            warnings.warn(
+                f"checkpoint step {step} in {ckpt_dir} failed CRC "
+                f"verification; falling back to verified step {fallback}",
+                stacklevel=2)
+            step = fallback
+    elif not verify(ckpt_dir, step):
+        raise CheckpointError(
+            f"checkpoint step {step} in {ckpt_dir} failed CRC verification")
     d = os.path.join(ckpt_dir, f"step_{step:012d}")
     keys = _flatten(tree_like)
     loaded = {k: np.load(os.path.join(d, k + ".npy")) for k in keys}
@@ -134,7 +256,7 @@ class CheckpointManager:
         self.dir = ckpt_dir
         self.every = every
         self.keep = keep
-        self._pending: threading.Thread | None = None
+        self._pending: _Writer | None = None
 
     def maybe_save(self, step: int, tree):
         if step % self.every != 0:
@@ -144,9 +266,15 @@ class CheckpointManager:
         return True
 
     def wait(self):
-        if self._pending is not None:
-            self._pending.join()
-            self._pending = None
+        """Join the pending write; re-raise its failure as CheckpointError."""
+        t, self._pending = self._pending, None
+        if t is not None:
+            t.join()
+            if t.error is not None:
+                if isinstance(t.error, CheckpointError):
+                    raise t.error
+                raise CheckpointError(
+                    f"async checkpoint write failed: {t.error!r}") from t.error
 
     def restore_or_none(self, tree_like, shardings=None):
         if latest_step(self.dir) is None:

@@ -18,7 +18,41 @@ from repro.launch import sharding as shardlib
 from repro.train import checkpoint as ckptlib
 from repro.train.train_step import TrainState
 
-__all__ = ["resume_on_mesh", "state_shardings"]
+__all__ = ["resume_on_mesh", "state_shardings", "surviving_mesh"]
+
+
+def surviving_mesh(old_mesh, shape, *, axes=None):
+    """Mesh over the *surviving* device set after a simulated loss.
+
+    ``shape`` is the new mesh shape (its product must not exceed the old
+    mesh's device count — survivors are a prefix of the old device order, so
+    a (4,2) run that loses a node resumes on (2,4)'s first 8... or fewer).
+    Axis names default to the old mesh's; with no old mesh, to
+    ``("data", "model")`` truncated to ``len(shape)``.
+    """
+    import math
+
+    from repro import compat
+
+    shape = tuple(int(s) for s in shape)
+    n = math.prod(shape)
+    if old_mesh is not None:
+        devices = list(old_mesh.devices.flat)
+        if axes is None:
+            axes = tuple(old_mesh.axis_names)
+    else:
+        import jax
+
+        devices = jax.devices()
+    if n > len(devices):
+        raise ValueError(f"surviving mesh {shape} needs {n} devices, only "
+                         f"{len(devices)} available")
+    if axes is None:
+        axes = ("data", "model")[:len(shape)]
+    if len(axes) != len(shape):
+        axes = tuple(f"ax{i}" for i in range(len(shape))) if len(axes) < len(shape) \
+            else tuple(axes)[:len(shape)]
+    return compat.make_mesh(shape, tuple(axes), devices=devices[:n])
 
 
 def state_shardings(state_like: TrainState, mesh):

@@ -60,6 +60,14 @@ def make_train_step(cfg: ArchConfig, opt: Optimizer, policy: Optional[SketchPoli
     passes it); the loose kwargs are the legacy spelling and are ignored when
     ``execution`` is given.
 
+    With ``execution.resilience`` set the step instead has the signature
+    ``step_fn(state, batch, key, fault_scale) -> (state, metrics)``:
+    ``fault_scale`` is a *traced* scalar multiplying the loss (1.0 in normal
+    operation — an IEEE bitwise identity — NaN / large values under fault
+    injection), and when ``resilience.sentinel`` is true the optimizer
+    update is gated on an in-graph non-finite/norm-explosion flag reported
+    as ``metrics["sentinel_trip"]`` (see docs/resilience.md).
+
     ``compact_grads=True`` threads per-site gradient slots through the params
     tree so sketched sites' dW comes out of the backward as a
     :class:`~repro.core.compact_grad.CompactGrad` (rows + indices, no
@@ -89,21 +97,28 @@ def make_train_step(cfg: ArchConfig, opt: Optimizer, policy: Optional[SketchPoli
     tel = ex.telemetry
     telemetry_on = (tel is not None and tel.probes and policy is not None
                     and accum == 1)
+    rcfg = ex.resilience
 
     def ctx_for(key):
         return ex.make_ctx(policy=policy, key=key)
 
-    def loss_fn(params, batch, key):
+    def loss_fn(params, batch, key, fault_scale):
         total, metrics = lm.lm_loss(params, batch, ctx_for(key), cfg, key)
+        if rcfg is not None:
+            # traced operand: fault injection (NaN / spike multipliers on the
+            # loss, hence on every cotangent) without a recompile per fault;
+            # x * 1.0 is an IEEE bitwise identity, so the clean path is
+            # bit-identical to a resilience-off step
+            total = total * fault_scale
         return total, metrics
 
     grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
 
-    def one_micro(params, batch, key):
-        (loss, metrics), grads = grad_fn(params, batch, key)
+    def one_micro(params, batch, key, fault_scale):
+        (loss, metrics), grads = grad_fn(params, batch, key, fault_scale)
         return loss, metrics, grads
 
-    def step_fn(state: TrainState, batch, key):
+    def base_step(state: TrainState, batch, key, fault_scale):
         probe_metrics = {}
         if accum == 1:
             params_in = state.params
@@ -119,7 +134,7 @@ def make_train_step(cfg: ArchConfig, opt: Optimizer, policy: Optional[SketchPoli
                     params_in, policy, n_layers=cfg.n_layers, mesh=ex.mesh,
                     data_axes=ex.data_axes, model_axes=ex.model_axes,
                     tp_sketch=ex.tp_sketch)
-            loss, metrics, grads = one_micro(params_in, batch, key)
+            loss, metrics, grads = one_micro(params_in, batch, key, fault_scale)
             if telemetry_on:
                 grads, probe_vecs = tprobes.collect_probes(grads)
                 probe_metrics = tprobes.summarize(probe_vecs,
@@ -129,7 +144,8 @@ def make_train_step(cfg: ArchConfig, opt: Optimizer, policy: Optional[SketchPoli
         else:
             def micro(carry, xs):
                 mb, mkey = xs
-                loss, metrics, grads = one_micro(state.params, mb, mkey)
+                loss, metrics, grads = one_micro(state.params, mb, mkey,
+                                                 fault_scale)
                 acc_loss, acc_grads = carry
                 return (acc_loss + loss / accum,
                         compat.tree_map(lambda a, g: a + g / accum, acc_grads, grads)), metrics
@@ -147,10 +163,30 @@ def make_train_step(cfg: ArchConfig, opt: Optimizer, policy: Optional[SketchPoli
             (loss, grads), metrics = jax.lax.scan(micro, (jnp.zeros(()), zeros), (mbs, keys))
             metrics = compat.tree_map(lambda m: m[-1], metrics)
         new_params, new_opt = opt.update(grads, state.opt_state, state.params, state.step)
+        gn = _global_norm(grads)
+        if rcfg is not None and rcfg.sentinel:
+            from repro.resilience.sentinel import gate_update, trip_flag
+
+            # one scalar out of quantities the step already materializes;
+            # a tripped step keeps the old params AND opt state (the moment
+            # buffers must not ingest a poisoned gradient) — the step
+            # counter still advances so the schedule/PRNG stay on track
+            ok, tripped = trip_flag(loss, gn, rcfg.max_grad_norm)
+            new_params = gate_update(ok, new_params, state.params)
+            new_opt = gate_update(ok, new_opt, state.opt_state)
+            probe_metrics = dict(probe_metrics, sentinel_trip=tripped)
         new_state = TrainState(params=new_params, opt_state=new_opt, step=state.step + 1)
-        metrics = dict(metrics, loss=loss,
-                       grad_norm=_global_norm(grads), **probe_metrics)
+        metrics = dict(metrics, loss=loss, grad_norm=gn, **probe_metrics)
         return new_state, metrics
+
+    if rcfg is None:
+        # the historical three-argument step: bit-compatible executables,
+        # unchanged golden traces
+        def step_fn(state: TrainState, batch, key):
+            return base_step(state, batch, key, jnp.float32(1.0))
+    else:
+        def step_fn(state: TrainState, batch, key, fault_scale):
+            return base_step(state, batch, key, fault_scale)
 
     return step_fn
 

@@ -15,6 +15,7 @@ constructs a Runtime internally and warns once.
 from __future__ import annotations
 
 import dataclasses
+import time
 import warnings
 from typing import Callable, Iterable, Optional
 
@@ -26,6 +27,7 @@ from repro.api import Runtime
 from repro.configs.base import ArchConfig
 from repro.core import SketchPolicy
 from repro.optim import Optimizer
+from repro.train import checkpoint as ckptlib
 from repro.train.checkpoint import CheckpointManager
 from repro.train.train_step import TrainState, init_state
 
@@ -93,7 +95,9 @@ def _policy_can_probe(policy, execution=None) -> bool:
 def train_loop(runtime: Runtime, cfg: ArchConfig, opt: Optimizer,
                data: Iterable, tcfg: Optional[TrainerConfig] = None, *,
                state: Optional[TrainState] = None,
-               on_metrics: Optional[Callable] = None):
+               on_metrics: Optional[Callable] = None,
+               faults=None, seed_salt: int = 0,
+               on_event: Optional[Callable] = None):
     """Run the loop under ``runtime``; returns (final_state, history).
 
     One train step is compiled per distinct budget in
@@ -109,6 +113,20 @@ def train_loop(runtime: Runtime, cfg: ArchConfig, opt: Optimizer,
     automatically when the execution config has no telemetry — and its
     controller consumes the host-fetched ``probe_snr`` between steps to pick
     the next (pre-compiled) bucket: no recompiles, ever.
+
+    Resilience (``runtime.execution.resilience`` set; docs/resilience.md):
+    the compiled steps take a traced ``fault_scale`` operand, a
+    :class:`~repro.resilience.GradSentinel` digests the per-step scalars —
+    skipped updates surface as ``sentinel_trip``, trips force the exact
+    bucket for K steps, and M consecutive trips raise
+    :class:`~repro.resilience.RollbackRequired` for the supervisor.
+    ``faults`` is a :class:`~repro.resilience.FaultPlan` (or a supervisor's
+    :class:`~repro.resilience.FaultInjector`); ``seed_salt`` folds an extra
+    term into every step key so a retried trajectory resamples its sketches;
+    ``on_event`` receives every fault/trip/recovery record (the records also
+    go to the telemetry sinks). A failed async checkpoint write surfaces as
+    :class:`~repro.train.checkpoint.CheckpointError` here — with resilience
+    enabled it is recorded and retried synchronously instead of raising.
     """
     tcfg = tcfg or TrainerConfig()
     schedule = runtime.schedule
@@ -136,6 +154,20 @@ def train_loop(runtime: Runtime, cfg: ArchConfig, opt: Optimizer,
             "column-family method + an estimator with the probe hook or a "
             "TP-shardable plan) — the controller will hold its first "
             "bucket; see docs/telemetry.md", stacklevel=2)
+    rcfg = runtime.execution.resilience
+    if faults is not None and rcfg is None:
+        raise ValueError(
+            "faults= requires runtime.execution.resilience (the compiled "
+            "step needs its traced fault_scale operand) — set "
+            "ExecutionConfig(resilience=ResilienceConfig())")
+    injector = sentinel = None
+    if rcfg is not None:
+        from repro.resilience.faults import DeviceLossFault, FaultInjector
+        from repro.resilience.sentinel import GradSentinel, RollbackRequired
+
+        injector = FaultInjector.wrap(faults)
+        if rcfg.sentinel:
+            sentinel = GradSentinel(rcfg)
     key = compat.prng_key(tcfg.seed)
     if state is None:
         state = init_state(jax.random.fold_in(key, 0), cfg, opt)
@@ -147,9 +179,14 @@ def train_loop(runtime: Runtime, cfg: ArchConfig, opt: Optimizer,
             state, step0 = restored
             print(f"[trainer] resumed from step {step0}")
 
-    # pre-built budget buckets: one compiled step per distinct budget
+    # pre-built budget buckets: one compiled step per distinct budget; the
+    # sentinel's escalation target (exact, i.e. None) is added when the
+    # schedule alone would never compile it
+    buckets = schedule.buckets()
+    if sentinel is not None and None not in buckets:
+        buckets = buckets + (None,)
     steps_by_budget = {b: runtime.train_step(cfg, opt, budget=b)
-                       for b in schedule.buckets()}
+                       for b in buckets}
     controller = schedule.make_controller(policy=runtime.policy)
     fetch_each_step = bool(controller is not None
                            and getattr(controller, "wants_metrics", False))
@@ -157,44 +194,125 @@ def train_loop(runtime: Runtime, cfg: ArchConfig, opt: Optimizer,
 
     sink = tsinks.build_sinks(tel)
 
+    def emit(rec: dict):
+        if sink is not None:
+            sink.write(dict(rec))
+        if on_event is not None:
+            on_event(dict(rec))
+
+    def ckpt_wait_safe():
+        # a pending async write may carry a CheckpointError; before raising a
+        # recovery fault we drain it so the supervisor sees a settled
+        # directory (with resilience on, the write error is recorded — the
+        # rollback target is the newest *verified* checkpoint anyway)
+        if ckpt is None:
+            return
+        try:
+            ckpt.wait()
+        except ckptlib.CheckpointError as e:
+            emit({"event": "ckpt_io_error", "step": step, "error": str(e)})
+
     history = []
     data_it = iter(data)
     start_step = int(jax.device_get(state.step))
-    for step in range(start_step, tcfg.steps):
-        batch = next(data_it)
-        step_key = jax.random.fold_in(key, step + 1)
-        budget = controller.budget if controller else schedule.budget_at(step)
-        fn = steps_by_budget[budget]
-        if controller:
-            controller.step_begin()
-        state, metrics = fn(state, batch, step_key)
-        host_m = None  # full fetch (sink/log cadence only)
-        if controller:
-            jax.block_until_ready(metrics["loss"])
-            # per-step fetch stays scalars-only: the controller consumes one
-            # scalar (probe_snr); per-site vectors are fetched on sink/log
-            # steps below
-            controller.step_end(_host_metrics(metrics, scalars_only=True)
-                                if fetch_each_step else None)
-        if sink is not None and step % tel.interval == 0:
-            host_m = _host_metrics(metrics)
-            sink.write(dict(host_m, step=step, budget=budget))
-        if step % tcfg.log_every == 0 or step == tcfg.steps - 1:
-            m = host_m if host_m is not None else _host_metrics(metrics)
-            m = dict(m, step=step, budget=budget)
-            history.append(m)
-            if on_metrics:
-                on_metrics(m)
+    try:
+        for step in range(start_step, tcfg.steps):
+            batch = next(data_it)
+            fscale = 1.0
+            if injector is not None:
+                fault = injector.take(step)
+                if fault is not None:
+                    emit({"event": "fault_injected", "step": step,
+                          "kind": fault.kind})
+                    if fault.kind == "device_loss":
+                        ckpt_wait_safe()
+                        raise DeviceLossFault(step, fault.mesh_shape,
+                                              history=history, state=state)
+                    if fault.kind == "slow":
+                        time.sleep(fault.sleep_s)
+                    elif fault.kind == "ckpt_io":
+                        if ckpt is not None:
+                            ckptlib.inject_fault_once()
+                    elif fault.kind == "nonfinite":
+                        fscale = float("nan")
+                    elif fault.kind == "spike":
+                        fscale = fault.scale
+            step_key = jax.random.fold_in(key, step + 1)
+            if seed_salt:
+                # retried trajectories resample their sketches; salt 0 is
+                # skipped entirely so the first attempt stays bit-identical
+                # to a resilience-off run
+                step_key = jax.random.fold_in(step_key, seed_salt)
+            budget = controller.budget if controller else schedule.budget_at(step)
+            if sentinel is not None:
+                budget = sentinel.override(budget)
+            fn = steps_by_budget[budget]
+            if controller:
+                controller.step_begin()
+            if rcfg is not None:
+                state, metrics = fn(state, batch, step_key, fscale)
             else:
-                b = "exact" if budget is None else f"{budget:.2f}"
-                print(f"[trainer] step {step:6d} loss {m['loss']:.4f} "
-                      f"budget {b}")
+                state, metrics = fn(state, batch, step_key)
+            host_m = None  # full fetch (sink/log cadence only)
+            host_scalars = None
+            if controller or sentinel is not None:
+                jax.block_until_ready(metrics["loss"])
+                # per-step fetch stays scalars-only: the controller consumes
+                # one scalar (probe_snr), the sentinel a handful; per-site
+                # vectors are fetched on sink/log steps below
+                if fetch_each_step or sentinel is not None:
+                    host_scalars = _host_metrics(metrics, scalars_only=True)
+            if controller:
+                controller.step_end(host_scalars if fetch_each_step else None)
+            if sentinel is not None:
+                cause = sentinel.observe(step, host_scalars)
+                if cause is not None:
+                    emit(tsinks.recovery_record(
+                        "sentinel_trip", step=step, cause=cause,
+                        escalate_steps=rcfg.escalate_steps,
+                        consecutive=sentinel.consecutive))
+                if sentinel.should_rollback:
+                    # raise BEFORE maybe_save: a state the sentinel cannot
+                    # stabilise must never reach a checkpoint
+                    ckpt_wait_safe()
+                    raise RollbackRequired(step, sentinel.last_cause,
+                                           history=history)
+            if sink is not None and step % tel.interval == 0:
+                host_m = _host_metrics(metrics)
+                sink.write(dict(host_m, step=step, budget=budget))
+            if step % tcfg.log_every == 0 or step == tcfg.steps - 1:
+                m = host_m if host_m is not None else _host_metrics(metrics)
+                m = dict(m, step=step, budget=budget)
+                history.append(m)
+                if on_metrics:
+                    on_metrics(m)
+                else:
+                    b = "exact" if budget is None else f"{budget:.2f}"
+                    print(f"[trainer] step {step:6d} loss {m['loss']:.4f} "
+                          f"budget {b}")
+            if ckpt is not None:
+                try:
+                    ckpt.maybe_save(step + 1, state)
+                except ckptlib.CheckpointError as e:
+                    if rcfg is None:
+                        raise
+                    # the failed async write is retried synchronously: one
+                    # recorded hiccup, no lost checkpoint cadence
+                    emit({"event": "ckpt_io_recovered", "step": step,
+                          "error": str(e)})
+                    ckptlib.save(ckpt.dir, step + 1, state, keep=ckpt.keep)
         if ckpt is not None:
-            ckpt.maybe_save(step + 1, state)
-    if ckpt is not None:
-        ckpt.wait()
-    if sink is not None:
-        sink.close()
+            try:
+                ckpt.wait()
+            except ckptlib.CheckpointError as e:
+                if rcfg is None:
+                    raise
+                emit({"event": "ckpt_io_recovered", "step": tcfg.steps,
+                      "error": str(e)})
+                ckptlib.save(ckpt.dir, tcfg.steps, state, keep=ckpt.keep)
+    finally:
+        if sink is not None:
+            sink.close()
     return state, history
 
 

@@ -22,6 +22,7 @@ import pytest
     "benchmarks.bench_distributed",
     "benchmarks.bench_backward_fusion",
     "benchmarks.bench_adaptive",
+    "benchmarks.bench_resilience",
 ])
 def test_bench_module_imports(mod):
     importlib.import_module(mod)

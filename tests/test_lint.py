@@ -29,6 +29,8 @@ _BAD = [
     ("bad_prng_reuse.py", "prng-key-reuse", {8}),
     ("bad_host_sync.py", "host-sync-in-jit", {11, 12, 13, 18}),
     ("bad_tracer_branch.py", "tracer-branch", {7, 9}),
+    ("bad_swallowed.py", "swallowed-exception", {8, 16}),
+    ("bad_thread.py", "thread-uncaptured-target", {10, 16}),
 ]
 
 _GOOD = [
@@ -38,6 +40,8 @@ _GOOD = [
     "good_prng_reuse.py",
     "good_host_sync.py",
     "good_tracer_branch.py",
+    "good_swallowed.py",
+    "good_thread.py",
 ]
 
 

@@ -1,7 +1,9 @@
-"""Serving: engine batched decode == sequential reference decoding."""
+"""Serving: engine batched decode == sequential reference decoding, plus
+the hardened admission path (empty prompts, over-long prompts, dead slots)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs.base import ArchConfig
 from repro.models import lm
@@ -59,3 +61,59 @@ def test_multi_step_decode_matches_full_forward():
         lg, caches = lm.decode_step(params, caches, toks[:, i:i + 1], i, Ctx(), CFG)
         np.testing.assert_allclose(np.asarray(lg[:, 0]), np.asarray(full[:, i]),
                                    rtol=3e-4, atol=3e-4)
+
+
+# ---------------------------------------------------------------------------
+# hardening: admission checks, truncation, dead slots
+# ---------------------------------------------------------------------------
+
+
+def _params():
+    return lm.init_params(jax.random.key(0), CFG)
+
+
+def test_engine_rejects_empty_prompt():
+    eng = Engine(_params(), CFG, batch=2, max_len=32)
+    with pytest.raises(ValueError, match="empty prompt"):
+        eng.run([Request(prompt=np.zeros(0, np.int32), max_new=4)])
+    assert eng.counters["batches"] == 0  # rejected before any device work
+
+
+def test_engine_rejects_unservable_max_new():
+    eng = Engine(_params(), CFG, batch=2, max_len=16)
+    p = np.ones(4, np.int32)
+    with pytest.raises(ValueError, match="max_new"):
+        eng.run([Request(prompt=p, max_new=16)])
+    with pytest.raises(ValueError, match="max_new"):
+        eng.run([Request(prompt=p, max_new=0)])
+
+
+def test_overlong_prompt_left_truncated_and_recorded():
+    params = _params()
+    rng = np.random.default_rng(3)
+    long = rng.integers(1, CFG.vocab, size=40).astype(np.int32)
+    max_new = 4
+    eng = Engine(params, CFG, batch=2, max_len=32)
+    [req] = eng.run([Request(prompt=long, max_new=max_new)])
+    # left-truncation: the engine served the most recent max_len - max_new
+    # tokens; output equals the reference decode of that suffix
+    keep = long[-(32 - max_new):]
+    assert req.out.tolist() == _reference_decode(params, keep, max_new, 32)
+    dropped = len(long) - len(keep)
+    assert eng.counters["truncated_tokens"] == dropped
+    assert eng.ring.records[-1]["truncated_tokens"] == dropped
+
+
+def test_dead_slots_recorded_and_not_collected():
+    params = _params()
+    rng = np.random.default_rng(4)
+    prompts = [rng.integers(1, CFG.vocab, size=9).astype(np.int32)
+               for _ in range(2)]
+    eng = Engine(params, CFG, batch=4, max_len=32)
+    reqs = eng.run([Request(prompt=p, max_new=4) for p in prompts])
+    # two live slots in a batch of four: padding decoded on device but never
+    # per-slot-synced to host
+    assert eng.counters["dead_slot_steps"] == 2 * 4
+    assert eng.ring.records[-1]["dead_slots"] == 2
+    for r, p in zip(reqs, prompts):
+        assert r.out.tolist() == _reference_decode(params, p, 4, 32)
