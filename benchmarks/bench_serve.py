@@ -1,0 +1,147 @@
+"""Serving benchmark: continuous batching vs the run-to-completion baseline.
+
+One mixed workload — heterogeneous prompt lengths AND heterogeneous
+``max_new`` (the regime where run-to-completion wastes the most decode work:
+every short request idles its slot until the batch straggler finishes) — is
+served three ways:
+
+* ``legacy`` — :class:`repro.serve.legacy.RunToCompletionEngine`,
+* ``contiguous`` — the continuous engine with slot-major caches,
+* ``paged`` — the continuous engine with the paged KV pool + packed
+  bucketed prefill.
+
+All three must produce byte-identical greedy tokens per request (asserted
+here, not just in tests); what differs is the *cost*: tokens/s on the same
+useful-token count, per-request p50/p99 latency and TTFT (continuous engines
+only — the baseline has no per-request stamps to report), wasted decode
+steps, and XLA compile counts (the paged engine's bucketed prefill compiles
+once per bucket; the baseline retraces per distinct padded prompt length).
+
+Headline number (``results/bench/serve.json`` → ``BENCH_summary.json``):
+``continuous_vs_legacy_tok_per_s`` — paged-continuous throughput over the
+baseline on the same workload (>1 means continuous batching wins).
+
+Usage: PYTHONPATH=src python -m benchmarks.bench_serve [--full]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import save_result
+from repro.configs.base import ArchConfig
+from repro.models import lm
+from repro.serve.config import ServeConfig
+from repro.serve.engine import Engine, Request
+from repro.serve.legacy import RunToCompletionEngine
+
+
+def _arch(tiny: bool) -> ArchConfig:
+    if tiny:
+        return ArchConfig(name="serve-bench-tiny", family="dense", n_layers=2,
+                          d_model=64, n_heads=4, n_kv=2, d_ff=128, vocab=256,
+                          q_chunk=32, kv_chunk=32)
+    return ArchConfig(name="serve-bench", family="dense", n_layers=4,
+                      d_model=256, n_heads=8, n_kv=4, d_ff=512, vocab=1024,
+                      q_chunk=64, kv_chunk=64)
+
+
+def _workload(n_requests: int, max_len: int, vocab: int, seed: int = 0):
+    """Mixed arrivals: prompt lengths spread across the prefill buckets,
+    max_new split between short interactive turns and long generations."""
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(n_requests):
+        plen = int(rng.integers(4, max_len // 2))
+        if i % 2 == 0:
+            max_new = int(rng.integers(2, 8))        # short turn
+        else:
+            max_new = int(rng.integers(max_len // 8, max_len // 4))  # long
+        prompt = rng.integers(1, vocab, size=plen).astype(np.int32)
+        reqs.append(Request(prompt=prompt, max_new=max_new))
+    return reqs
+
+
+def _serve(engine, requests, useful_tokens: int) -> dict:
+    t0 = time.perf_counter()
+    engine.run(requests)
+    wall = time.perf_counter() - t0
+    t = engine.telemetry()
+    rec = {
+        "wall_s": round(wall, 3),
+        # same useful-token numerator for every engine: requested tokens
+        # only, so run-to-completion's overshoot never inflates its rate
+        "tok_per_s": round(useful_tokens / wall, 2),
+        "decode_tok_per_s": round(t["decode_tok_per_s"], 2),
+        "wasted_decode_steps": t["wasted_decode_steps"],
+        "decode_steps": t["decode_steps"],
+        "prefill_calls": t["prefill_calls"],
+        "trace_counts": t["trace_counts"],
+        "n_compiles": sum(t["trace_counts"].values()),
+        "latency_p50_s": t.get("latency_p50_s"),
+        "latency_p99_s": t.get("latency_p99_s"),
+        "ttft_p50_s": t.get("ttft_p50_s"),
+        "ttft_p99_s": t.get("ttft_p99_s"),
+    }
+    return rec
+
+
+def run(quick: bool = True, tiny: bool = False):
+    cfg = _arch(tiny)
+    if tiny:
+        n_requests, n_slots, max_len = 6, 2, 64
+    elif quick:
+        n_requests, n_slots, max_len = 24, 4, 128
+    else:
+        n_requests, n_slots, max_len = 96, 8, 256
+    params = lm.init_params(jax.random.key(0), cfg)
+    useful = sum(r.max_new for r in _workload(n_requests, max_len, cfg.vocab))
+
+    sv_paged = ServeConfig(n_slots=n_slots, max_len=max_len, page_size=16)
+    engines = {
+        "legacy": RunToCompletionEngine(params, cfg, batch=n_slots,
+                                        max_len=max_len),
+        "contiguous": Engine(params, cfg,
+                             serve=sv_paged.replace(page_size=None)),
+        "paged": Engine(params, cfg, serve=sv_paged),
+    }
+    out = {"arch": cfg.name, "n_requests": n_requests, "n_slots": n_slots,
+           "max_len": max_len, "useful_tokens": useful, "variants": {}}
+    outputs = {}
+    for name, eng in engines.items():
+        reqs = _workload(n_requests, max_len, cfg.vocab)
+        out["variants"][name] = _serve(eng, reqs, useful)
+        outputs[name] = [r.out.tolist() for r in reqs]
+        print(f"  {name:11s} tok/s={out['variants'][name]['tok_per_s']:9.1f}  "
+              f"wasted={out['variants'][name]['wasted_decode_steps']:5d}  "
+              f"compiles={out['variants'][name]['n_compiles']}")
+
+    out["outputs_equal"] = (outputs["legacy"] == outputs["contiguous"]
+                            == outputs["paged"])
+    v = out["variants"]
+    out["continuous_vs_legacy_tok_per_s"] = round(
+        v["paged"]["tok_per_s"] / v["legacy"]["tok_per_s"], 3)
+    out["wasted_frac_paged"] = round(
+        v["paged"]["wasted_decode_steps"]
+        / max(1, n_slots * v["paged"]["decode_steps"]), 4)
+    out["wasted_frac_legacy"] = round(
+        v["legacy"]["wasted_decode_steps"]
+        / max(1, n_slots * v["legacy"]["decode_steps"]), 4)
+
+    if not tiny:
+        save_result("serve", out)
+    print(f"continuous/legacy tok/s = {out['continuous_vs_legacy_tok_per_s']} "
+          f"| wasted frac paged {out['wasted_frac_paged']} "
+          f"vs legacy {out['wasted_frac_legacy']} "
+          f"| outputs equal: {out['outputs_equal']}")
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    run(quick=not args.full)

@@ -49,6 +49,10 @@ _KEY_METRICS = {
     # recompute tax of the recovery ladder under the canned fault drill
     "resilience": ("wasted_work_frac",
                    lambda d: _get(d, "wasted_work_frac")),
+    # continuous-batching throughput over the run-to-completion baseline on
+    # the same mixed-max_new workload (>1 = continuous batching wins)
+    "serve": ("continuous_vs_legacy_tok_per_s",
+              lambda d: _get(d, "continuous_vs_legacy_tok_per_s")),
 }
 
 
@@ -154,7 +158,7 @@ def main():
                             bench_fig1a_correlation, bench_fig1b_mask_vs_sketch,
                             bench_fig2a_proxies, bench_fig2b_spectral,
                             bench_fig3_larger_archs, bench_fig4_location,
-                            bench_resilience, bench_variance)
+                            bench_resilience, bench_serve, bench_variance)
     jobs = {
         "fig1a_correlation": bench_fig1a_correlation.run,
         "fig1b_mask_vs_sketch": bench_fig1b_mask_vs_sketch.run,
@@ -168,6 +172,7 @@ def main():
         "adaptive": bench_adaptive.run,
         "coverage": bench_coverage.run,
         "resilience": bench_resilience.run,
+        "serve": bench_serve.run,
         "distributed": _run_distributed,
         "backward_fusion": _run_backward_fusion,
     }

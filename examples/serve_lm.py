@@ -1,16 +1,20 @@
-"""Batched serving example: prefill + decode through the Engine.
+"""Continuous-batching serving example: queue -> slots -> paged KV decode.
 
     PYTHONPATH=src python examples/serve_lm.py
 
-Initialises a small LM and submits a mixed batch of prompts through the
-:class:`repro.api.Runtime` front door (``Runtime.serve`` builds the Engine;
-a mesh-bearing Runtime would serve sharded with the same two lines).
+Initialises a small LM and submits a mixed workload (heterogeneous prompt
+lengths AND generation lengths) through the :class:`repro.api.Runtime` front
+door. ``Runtime.serve`` builds the continuous engine — a mesh-bearing
+Runtime would serve sharded with the same two lines. The
+:class:`repro.api.ServeConfig` fixes the compiled surface: slot count,
+per-slot KV budget, paged-cache geometry and prefill buckets (one XLA
+compile per bucket — see docs/serving.md).
 """
 import numpy as np
 
 import jax
 
-from repro.api import Runtime
+from repro.api import Runtime, ServeConfig
 from repro.configs.base import ArchConfig
 from repro.models import lm
 from repro.serve.engine import Request
@@ -21,16 +25,24 @@ def main():
                      n_heads=8, n_kv=4, d_ff=1024, vocab=1024,
                      q_chunk=64, kv_chunk=64)
     params = lm.init_params(jax.random.key(0), cfg)
-    eng = Runtime().serve(params, cfg, batch=4, max_len=96)
+    serve = ServeConfig(n_slots=4, max_len=96, page_size=16)
+    eng = Runtime().serve(params, cfg, serve=serve)
 
     rng = np.random.default_rng(0)
     reqs = [Request(prompt=rng.integers(1, cfg.vocab, size=n).astype(np.int32),
-                    max_new=12)
-            for n in (9, 17, 5, 30, 11)]
+                    max_new=m)
+            for n, m in ((9, 12), (17, 3), (5, 12), (30, 2), (11, 8))]
     eng.run(reqs)
     for i, r in enumerate(reqs):
-        print(f"req {i}: prompt_len={len(r.prompt)} -> {r.out.tolist()}")
-    print(f"served {len(reqs)} requests in batches of {eng.batch}")
+        print(f"req {i}: prompt_len={len(r.prompt)} stop={r.stop} "
+              f"-> {r.out.tolist()}")
+
+    t = eng.telemetry()
+    print(f"served {len(reqs)} requests on {serve.n_slots} slots "
+          f"({t['layout']} KV) | decode {t['decode_tok_per_s']:.0f} tok/s | "
+          f"wasted decode steps {t['wasted_decode_steps']} | "
+          f"compiles {t['trace_counts']} | "
+          f"p50 latency {t['latency_p50_s'] * 1e3:.0f} ms")
 
 
 if __name__ == "__main__":

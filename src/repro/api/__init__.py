@@ -11,6 +11,9 @@ One import gives the whole paper-reproduction surface:
     closed-loop SNR-adaptive mode backed by telemetry probes).
   * :class:`TelemetryConfig` — in-graph probes + sinks switchboard
     (``ExecutionConfig.telemetry``; see docs/telemetry.md).
+  * :class:`ServeConfig` — the continuous-batching serving surface
+    (``Runtime.serve``): slot count, KV budget, paged-cache geometry,
+    prefill buckets/packing, stop tokens (see docs/serving.md).
   * :class:`ResilienceConfig` / :class:`FaultPlan` / :class:`GradSentinel` /
     :class:`Supervisor` — the fault-handling layer (``ExecutionConfig.
     resilience``): in-graph gradient sentinel with exact-budget escalation,
@@ -47,6 +50,7 @@ from repro.core.estimators import (Estimator, EstimatorVJP, get_estimator,
 from repro.core.site import ExecutionPlan, SiteSpec, resolve_site
 from repro.resilience import (FaultPlan, FaultSpec, GradSentinel,
                               ResilienceConfig, Supervisor)
+from repro.serve.config import ServeConfig
 from repro.telemetry import TelemetryConfig
 from repro.telemetry.controller import AdaptiveBudgetController
 
@@ -63,6 +67,7 @@ __all__ = [
     "GradSentinel",
     "ResilienceConfig",
     "Runtime",
+    "ServeConfig",
     "SiteSpec",
     "SketchConfig",
     "SketchPolicy",

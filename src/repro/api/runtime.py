@@ -157,12 +157,20 @@ class Runtime:
 
         return make_decode_step(cfg, execution=self.execution)
 
-    def serve(self, params, cfg, *, batch: int = 4, max_len: int = 256):
-        """A batched serving :class:`~repro.serve.engine.Engine` whose
-        prefill/decode steps run under this runtime's execution config."""
+    def serve(self, params, cfg, *, serve=None, batch: int = 4,
+              max_len: int = 256):
+        """A continuous-batching :class:`~repro.serve.engine.Engine` whose
+        prefill/decode steps run under this runtime's execution config.
+
+        ``serve`` is a :class:`~repro.serve.config.ServeConfig` (slot count,
+        KV budget, paged-cache geometry, prefill buckets/packing, stop
+        tokens); the ``batch``/``max_len`` kwargs are the legacy spelling and
+        build one. See docs/serving.md.
+        """
         from repro.serve.engine import Engine
 
-        return Engine(params, cfg, batch=batch, max_len=max_len, runtime=self)
+        return Engine(params, cfg, serve=serve, batch=batch, max_len=max_len,
+                      runtime=self)
 
     # -- migration ----------------------------------------------------------
 

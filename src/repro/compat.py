@@ -36,6 +36,7 @@ __all__ = [
     "make_mesh",
     "shard_map",
     "ensure_host_devices",
+    "enable_compilation_cache",
     "optimization_barrier",
     "prng_key",
     "key_dtype",
@@ -98,6 +99,41 @@ def ensure_host_devices(n: int) -> None:
         return
     os.environ["XLA_FLAGS"] = (
         flags + f" --xla_force_host_platform_device_count={n}").strip()
+
+
+def enable_compilation_cache(cache_dir: Optional[str] = None, *,
+                             min_compile_time_secs: Optional[float] = None) -> bool:
+    """Turn on JAX's persistent compilation cache, where this release has it.
+
+    Feature-detected (``jax.config.update`` raises on unknown options —
+    absence degrades to a no-op returning False, never a version compare).
+    An explicitly configured cache (``JAX_COMPILATION_CACHE_DIR`` env or a
+    prior call) is left alone.
+
+    ``min_compile_time_secs=None`` keeps JAX's own threshold (~1 s), which
+    caches exactly the expensive compiles worth persisting. Do NOT lower it
+    to cache everything: serializing the long tail of sub-second executables
+    costs more wall-clock than it saves, and on at least one in-range
+    release (0.4.37 CPU) a reloaded tiny executable breaks donated-buffer
+    aliasing across an elastic mesh switch (garbage in donated outputs —
+    caught by the resilience suite, which is why this knob is opt-in).
+    """
+    if cache_dir is None:
+        if os.environ.get("JAX_COMPILATION_CACHE_DIR"):
+            return True  # explicitly configured — respect it
+        import tempfile
+        cache_dir = os.path.join(tempfile.gettempdir(), "repro-jax-cache")
+    try:
+        jax.config.update("jax_compilation_cache_dir", cache_dir)
+    except (AttributeError, ValueError, TypeError):
+        return False  # release predates the persistent cache
+    if min_compile_time_secs is not None:
+        try:
+            jax.config.update("jax_persistent_cache_min_compile_time_secs",
+                              min_compile_time_secs)
+        except (AttributeError, ValueError, TypeError):
+            pass  # threshold is tuning, not a requirement
+    return True
 
 
 # ---------------------------------------------------------------------------

@@ -23,7 +23,7 @@ from repro.configs.base import ArchConfig, ShapeCell
 from repro.launch.mesh import dp_axes, mp_axes
 
 __all__ = ["param_specs", "param_shardings", "batch_specs", "cache_specs",
-           "logical_rules"]
+           "paged_cache_specs", "logical_rules"]
 
 # (path regex, spec for trailing dims). "dp"/"mp" are placeholders resolved
 # against the mesh axis names.
@@ -171,6 +171,32 @@ def cache_specs(cfg: ArchConfig, cache_shape, mesh, global_batch: int):
         return P()
 
     return compat.tree_map_with_path(spec_for, cache_shape)
+
+
+def paged_cache_specs(pool_shape, mesh, n_pages: int):
+    """PartitionSpecs for a paged KV pool tree (``repro.serve.kv_cache``).
+
+    Pool leaves ``[L, n_pages, page_size, kv, hd]`` shard the *page* dim over
+    dp when divisible — pages are the batch-like unit of paged serving (a
+    slot's pages are scattered across the pool, so page-gather/scatter cross
+    shards via XLA-inserted collectives, same trade the contiguous layout
+    makes for batch). The token dim inside a page is too short to split over
+    model (flash-decoding seq sharding needs whole-sequence runs), so pages
+    keep their interior replicated; the page map is host-owned and always
+    replicated.
+    """
+    dp = dp_axes(mesh)
+    n_dp = int(np.prod([mesh.shape[a] for a in dp]))
+    pax = dp if n_pages % n_dp == 0 else None
+
+    def spec_for(path, leaf):
+        shape = leaf.shape
+        if len(shape) >= 4 and shape[-4] == n_pages:
+            lead = [None] * (len(shape) - 4)
+            return P(*lead, pax, None, None, None)
+        return P()
+
+    return compat.tree_map_with_path(spec_for, pool_shape)
 
 
 def logical_rules(mesh) -> dict:

@@ -170,7 +170,7 @@ def init_params(key, cfg: ArchConfig):
 
 
 def _apply_sub(kind: LayerKind, p, x, ctx: Ctx, cfg: ArchConfig, positions,
-               memory=None, cache=None, pos=None):
+               memory=None, cache=None, pos=None, segs=None):
     """Returns (x, new_cache, aux)."""
     aux = jnp.zeros((), jnp.float32)
     if kind.kind in ("attn", "shared_attn"):
@@ -178,9 +178,9 @@ def _apply_sub(kind: LayerKind, p, x, ctx: Ctx, cfg: ArchConfig, positions,
         h = rmsnorm(p["norm1"], x)
         if cache is not None:
             o, new_self = attention(p["attn"], h, ctx, acfg, positions,
-                                    cache=cache["kv"], pos=pos)
+                                    cache=cache["kv"], pos=pos, segs=segs)
         else:
-            o = attention(p["attn"], h, ctx, acfg, positions)
+            o = attention(p["attn"], h, ctx, acfg, positions, segs=segs)
             new_self = None
         x = x + o
         new_cache = {"kv": new_self} if cache is not None else None
@@ -286,7 +286,7 @@ def _layer_uid(seg_base: int, rep, period_len: int, sub_i: int):
 
 def _run_segments(seg_params, segments, x, ctx: Ctx, cfg: ArchConfig, step_key,
                   positions, shared=None, memory=None, caches=None, pos=None,
-                  seg_base: int = 0):
+                  seg_base: int = 0, segs=None):
     """Run all segments; returns (x, aux_total, new_caches)."""
     aux_total = jnp.zeros((), jnp.float32)
     new_caches = []
@@ -304,7 +304,8 @@ def _run_segments(seg_params, segments, x, ctx: Ctx, cfg: ArchConfig, step_key,
                 lctx = ctx.for_layer(step_key, uid)
                 p = shared if kind.kind == "shared_attn" else sp[i]
                 c = sc[i] if sc is not None else None
-                x, nc, a = _apply_sub(kind, p, x, lctx, cfg, positions, memory, c, pos)
+                x, nc, a = _apply_sub(kind, p, x, lctx, cfg, positions, memory, c,
+                                      pos, segs)
                 # re-pin the residual stream sharding so the scan carry keeps
                 # the sequence-parallel layout across iterations
                 x = ctx.constrain(x)
@@ -414,7 +415,8 @@ def _head(params, x, ctx: Ctx, cfg: ArchConfig):
 
 
 def _default_positions(cfg: ArchConfig, B, S, offset=0):
-    pos = offset + jnp.arange(S)[None, :]
+    # offset: scalar, or int32 [B] per-row start positions (serving decode)
+    pos = jnp.asarray(offset)[..., None] + jnp.arange(S)[None, :]
     pos = jnp.broadcast_to(pos, (B, S))
     if cfg.rope == "mrope":
         return jnp.broadcast_to(pos[None], (3, B, S))
@@ -450,7 +452,8 @@ def forward(params, batch, ctx: Ctx, cfg: ArchConfig, step_key=None):
         memory = encode(params, batch["src_embeds"], ctx, cfg, step_key)
     segs = plan_segments(cfg)
     x, aux, _ = _run_segments(params["segments"], segs, x, ctx, cfg, step_key,
-                              positions, shared=params.get("shared"), memory=memory)
+                              positions, shared=params.get("shared"), memory=memory,
+                              segs=batch.get("segments"))
     x = rmsnorm(params["final_norm"], x)
     logits = _head(params, x, ctx, cfg)
     return logits, aux
@@ -482,7 +485,9 @@ def init_cache(cfg: ArchConfig, batch: int, max_len: int, enc_len: int = 0):
 
 
 def decode_step(params, caches, tokens, pos, ctx: Ctx, cfg: ArchConfig, step_key=None):
-    """One decode step. tokens: int[B, 1] (or embeds [B,1,d]); pos: scalar.
+    """One decode step. tokens: int[B, 1] (or embeds [B,1,d]); pos: scalar, or
+    an int32 [B] per-slot position vector (continuous-batching serving — each
+    row writes/attends at its own timestep; see docs/serving.md).
 
     Returns (logits [B,1,V], new_caches).
     """
@@ -498,7 +503,11 @@ def decode_step(params, caches, tokens, pos, ctx: Ctx, cfg: ArchConfig, step_key
 
 
 def prefill(params, batch, ctx: Ctx, cfg: ArchConfig, max_len: int, step_key=None):
-    """Prefill: forward + populate caches. Returns (logits, caches)."""
+    """Prefill: forward + populate caches. Returns (logits, caches).
+
+    Optional ``batch["segments"]`` (int32 [B,S], 0 = padding) segment-masks
+    self-attention so several packed prompts share one prefill call.
+    """
     inp = batch.get("tokens", batch.get("embeds"))
     B, S = inp.shape[0], inp.shape[1]
     x = _embed(params, inp, cfg)
@@ -512,7 +521,8 @@ def prefill(params, batch, ctx: Ctx, cfg: ArchConfig, max_len: int, step_key=Non
     caches = init_cache(cfg, B, max_len, enc_len=memory.shape[1] if memory is not None else 0)
     x, _, new_caches = _run_segments(params["segments"], segs, x, ctx, cfg, step_key,
                                      positions, shared=params.get("shared"),
-                                     memory=memory, caches=caches, pos=None)
+                                     memory=memory, caches=caches, pos=None,
+                                     segs=batch.get("segments"))
     x = rmsnorm(params["final_norm"], x)
     return _head(params, x, ctx, cfg), new_caches
 

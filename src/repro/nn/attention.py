@@ -62,7 +62,8 @@ def _tile(q, k, v, scale, mask):
     """One attention tile, flat-head layout (k/v pre-repeated to H heads —
     TP-shardable on H even when n_kv < model-axis size, see DESIGN.md).
 
-    q:[B,Cq,H,dh] k/v:[B,Ck,H,dh] mask:[Cq,Ck]|None.
+    q:[B,Cq,H,dh] k/v:[B,Ck,H,dh] mask:[Cq,Ck]|[B,Cq,Ck]|None (the batched
+    form carries per-row segment/packing masks — serving prefill).
     Returns (m, l, acc): running max/denom [B,H,Cq], acc [B,Cq,H,dh].
     """
     # bf16 operands feed the MXU directly; fp32 accumulation via
@@ -70,7 +71,8 @@ def _tile(q, k, v, scale, mask):
     s = jnp.einsum("bqhd,bchd->bhqc", q, k,
                    preferred_element_type=jnp.float32) * scale
     if mask is not None:
-        s = jnp.where(mask[None, None], s, -1e30)
+        m_b = mask[None, None] if mask.ndim == 2 else mask[:, None]
+        s = jnp.where(m_b, s, -1e30)
     m = jnp.max(s, axis=-1)
     p = jnp.exp(s - m[..., None])
     l = jnp.sum(p, axis=-1)
@@ -91,8 +93,14 @@ def _merge(m1, l1, a1, m2, l2, a2):
 
 
 def _q_chunk_full(qi, k, v, scale, causal, qpos, kpos, kv_chunk, cost_mode,
-                  kv_valid_len=None, window=None):
-    """All-kv attention for one query chunk via online softmax over kv tiles."""
+                  kv_valid_len=None, window=None, seg_qi=None, seg_k=None):
+    """All-kv attention for one query chunk via online softmax over kv tiles.
+
+    ``seg_qi`` [B, Cq] / ``seg_k`` [B, Skv] are per-row segment ids (packed
+    serving prefill): queries only attend within their own segment, and
+    segment id 0 marks padding keys. When given, the tile masks become
+    batched [B, Cq, Ck].
+    """
     B, Cq, H, dh = qi.shape
     Skv = k.shape[1]
     ck = min(kv_chunk, Skv)
@@ -112,6 +120,10 @@ def _q_chunk_full(qi, k, v, scale, causal, qpos, kpos, kv_chunk, cost_mode,
         if kv_valid_len is not None:
             vmask = (kp < kv_valid_len)[None, :]
             mask = vmask if mask is None else (mask & vmask)
+        if seg_qi is not None:
+            sk = jax.lax.dynamic_slice_in_dim(seg_k, j * ck, ck, axis=1)
+            smask = (seg_qi[:, :, None] == sk[:, None, :]) & (sk[:, None, :] > 0)
+            mask = smask if mask is None else (mask[None] & smask)
         return _tile(qi, kj, vj, scale, mask)
 
     if cost_mode:
@@ -133,11 +145,12 @@ def _q_chunk_full(qi, k, v, scale, causal, qpos, kpos, kv_chunk, cost_mode,
 
 
 def _q_chunk_window(qi, k_pad, v_pad, scale, window, i, q_chunk, qpos, cost_mode,
-                    kv_valid_len=None):
+                    kv_valid_len=None, seg_qi=None, seg_k_pad=None):
     """Sliding-window attention for one query chunk.
 
     k_pad/v_pad are left-padded by ``window`` so the relevant keys for query
     chunk i live at padded offsets [i*Cq, i*Cq + window + Cq).
+    ``seg_k_pad`` carries segment ids padded to the same layout (0 = pad).
     """
     Cq = qi.shape[1]
     span = window + Cq
@@ -150,11 +163,15 @@ def _q_chunk_window(qi, k_pad, v_pad, scale, window, i, q_chunk, qpos, cost_mode
         valid &= kp < kv_valid_len
     d = qpos[:, None] - kp[None, :]
     mask = (d >= 0) & (d < window) & valid[None, :]
+    if seg_qi is not None:
+        sk = jax.lax.dynamic_slice_in_dim(seg_k_pad, start, span, axis=1)
+        mask = (mask[None] & (seg_qi[:, :, None] == sk[:, None, :])
+                & (sk[:, None, :] > 0))
     return _tile(qi, kj, vj, scale, mask)
 
 
 def multi_head_attention(q, k, v, cfg: AttnCfg, *, cost_mode: bool = False,
-                         q_offset=0, constrain=None):
+                         q_offset=0, constrain=None, segs=None):
     """q:[B,Sq,H,dh] k,v:[B,Skv,Kv,dh] -> [B,Sq,H,dh] (fp32 accum).
 
     GQA k/v are repeated to H heads up front (flat-head layout): the repeat is
@@ -162,13 +179,18 @@ def multi_head_attention(q, k, v, cfg: AttnCfg, *, cost_mode: bool = False,
     every attention tensor shardable on H even when n_kv < model-axis size.
     ``constrain`` (from Ctx.constrain_heads) re-pins [B, S, H, dh] tensors to
     (dp, None, model, None).
+
+    ``segs`` (int32 [B, Sq], self-attention only) are packed-prefill segment
+    ids: tokens attend only within their own segment and id 0 marks padding
+    (docs/serving.md). The pallas flash kernel has no segment support, so a
+    segs-bearing call routes through the chunked XLA path.
     """
     B, Sq, H, dh = q.shape
     Kv = k.shape[2]
     G = H // Kv
     scale = dh ** -0.5
 
-    if cfg.impl == "pallas":
+    if cfg.impl == "pallas" and segs is None:
         from repro.kernels import ops as kops
         o = kops.flash_attention(q, k, v, causal=cfg.causal, window=cfg.window)
         return o.astype(q.dtype)
@@ -196,11 +218,17 @@ def multi_head_attention(q, k, v, cfg: AttnCfg, *, cost_mode: bool = False,
                        preferred_element_type=jnp.float32) * scale
         qpos = q_offset + jnp.arange(Sq)
         kpos = jnp.arange(k.shape[1])
+        mask = None
         if cfg.causal:
             mask = qpos[:, None] >= kpos[None, :]
             if cfg.window:
                 mask &= (qpos[:, None] - kpos[None, :]) < cfg.window
-            s = jnp.where(mask[None, None], s, -1e30)
+        if segs is not None:
+            smask = (segs[:, :, None] == segs[:, None, :]) & (segs[:, None, :] > 0)
+            mask = smask if mask is None else (mask[None] & smask)
+        if mask is not None:
+            m_b = mask[None, None] if mask.ndim == 2 else mask[:, None]
+            s = jnp.where(m_b, s, -1e30)
         p = jax.nn.softmax(s, axis=-1)
         o = jnp.einsum("bhqc,bchd->bqhd", p.astype(v.dtype), v,
                        preferred_element_type=jnp.float32)
@@ -226,27 +254,40 @@ def multi_head_attention(q, k, v, cfg: AttnCfg, *, cost_mode: bool = False,
     kpos = jnp.arange(Skv_pad)
     kv_valid = Skv if Skv_pad != Skv else None
     use_window = cfg.window is not None and cfg.causal and Skv > (cfg.window + Cq)
+    seg_q_all = seg_k_in = None
+    if segs is not None:
+        # 0-pad: padded queries/keys belong to no segment
+        seg_q_all = jnp.pad(segs, ((0, 0), (0, Sq_pad - Sq)))
     if use_window:
         # left-pad by window; right-pad to cover padded query chunks
         right = max(0, (Sq_pad - Skv))
         k_in = jnp.pad(k, ((0, 0), (cfg.window, right), (0, 0), (0, 0)))
         v_in = jnp.pad(v, ((0, 0), (cfg.window, right), (0, 0), (0, 0)))
+        if segs is not None:
+            seg_k_in = jnp.pad(segs, ((0, 0), (cfg.window, right)))
     else:
         k_in = jnp.pad(k, ((0, 0), (0, Skv_pad - Skv), (0, 0), (0, 0)))
         v_in = jnp.pad(v, ((0, 0), (0, Skv_pad - Skv), (0, 0), (0, 0)))
+        if segs is not None:
+            seg_k_in = jnp.pad(segs, ((0, 0), (0, Skv_pad - Skv)))
 
     def one_chunk(i):
         qi = jax.lax.dynamic_slice_in_dim(qg_p, i * Cq, Cq, axis=1)
         qpos = jax.lax.dynamic_slice_in_dim(qpos_all, i * Cq, Cq, axis=0)
+        seg_qi = None
+        if segs is not None:
+            seg_qi = jax.lax.dynamic_slice_in_dim(seg_q_all, i * Cq, Cq, axis=1)
         if constrain is not None:
             qi = constrain(qi)
         if use_window:
             m, l, acc = _q_chunk_window(qi, k_in, v_in, scale, cfg.window, i, Cq, qpos,
-                                        cost_mode, kv_valid_len=Skv)
+                                        cost_mode, kv_valid_len=Skv,
+                                        seg_qi=seg_qi, seg_k_pad=seg_k_in)
         else:
             m, l, acc = _q_chunk_full(qi, k_in, v_in, scale, cfg.causal, qpos, kpos,
                                       cfg.kv_chunk, cost_mode, kv_valid_len=kv_valid,
-                                      window=cfg.window if cfg.causal else None)
+                                      window=cfg.window if cfg.causal else None,
+                                      seg_qi=seg_qi, seg_k=seg_k_in)
         lr = jnp.swapaxes(l, 1, 2)[..., None]  # [B,Cq,H,1]
         out = (acc / jnp.maximum(lr, 1e-30)).astype(q.dtype)
         return constrain(out) if constrain is not None else out
@@ -263,7 +304,9 @@ def multi_head_attention(q, k, v, cfg: AttnCfg, *, cost_mode: bool = False,
 
 
 def decode_attention(q, k_cache, v_cache, pos, cfg: AttnCfg):
-    """q:[B,1,H,dh]; caches [B,Smax,Kv,dh]; pos: scalar index of the new token.
+    """q:[B,1,H,dh]; caches [B,Smax,Kv,dh]; pos: index of the new token —
+    a scalar (whole batch at one timestep) or an int32 [B] vector (per-slot
+    positions, the continuous-batching serving path; see docs/serving.md).
 
     GQA via grouped einsum on the *unrepeated* cache (repeating a 32k-entry
     cache would multiply HBM reads by G — decode is memory-bound, so the
@@ -277,16 +320,16 @@ def decode_attention(q, k_cache, v_cache, pos, cfg: AttnCfg):
     s = jnp.einsum("bqkgh,bckh->bkgqc", qg.astype(k_cache.dtype), k_cache,
                    preferred_element_type=jnp.float32) * dh ** -0.5
     idx = jnp.arange(k_cache.shape[1])
+    posv = jnp.asarray(pos)
+    if posv.ndim == 0:
+        posv = posv[None]  # [1] broadcasts over B
     rolling = cfg.window is not None and k_cache.shape[1] <= cfg.window
-    if rolling:
-        # warm ring buffer: everything valid once pos >= size; during warmup
-        # only slots <= pos have been written.
-        mask = idx <= pos
-    else:
-        mask = idx <= pos
-        if cfg.window is not None:
-            mask &= idx > pos - cfg.window
-    s = jnp.where(mask[None, None, None, None, :], s, -1e30)
+    # warm ring buffer: everything valid once pos >= size; during warmup only
+    # slots <= pos have been written.
+    mask = idx[None, :] <= posv[:, None]
+    if cfg.window is not None and not rolling:
+        mask &= idx[None, :] > posv[:, None] - cfg.window
+    s = jnp.where(mask[:, None, None, None, :], s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bkgqc,bckh->bqkgh", p.astype(v_cache.dtype), v_cache,
                    preferred_element_type=jnp.float32)
@@ -300,12 +343,15 @@ def init_kv_cache(batch: int, max_len: int, cfg: AttnCfg, dtype):
 
 
 def attention(params, x, ctx: Ctx, cfg: AttnCfg, positions, cache=None, pos=None,
-              memory=None, role_prefix: str = "attn"):
+              memory=None, role_prefix: str = "attn", segs=None):
     """Full attention sublayer: projections (sketched) + core + out-proj.
 
     * train/prefill: ``cache=None`` (or a cache dict to fill when prefilling).
-    * decode: ``cache`` + scalar ``pos`` -> returns (out, updated_cache).
+    * decode: ``cache`` + ``pos`` (scalar, or int32 [B] per-slot positions)
+      -> returns (out, updated_cache).
     * cross-attention: ``memory`` = encoder output (keys/values from memory).
+    * packed prefill: ``segs`` = int32 [B, S] segment ids (0 = padding);
+      self-attention is segment-masked (docs/serving.md).
     """
     B, S, _ = x.shape
     rq = f"{role_prefix}_q"
@@ -324,17 +370,27 @@ def attention(params, x, ctx: Ctx, cfg: AttnCfg, positions, cache=None, pos=None
             k = apply_mrope(k, positions, cfg.theta, ctx=ctx)
 
     if cache is not None and pos is not None:
-        # decode: write new kv at pos (rolling for window caches), then attend.
+        # decode: write new kv at pos (rolling for window caches), then
+        # attend. pos is a scalar or an int32 [B] per-slot position vector
+        # (continuous-batching serving) — the vector form writes each row at
+        # its own timestep.
         size = cache["k"].shape[1]
-        write_at = pos % size if (cfg.window is not None and size <= cfg.window) else pos
-        new_k = cache["k"].at[:, write_at].set(k[:, 0].astype(cache["k"].dtype))
-        new_v = cache["v"].at[:, write_at].set(v[:, 0].astype(cache["v"].dtype))
+        posv = jnp.asarray(pos)
+        write_at = posv % size if (cfg.window is not None and size <= cfg.window) else posv
+        if posv.ndim == 0:
+            new_k = cache["k"].at[:, write_at].set(k[:, 0].astype(cache["k"].dtype))
+            new_v = cache["v"].at[:, write_at].set(v[:, 0].astype(cache["v"].dtype))
+        else:
+            rows = jnp.arange(B)
+            new_k = cache["k"].at[rows, write_at].set(k[:, 0].astype(cache["k"].dtype))
+            new_v = cache["v"].at[rows, write_at].set(v[:, 0].astype(cache["v"].dtype))
         o = decode_attention(q, new_k, new_v, pos, cfg)
         out = dense(params["o"], o.reshape(B, S, -1), ctx, f"{role_prefix}_o")
         return out, {"k": new_k, "v": new_v}
 
     o = multi_head_attention(q, k, v, cfg, cost_mode=ctx.cost_mode,
-                             constrain=ctx.constrain_heads)
+                             constrain=ctx.constrain_heads,
+                             segs=None if memory is not None else segs)
     out = dense(params["o"], o.reshape(B, S, -1), ctx, f"{role_prefix}_o")
     if cache is not None:
         # prefill: fill the cache with the (possibly window-truncated) tail.

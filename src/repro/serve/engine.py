@@ -1,21 +1,32 @@
-"""Batched serving engine: prefill + decode with a simple admission queue.
+"""Continuous-batching serving engine: queue -> slots -> paged KV decode.
 
-A deliberately compact continuous-batching-lite engine: requests are padded
-into fixed prefill buckets, decoded as one batch with per-slot stop tracking,
-and finished slots are refilled from the queue between decode bursts. The
-jitted prefill/decode steps come from the :class:`~repro.api.Runtime` front
-door (``Runtime.serve`` constructs an Engine) — the same factories the
-dry-run lowers, so the engine exercises the production code paths end-to-end
-(examples/serve_lm.py). Pass a mesh-bearing Runtime to serve sharded.
+The engine drives three layers, all behind the :class:`~repro.api.Runtime`
+front door (``Runtime.serve`` constructs one; a mesh-bearing Runtime serves
+sharded through the identical code path):
 
-Telemetry: the engine keeps decode-path counters (prefill/decode calls,
-tokens, wall time) plus a bounded ring of per-batch records
-(:class:`repro.telemetry.sinks.RingSink`); ``Engine.telemetry()`` summarizes
-them (tokens/s etc.) for dashboards and tests. See docs/telemetry.md.
+  * :class:`repro.serve.scheduler.Scheduler` — FIFO request queue, slot
+    table, and the physical-page allocator. Finished slots are evicted and
+    refilled from the queue **between decode steps**, so decode never idles
+    a slot while work is queued.
+  * :mod:`repro.serve.kv_cache` — paged KV storage (fixed-size pages, a
+    per-slot page map, trash page 0 for freed slots) or the contiguous
+    slot-major fallback for cache trees with ring-buffer / recurrent leaves.
+  * bucketed, segment-masked **packed prefill** — queued prompts are packed
+    page-aligned into one row, rounded up to a power-of-two bucket, so
+    heterogeneous prompt lengths compile once per bucket instead of
+    retracing (``trace_counts`` records every compile, keyed by shape).
+
+Every decode step is one jitted XLA call (gather pages -> ``decode_step`` ->
+scatter the new column) followed by ONE batched host transfer of the [B]
+sampled tokens — per-slot stop tracking (eos / ``max_new``) happens on the
+host against that single array, preserving the dead-slot discipline from the
+resilience PR. Per-request latency stamps (queue, TTFT, total) land on a
+bounded :class:`~repro.telemetry.sinks.RingSink`; ``Engine.telemetry()``
+summarizes counters, trace counts and latency percentiles. See
+docs/serving.md for the full contract.
 """
 from __future__ import annotations
 
-import dataclasses
 import time
 from typing import List, Optional
 
@@ -25,120 +36,261 @@ import numpy as np
 
 from repro.api.runtime import Runtime
 from repro.configs.base import ArchConfig
+from repro.serve import kv_cache
+from repro.serve.config import ServeConfig
+from repro.serve.scheduler import Request, Scheduler, Slot
 from repro.serve.serve_step import greedy_sample
-from repro.telemetry.sinks import RingSink
+from repro.telemetry.sinks import RingSink, percentiles
 
 __all__ = ["Request", "Engine"]
 
-
-@dataclasses.dataclass
-class Request:
-    prompt: np.ndarray  # int32 [len]
-    max_new: int = 16
-    out: Optional[np.ndarray] = None
+_COUNTER_KEYS = ("batches", "prefill_calls", "prefill_tokens", "decode_steps",
+                 "tokens_out", "decode_tokens", "requests_done",
+                 "truncated_tokens", "wasted_decode_steps")
 
 
 class Engine:
-    def __init__(self, params, cfg: ArchConfig, *, batch: int = 4,
-                 max_len: int = 256, runtime: Optional[Runtime] = None):
+    """Continuous-batching engine over ``Runtime.prefill_step``/``decode_step``.
+
+    ``serve`` (a :class:`~repro.serve.config.ServeConfig`) fixes the compiled
+    surface; the legacy ``batch``/``max_len`` kwargs build one (paged when
+    ``max_len`` permits). Byte-identical greedy outputs vs the
+    run-to-completion baseline (`repro.serve.legacy`) are test-enforced.
+    """
+
+    def __init__(self, params, cfg: ArchConfig, *, serve: Optional[ServeConfig] = None,
+                 batch: int = 4, max_len: int = 256,
+                 runtime: Optional[Runtime] = None):
+        if cfg.is_encdec:
+            raise ValueError("the serving engine targets decoder-only archs")
+        if serve is None:
+            serve = ServeConfig(n_slots=batch, max_len=max_len,
+                                page_size=16 if max_len % 16 == 0 else None)
         self.params = params
         self.cfg = cfg
-        self.batch = batch
-        self.max_len = max_len
+        self.serve = serve
+        self.batch = serve.n_slots
+        self.max_len = serve.max_len
         self.runtime = runtime if runtime is not None else Runtime()
-        self._prefill = jax.jit(self.runtime.prefill_step(cfg, max_len))
-        self._decode = jax.jit(self.runtime.decode_step(cfg))
-        self.counters = {"batches": 0, "prefill_calls": 0, "prefill_tokens": 0,
-                         "decode_steps": 0, "tokens_out": 0,
-                         "truncated_tokens": 0, "dead_slot_steps": 0,
-                         "prefill_s": 0.0, "decode_s": 0.0}
-        self.ring = RingSink(capacity=256)
+        self.layout = kv_cache.plan_layout(cfg, serve)
+        self.scheduler = Scheduler(serve, paged=self.layout.paged)
+        self.counters = {k: 0 for k in _COUNTER_KEYS}
+        self.counters.update(prefill_s=0.0, decode_s=0.0)
+        self.ring = RingSink(capacity=serve.ring_capacity)
+        self.trace_counts: dict = {}
+
+        self._pref_raw = self.runtime.prefill_step(cfg, serve.max_len)
+        self._dec_raw = self.runtime.decode_step(cfg)
+        self._prefills: dict = {}  # bucket -> jitted prefill
+        self._decode = self._build_decode()
+        self._insert = self._build_insert()
+        if self.layout.paged:
+            self._state = kv_cache.init_pools(cfg, serve)
+        else:
+            from repro.models import lm
+            self._state = lm.init_cache(cfg, serve.n_slots, serve.max_len)
+        self._cur = np.zeros(serve.n_slots, np.int32)
+        self._pos = np.zeros(serve.n_slots, np.int32)
+
+    # -- compiled steps (each python body runs once per XLA trace) ----------
+
+    def _count(self, key: str):
+        self.trace_counts[key] = self.trace_counts.get(key, 0) + 1
+
+    def _build_decode(self):
+        serve, dec = self.serve, self._dec_raw
+        if self.layout.paged:
+            def step(params, pools, page_map, toks, pos):
+                self._count("decode")
+                posc = jnp.minimum(pos, serve.max_len - 1)
+                contig = kv_cache.gather_slots(pools, page_map, serve)
+                logits, new = dec(params, contig, toks, posc)
+                pools = kv_cache.scatter_token(pools, new, page_map, posc, serve)
+                return greedy_sample(logits)[:, 0], pools
+        else:
+            def step(params, caches, toks, pos):
+                self._count("decode")
+                posc = jnp.minimum(pos, serve.max_len - 1)
+                logits, new = dec(params, caches, toks, posc)
+                return greedy_sample(logits)[:, 0], new
+        return jax.jit(step)
+
+    def _build_insert(self):
+        serve = self.serve
+        if self.layout.paged:
+            def ins(pools, pref, phys_pages, src_page0):
+                self._count("insert")
+                return kv_cache.insert_prompt_pages(pools, pref, phys_pages,
+                                                    src_page0, serve)
+        else:
+            def ins(caches, pref, slot):
+                self._count("insert")
+                return kv_cache.insert_prompt_rows(caches, pref, slot)
+        return jax.jit(ins)
+
+    def _bucket_prefill(self, bucket: int):
+        fn = self._prefills.get(bucket)
+        if fn is not None:
+            return fn
+        raw, n_slots = self._pref_raw, self.serve.n_slots
+
+        def pf(params, batch, last_idx):
+            self._count(f"prefill[{bucket}]")
+            logits, caches = raw(params, batch)
+            idx = jnp.clip(last_idx, 0, logits.shape[1] - 1)
+            lg = jnp.take_along_axis(logits, idx[None, :, None], axis=1)
+            return greedy_sample(lg)[0], caches  # first tokens [n_slots]
+
+        fn = jax.jit(pf)
+        self._prefills[bucket] = fn
+        return fn
+
+    # -- serving loop -------------------------------------------------------
 
     def run(self, requests: List[Request]) -> List[Request]:
-        """Serve a list of requests in fixed-size batches.
+        """Serve requests to completion (continuous batching: admission,
+        per-slot stop, eviction and refill all interleave with decode).
 
-        Admission checks up front (before any device work): an empty prompt
-        is rejected, as is a ``max_new`` that cannot fit the engine's
-        ``max_len`` KV budget even with the whole prompt truncated away.
-        Over-long prompts are *left*-truncated to ``max_len - max_new`` —
-        the most recent context survives — and the dropped token count is
-        recorded (``counters["truncated_tokens"]`` + the per-batch ring).
+        Admission checks run up front, before any device work: empty prompts
+        and unservable ``max_new`` raise; over-long prompts are
+        *left*-truncated to ``max_len - max_new`` (the most recent context
+        survives) with the dropped count recorded.
         """
-        for i, r in enumerate(requests):
-            if len(r.prompt) == 0:
-                raise ValueError(f"request {i}: empty prompt")
-            if r.max_new <= 0:
-                raise ValueError(f"request {i}: max_new must be >= 1, "
-                                 f"got {r.max_new}")
-            if r.max_new >= self.max_len:
-                raise ValueError(
-                    f"request {i}: max_new={r.max_new} leaves no room for "
-                    f"any prompt token within max_len={self.max_len}")
-        for i in range(0, len(requests), self.batch):
-            self._run_batch(requests[i:i + self.batch])
+        requests = list(requests)
+        truncated = self.scheduler.submit(requests, time.perf_counter())
+        self.counters["truncated_tokens"] += truncated
+        sched = self.scheduler
+        while sched.pending() or sched.live_slots():
+            self._refill()
+            if sched.live_slots():
+                self._decode_one_step()
         return requests
 
-    def _run_batch(self, reqs: List[Request]):
-        B = len(reqs)
-        prompts, truncated = [], 0
-        for r in reqs:
-            p = np.asarray(r.prompt, np.int32)
-            keep = self.max_len - r.max_new
-            if len(p) > keep:
-                truncated += len(p) - keep
-                p = p[-keep:]  # keep the most recent context
-            prompts.append(p)
-        plen = max(len(p) for p in prompts)
-        toks = np.zeros((B, plen), np.int32)
-        for j, p in enumerate(prompts):
-            toks[j, plen - len(p):] = p  # left-pad
-        toks = jnp.asarray(toks)
-        if B < self.batch:
-            toks = jnp.pad(toks, ((0, self.batch - B), (0, 0)))
+    def _refill(self):
+        sched, serve = self.scheduler, self.serve
+        pack = self.layout.paged and serve.pack_prefill
+        align = serve.page_size if pack else 1
+        while sched.free_slots() and sched.pending():
+            wave = sched.take_wave(pack=pack, align=align)
+            if not wave:
+                break  # head-of-line blocked on pages until an eviction
+            self._prefill_wave(wave, pack, align)
+
+    def _prefill_wave(self, wave: List[Request], pack: bool, align: int):
+        serve, c = self.serve, self.counters
         t0 = time.perf_counter()
-        logits, caches = self._prefill(self.params, {"tokens": toks})
-        cur = greedy_sample(logits[:, -1:])
-        jax.block_until_ready(cur)
-        t_prefill = time.perf_counter() - t0
-        outs = [[] for _ in range(B)]
-        max_new = max(r.max_new for r in reqs)
-        pos = plen
-        t0 = time.perf_counter()
-        for _ in range(max_new):
-            # one B-element host transfer per step — padded dead slots (and
-            # their per-slot int() syncs) never reach the host
-            step_tok = np.asarray(cur[:B, 0])
-            for j in range(B):
-                outs[j].append(int(step_tok[j]))
-            logits, caches = self._decode(self.params, caches, cur, pos)
-            cur = greedy_sample(logits)
-            pos += 1
-        jax.block_until_ready(cur)
-        t_decode = time.perf_counter() - t0
-        for j, r in enumerate(reqs):
-            r.out = np.asarray(outs[j][:r.max_new], np.int32)
-        tokens_out = sum(min(r.max_new, max_new) for r in reqs)
-        c = self.counters
+        offs, off = [], 0
+        for r in wave:
+            offs.append(off)
+            off += -(-len(r.prompt) // align) * align
+        if self.layout.pad_ok:
+            bucket = serve.bucket_for(off)
+        else:
+            # recurrent state integrates pad tokens irreversibly: prefill at
+            # exact length (one compile per distinct length, see trace_counts)
+            bucket = len(wave[0].prompt)
+        toks = np.zeros((1, bucket), np.int32)
+        segs = np.zeros((1, bucket), np.int32)
+        poss = np.zeros((1, bucket), np.int32)
+        last = np.zeros(serve.n_slots, np.int32)
+        for i, r in enumerate(wave):
+            o, n = offs[i], len(r.prompt)
+            toks[0, o:o + n] = r.prompt
+            segs[0, o:o + n] = i + 1
+            poss[0, o:o + n] = np.arange(n)
+            last[i] = o + n - 1
+        positions = (np.broadcast_to(poss[None], (3, 1, bucket))
+                     if self.cfg.rope == "mrope" else poss)
+        batch = {"tokens": jnp.asarray(toks), "segments": jnp.asarray(segs),
+                 "positions": jnp.asarray(positions)}
+        first, pref = self._bucket_prefill(bucket)(
+            self.params, batch, jnp.asarray(last))
+        first_np = np.asarray(first)  # one [n_slots] host transfer
+        now = time.perf_counter()
         c["batches"] += 1
         c["prefill_calls"] += 1
-        c["prefill_tokens"] += B * plen
-        c["decode_steps"] += max_new
-        c["tokens_out"] += tokens_out
-        c["truncated_tokens"] += truncated
-        c["dead_slot_steps"] += (self.batch - B) * max_new
-        c["prefill_s"] += t_prefill
-        c["decode_s"] += t_decode
-        self.ring.write({"batch": B, "prompt_len": plen, "decode_steps": max_new,
-                         "tokens_out": tokens_out, "truncated_tokens": truncated,
-                         "dead_slots": self.batch - B, "prefill_s": t_prefill,
-                         "decode_s": t_decode})
-        return reqs
+        c["prefill_tokens"] += bucket
+        for i, r in enumerate(wave):
+            tok = int(first_np[i])
+            slot = self.scheduler.place(r, tok, now)
+            if self.layout.paged:
+                g = -(-len(r.prompt) // serve.page_size)
+                phys = np.where(np.arange(serve.pages_per_slot) < g,
+                                self.scheduler.page_map[slot.idx], 0)
+                self._state = self._insert(
+                    self._state, pref, jnp.asarray(phys, dtype=jnp.int32),
+                    jnp.asarray(offs[i] // serve.page_size, jnp.int32))
+            else:
+                self._state = self._insert(self._state, pref,
+                                           jnp.asarray(slot.idx, jnp.int32))
+            self._cur[slot.idx] = tok
+            self._pos[slot.idx] = slot.pos
+            c["tokens_out"] += 1
+            self._maybe_finish(slot, tok, now)
+        c["prefill_s"] += time.perf_counter() - t0
+
+    def _decode_one_step(self):
+        sched, c = self.scheduler, self.counters
+        live = sched.live_slots()
+        t0 = time.perf_counter()
+        c["decode_steps"] += 1
+        c["wasted_decode_steps"] += self.serve.n_slots - len(live)
+        toks = jnp.asarray(self._cur[:, None])
+        pos = jnp.asarray(self._pos)
+        if self.layout.paged:
+            nxt, self._state = self._decode(self.params, self._state,
+                                            jnp.asarray(sched.page_map),
+                                            toks, pos)
+        else:
+            nxt, self._state = self._decode(self.params, self._state, toks, pos)
+        nxt_np = np.asarray(nxt)  # the ONE batched host sync for this step
+        now = time.perf_counter()
+        for s in live:
+            t = int(nxt_np[s.idx])
+            s.outs.append(t)
+            s.pos += 1
+            self._cur[s.idx] = t
+            self._pos[s.idx] = s.pos
+            c["tokens_out"] += 1
+            c["decode_tokens"] += 1
+            self._maybe_finish(s, t, now)
+        c["decode_s"] += now - t0
+
+    def _maybe_finish(self, slot: Slot, tok: int, now: float):
+        r = slot.req
+        eos = r.eos if r.eos is not None else self.serve.eos
+        if len(slot.outs) >= r.max_new:
+            self._finish(slot, "length", now)
+        elif eos is not None and tok == eos:
+            self._finish(slot, "eos", now)  # eos token stays in the output
+
+    def _finish(self, slot: Slot, reason: str, now: float):
+        n_new = len(slot.outs)
+        req = self.scheduler.finish(slot, reason, now)
+        self.counters["requests_done"] += 1
+        self.ring.write({
+            "prompt_len": int(len(req.prompt)), "new_tokens": n_new,
+            "stop": reason, "truncated_tokens": req.truncated,
+            "queue_s": req.t_admit - req.t_submit,
+            "ttft_s": req.t_first - req.t_submit,
+            "latency_s": req.t_done - req.t_submit,
+        })
+        self._cur[slot.idx] = 0
+        self._pos[slot.idx] = 0
+
+    # -- telemetry ----------------------------------------------------------
 
     def telemetry(self) -> dict:
-        """Decode-path counter summary (cumulative since construction)."""
+        """Counters + throughput + latency percentiles + compile counts."""
         c = dict(self.counters)
-        c["decode_tok_per_s"] = (c["tokens_out"] / c["decode_s"]
+        c["decode_tok_per_s"] = (c["decode_tokens"] / c["decode_s"]
                                  if c["decode_s"] > 0 else 0.0)
         c["prefill_tok_per_s"] = (c["prefill_tokens"] / c["prefill_s"]
                                   if c["prefill_s"] > 0 else 0.0)
+        c["layout"] = "paged" if self.layout.paged else "contiguous"
+        c["trace_counts"] = dict(self.trace_counts)
+        lat = percentiles(self.ring.records, "latency_s", (50, 99))
+        c["latency_p50_s"], c["latency_p99_s"] = lat[50], lat[99]
+        ttft = percentiles(self.ring.records, "ttft_s", (50, 99))
+        c["ttft_p50_s"], c["ttft_p99_s"] = ttft[50], ttft[99]
         return c

@@ -1,0 +1,175 @@
+"""Paged KV cache: fixed-size pages, a per-slot page map, and a trash page.
+
+The decode cache tree (``lm.init_cache``) is slot-major: every leaf carries a
+batch dim of ``n_slots``. Paged mode replaces each full-length attention K/V
+leaf ``[n_rep, B, max_len, kv, hd]`` with a physical page *pool*
+``[n_rep, n_pages, page_size, kv, hd]`` plus one shared int32 page map
+``[n_slots, pages_per_slot]`` of physical page ids. Page 0 is reserved as the
+**trash page**: freed slots point every map entry at it, so their decode
+writes land harmlessly in storage nothing ever reads back un-masked.
+
+The three ops below are pure functions over the cache pytree; the engine
+composes them inside its jitted steps (gather -> ``lm.decode_step`` ->
+scatter of the one written column), so a decode step stays a single XLA
+program regardless of layout. Layout selection is shape-driven
+(:func:`plan_layout`): paging requires every cache leaf to be full-length
+attention K/V — sliding-window ring buffers and SSM/RWKV recurrent states
+are slot-major by construction (their decode updates are in-place row
+writes, not appends), so such trees fall back to the contiguous layout.
+
+See docs/serving.md for the page-map walkthrough and insert rules.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro import compat
+from repro.configs.base import ArchConfig
+from repro.models import lm
+from repro.serve.config import ServeConfig
+
+__all__ = ["CacheLayout", "plan_layout", "init_pools", "gather_slots",
+           "scatter_token", "insert_prompt_pages", "insert_prompt_rows"]
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheLayout:
+    """Resolved cache layout for one (arch, ServeConfig) pair.
+
+    * ``paged`` — pool + page-map storage (requires ``pack_ok``).
+    * ``pack_ok`` — every leaf is full-length attention K/V, so several
+      prompts may share one segment-masked prefill row and be inserted
+      page-wise.
+    * ``pad_ok`` — no recurrent state leaves: prompts may be right-padded to
+      a compile bucket (pad keys are segment-masked out of attention, and
+      ring/KV garbage beyond the prompt is hidden by the ``idx <= pos``
+      decode mask until overwritten). SSM/RWKV states integrate padding
+      tokens irreversibly, so ``pad_ok=False`` trees prefill at exact prompt
+      length (one compile per distinct length — recorded in telemetry).
+    """
+
+    paged: bool
+    pack_ok: bool
+    pad_ok: bool
+    leaf_kinds: tuple  # ("kv_full" | "kv_ring" | "state" | "cross", ...)
+
+
+def _leaf_kind(path_s: str, shape, max_len: int) -> str:
+    if "cross" in path_s:
+        return "cross"
+    if path_s.endswith("/k") or path_s.endswith("/v"):
+        return "kv_full" if shape[-3] == max_len else "kv_ring"
+    return "state"
+
+
+def plan_layout(cfg: ArchConfig, serve: ServeConfig) -> CacheLayout:
+    """Classify the arch's cache tree and pick paged vs contiguous."""
+    shapes = jax.eval_shape(lambda: lm.init_cache(cfg, 1, serve.max_len))
+    kinds = []
+    compat.tree_map_with_path(
+        lambda path, leaf: kinds.append(
+            _leaf_kind(_path_str(path), leaf.shape, serve.max_len)), shapes)
+    kinds = tuple(kinds)
+    pack_ok = bool(kinds) and all(k == "kv_full" for k in kinds)
+    pad_ok = bool(kinds) and all(k in ("kv_full", "kv_ring") for k in kinds)
+    paged = serve.page_size is not None and pack_ok
+    return CacheLayout(paged=paged, pack_ok=pack_ok, pad_ok=pad_ok,
+                       leaf_kinds=kinds)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/" + "/".join(parts)
+
+
+def init_pools(cfg: ArchConfig, serve: ServeConfig):
+    """Zero page pools mirroring the cache tree: each full-length K/V leaf
+    ``[n_rep, 1, max_len, kv, hd]`` becomes ``[n_rep, n_pages, P, kv, hd]``."""
+    shapes = jax.eval_shape(lambda: lm.init_cache(cfg, 1, serve.max_len))
+    P = serve.page_size
+
+    def pool(leaf):
+        n_rep = leaf.shape[0]
+        return jnp.zeros((n_rep, serve.pool_pages, P) + leaf.shape[3:],
+                         leaf.dtype)
+
+    return jax.tree.map(pool, shapes)
+
+
+def gather_slots(pools, page_map, serve: ServeConfig):
+    """Materialise the contiguous slot-major view ``lm.decode_step`` expects:
+    ``pool[:, page_map[b]]`` concatenated along the sequence dim per slot."""
+    P, pp = serve.page_size, serve.pages_per_slot
+    B = page_map.shape[0]
+    flat_idx = page_map.reshape(-1)
+
+    def gather(pool):
+        flat = jnp.take(pool, flat_idx, axis=1)  # [n_rep, B*pp, P, ...]
+        x = flat.reshape((pool.shape[0], B, pp * P) + pool.shape[3:])
+        return x[:, :, :serve.max_len]
+
+    return jax.tree.map(gather, pools)
+
+
+def scatter_token(pools, new_caches, page_map, pos, serve: ServeConfig):
+    """Write back the one K/V column decode appended at ``pos`` (int32 [B],
+    per-slot). Freed slots map to the trash page, absorbing their writes."""
+    P = serve.page_size
+    B = page_map.shape[0]
+    page = pos // P
+    off = pos % P
+    phys = jnp.take_along_axis(page_map, page[:, None], axis=1)[:, 0]  # [B]
+    rows = jnp.arange(B)
+
+    def scatter(pool, new):
+        col = new[:, rows, pos]  # [n_rep, B, kv, hd]
+        return pool.at[:, phys, off].set(col.astype(pool.dtype))
+
+    return jax.tree.map(scatter, pools, new_caches)
+
+
+def insert_prompt_pages(pools, pref_caches, phys_pages, src_page0,
+                        serve: ServeConfig):
+    """Copy one prefilled segment into its slot's pages.
+
+    ``pref_caches`` is a prefill cache tree (batch dim 1, seq dim max_len)
+    holding a packed row; the segment's tokens live at page-aligned offsets
+    ``[src_page0 * P, ...)``. ``phys_pages`` (int32 [pages_per_slot]) names
+    the destination: the slot's physical pages for the prompt span, padded
+    with trash page 0 — pages beyond the prompt (other segments' data, or
+    pads) are routed to the trash page, keeping the copy shape static so
+    one insert compiles for every bucket.
+    """
+    P, pp = serve.page_size, serve.pages_per_slot
+    src_idx = jnp.clip(src_page0 + jnp.arange(pp), 0, serve.max_len // P - 1)
+
+    def insert(pool, pref):
+        src = pref[:, 0].reshape(
+            (pref.shape[0], serve.max_len // P, P) + pref.shape[3:])
+        pages = jnp.take(src, src_idx, axis=1)  # [n_rep, pp, P, ...]
+        return pool.at[:, phys_pages].set(pages.astype(pool.dtype))
+
+    return jax.tree.map(insert, pools, pref_caches)
+
+
+def insert_prompt_rows(dec_caches, pref_caches, slot):
+    """Contiguous-layout insert: copy every prefill-cache leaf's single row
+    into slot ``slot`` (traced scalar — one compile covers all slots and
+    buckets). Full-row copies are layout-exact for K/V, ring buffers and
+    recurrent state alike because prefill builds its caches at the engine's
+    own ``max_len``."""
+
+    def insert(dec, pref):
+        return dec.at[:, slot].set(pref[:, 0].astype(dec.dtype))
+
+    return jax.tree.map(insert, dec_caches, pref_caches)

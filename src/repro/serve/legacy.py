@@ -1,0 +1,169 @@
+"""Run-to-completion serving baseline (the pre-continuous-batching engine).
+
+Requests are served in fixed batches: one prefill per batch (right-padded to
+the batch's longest prompt, segment-masked so pads never leak into
+attention), then **every** slot decodes ``max(max_new)`` steps — a slot that
+finished early keeps burning decode work until the stragglers catch up, and
+a shorter final batch decodes padding lanes. Neither loss is hidden:
+``wasted_decode_steps`` counts finished-slot steps and ``dead_slot_steps``
+counts padding-lane steps, which is exactly the gap the continuous engine
+(`repro.serve.engine`) closes; ``benchmarks/bench_serve.py`` measures both
+sides on the same workload. There is no queue, no eviction, no per-slot stop
+(eos is ignored), and prefill retraces per distinct padded prompt length
+(see ``trace_counts``).
+
+Greedy outputs are byte-identical to the continuous engine and to sequential
+single-request decoding — test-enforced in tests/test_serve.py.
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api.runtime import Runtime
+from repro.configs.base import ArchConfig
+from repro.serve.scheduler import Request
+from repro.serve.serve_step import greedy_sample
+from repro.telemetry.sinks import RingSink
+
+__all__ = ["Request", "RunToCompletionEngine"]
+
+
+class RunToCompletionEngine:
+    def __init__(self, params, cfg: ArchConfig, *, batch: int = 4,
+                 max_len: int = 256, runtime: Optional[Runtime] = None):
+        self.params = params
+        self.cfg = cfg
+        self.batch = batch
+        self.max_len = max_len
+        self.runtime = runtime if runtime is not None else Runtime()
+        self.trace_counts: dict = {}
+        pref_raw = self.runtime.prefill_step(cfg, max_len)
+        dec_raw = self.runtime.decode_step(cfg)
+
+        def pf(params, batch_d, last_idx):
+            self._count(f"prefill[{batch_d['tokens'].shape[1]}]")
+            logits, caches = pref_raw(params, batch_d)
+            lg = jnp.take_along_axis(logits, last_idx[:, None, None], axis=1)
+            return greedy_sample(lg)[:, 0], caches
+
+        def dc(params, caches, toks, pos):
+            self._count("decode")
+            logits, new = dec_raw(params, caches, toks, pos)
+            return greedy_sample(logits)[:, 0], new
+
+        self._prefill = jax.jit(pf)
+        self._decode = jax.jit(dc)
+        self.counters = {"batches": 0, "prefill_calls": 0, "prefill_tokens": 0,
+                         "decode_steps": 0, "tokens_out": 0,
+                         "truncated_tokens": 0, "dead_slot_steps": 0,
+                         "wasted_decode_steps": 0,
+                         "prefill_s": 0.0, "decode_s": 0.0}
+        self.ring = RingSink(capacity=256)
+
+    def _count(self, key: str):
+        self.trace_counts[key] = self.trace_counts.get(key, 0) + 1
+
+    def run(self, requests: List[Request]) -> List[Request]:
+        """Serve a list of requests in fixed-size run-to-completion batches.
+
+        Admission checks up front (before any device work): an empty prompt
+        is rejected, as is a ``max_new`` that cannot fit the engine's
+        ``max_len`` KV budget even with the whole prompt truncated away.
+        Over-long prompts are *left*-truncated to ``max_len - max_new`` —
+        the most recent context survives — and the dropped token count is
+        recorded (``counters["truncated_tokens"]`` + the per-batch ring).
+        """
+        for i, r in enumerate(requests):
+            if len(r.prompt) == 0:
+                raise ValueError(f"request {i}: empty prompt")
+            if r.max_new <= 0:
+                raise ValueError(f"request {i}: max_new must be >= 1, "
+                                 f"got {r.max_new}")
+            if r.max_new >= self.max_len:
+                raise ValueError(
+                    f"request {i}: max_new={r.max_new} leaves no room for "
+                    f"any prompt token within max_len={self.max_len}")
+        for i in range(0, len(requests), self.batch):
+            self._run_batch(requests[i:i + self.batch])
+        return requests
+
+    def _run_batch(self, reqs: List[Request]):
+        B, N = len(reqs), self.batch
+        prompts, truncated = [], 0
+        for r in reqs:
+            p = np.asarray(r.prompt, np.int32)
+            keep = self.max_len - r.max_new
+            if len(p) > keep:
+                truncated += len(p) - keep
+                p = p[-keep:]  # keep the most recent context
+            prompts.append(p)
+        plen = max(len(p) for p in prompts)
+        toks = np.zeros((N, plen), np.int32)
+        segs = np.zeros((N, plen), np.int32)
+        lens = np.zeros(N, np.int32)
+        for j, p in enumerate(prompts):
+            toks[j, :len(p)] = p  # right-pad; pads are segment-masked out
+            segs[j, :len(p)] = 1
+            lens[j] = len(p)
+        last_idx = np.maximum(lens - 1, 0)
+        t0 = time.perf_counter()
+        first, caches = self._prefill(
+            self.params, {"tokens": jnp.asarray(toks), "segments": jnp.asarray(segs)},
+            jnp.asarray(last_idx))
+        first_np = np.asarray(first)
+        t_prefill = time.perf_counter() - t0
+        outs = [[int(first_np[j])] for j in range(B)]
+        max_new = max(r.max_new for r in reqs)
+        cur = first[:, None]
+        pos = jnp.asarray(lens)  # per-slot positions (heterogeneous prompts)
+        wasted = dead = 0
+        t0 = time.perf_counter()
+        for t in range(1, max_new):
+            # every slot decodes every step — that is the run-to-completion
+            # deal. One [N] host transfer per step (dead-slot discipline).
+            nxt, caches = self._decode(self.params, caches, cur, pos)
+            step_tok = np.asarray(nxt)
+            for j in range(B):
+                outs[j].append(int(step_tok[j]))
+            wasted += sum(1 for r in reqs if t >= r.max_new)
+            dead += N - B
+            cur = nxt[:, None]
+            pos = pos + 1
+        jax.block_until_ready(cur)
+        t_decode = time.perf_counter() - t0
+        for j, r in enumerate(reqs):
+            r.out = np.asarray(outs[j][:r.max_new], np.int32)
+            r.stop = "length"
+        tokens_out = sum(r.max_new for r in reqs)
+        c = self.counters
+        c["batches"] += 1
+        c["prefill_calls"] += 1
+        c["prefill_tokens"] += N * plen
+        c["decode_steps"] += max_new - 1
+        c["tokens_out"] += tokens_out
+        c["truncated_tokens"] += truncated
+        c["dead_slot_steps"] += dead
+        c["wasted_decode_steps"] += wasted + dead
+        c["prefill_s"] += t_prefill
+        c["decode_s"] += t_decode
+        self.ring.write({"batch": B, "prompt_len": plen,
+                         "decode_steps": max_new - 1, "tokens_out": tokens_out,
+                         "truncated_tokens": truncated, "dead_slots": N - B,
+                         "wasted_decode_steps": wasted + dead,
+                         "prefill_s": t_prefill, "decode_s": t_decode})
+        return reqs
+
+    def telemetry(self) -> dict:
+        """Decode-path counter summary (cumulative since construction)."""
+        c = dict(self.counters)
+        c["decode_tok_per_s"] = (c["tokens_out"] / c["decode_s"]
+                                 if c["decode_s"] > 0 else 0.0)
+        c["prefill_tok_per_s"] = (c["prefill_tokens"] / c["prefill_s"]
+                                  if c["prefill_s"] > 0 else 0.0)
+        c["trace_counts"] = dict(self.trace_counts)
+        return c

@@ -32,8 +32,20 @@ from repro.core.compact_grad import _site_role, compact_rank
 from repro.core.sketching import COLUMN_METHODS
 
 __all__ = ["Sink", "JsonlSink", "CsvSink", "RingSink", "MultiSink",
-           "build_sinks", "recovery_record", "site_cost_table", "table_totals",
-           "join_hlo_cost"]
+           "build_sinks", "percentiles", "recovery_record", "site_cost_table",
+           "table_totals", "join_hlo_cost"]
+
+
+def percentiles(records, field: str, qs=(50, 99)) -> dict:
+    """Percentiles of one numeric field across sink records: ``{q: value}``,
+    ``None`` values when no record carries the field. The serving engine
+    summarizes its per-request ring this way (latency/TTFT p50/p99)."""
+    vals = [float(r[field]) for r in records
+            if isinstance(r.get(field), (int, float, np.integer, np.floating))]
+    if not vals:
+        return {q: None for q in qs}
+    arr = np.percentile(np.asarray(vals), list(qs))
+    return {q: float(v) for q, v in zip(qs, arr)}
 
 
 def recovery_record(event: str, **fields) -> dict:

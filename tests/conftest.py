@@ -14,6 +14,9 @@ sys.path.insert(0, os.path.join(ROOT, "src"))
 from repro import compat  # noqa: E402
 
 compat.ensure_host_devices(8)
+# persistent XLA compilation cache: warm suite reruns skip recompiles of
+# unchanged programs (feature-detected no-op on releases without it)
+compat.enable_compilation_cache()
 
 import jax  # noqa: E402
 import pytest  # noqa: E402

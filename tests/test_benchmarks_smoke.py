@@ -23,6 +23,7 @@ import pytest
     "benchmarks.bench_backward_fusion",
     "benchmarks.bench_adaptive",
     "benchmarks.bench_resilience",
+    "benchmarks.bench_serve",
 ])
 def test_bench_module_imports(mod):
     importlib.import_module(mod)
@@ -83,6 +84,25 @@ def test_bench_summary_baseline_is_git_seeded():
     assert committed["distributed"]["value"] is not None
     # outside the repo: no git baseline (tests above rely on the fallback)
     assert brun._committed_summary("/tmp/nowhere/BENCH_summary.json") is None
+
+
+def test_serve_bench_tiny():
+    """The serving bench end-to-end at toy scale: all three engines emit the
+    same tokens, the continuous engines waste at most what run-to-completion
+    wastes, and the paged engine keeps its one-compile-per-bucket promise."""
+    from benchmarks import bench_serve as bs
+
+    out = bs.run(tiny=True)
+    assert out["outputs_equal"]
+    v = out["variants"]
+    for name in ("legacy", "contiguous", "paged"):
+        assert v[name]["tok_per_s"] > 0
+    assert v["paged"]["wasted_decode_steps"] <= v["legacy"]["wasted_decode_steps"]
+    tc = v["paged"]["trace_counts"]
+    assert tc["decode"] == 1 and all(n == 1 for n in tc.values()), tc
+    # per-request latency stamps only exist on the continuous engines
+    assert v["paged"]["latency_p50_s"] is not None
+    assert v["legacy"]["latency_p50_s"] is None
 
 
 def test_backward_fusion_bench_tiny():

@@ -385,7 +385,10 @@ def test_engine_decode_counters():
     assert all(r.out is not None and len(r.out) == 4 for r in reqs)
     t = eng.telemetry()
     assert t["batches"] == 1 and t["prefill_calls"] == 1
-    assert t["decode_steps"] == 4 and t["tokens_out"] == 8
+    # first token comes from the prefill logits, so 4 new tokens = 3 decodes
+    assert t["decode_steps"] == 3 and t["tokens_out"] == 8
     assert t["decode_tok_per_s"] > 0 and t["prefill_tok_per_s"] > 0
-    assert len(eng.ring) == 1
-    assert eng.ring.records[0]["tokens_out"] == 8
+    # the continuous engine rings one record per finished REQUEST
+    assert len(eng.ring) == 2
+    assert all(r["new_tokens"] == 4 and r["latency_s"] >= 0
+               for r in eng.ring.records)
