@@ -1,0 +1,188 @@
+"""Observability overhead benchmark: tracing-on vs tracing-off wall time.
+
+The obs layer promises to be effectively free (docs/observability.md):
+tracing must cost <2% on the two hot paths that carry spans — the continuous
+serving engine and the training loop. This benchmark measures exactly that
+promise: ONE obs-enabled engine/runtime per path (same executables, same
+live metrics counters), with the tracer swapped for the NullTracer on the
+off reps, interleaved so clock drift and thermal state hit both variants
+equally. The ledgers and flight recorder are excluded by construction —
+they do no per-step work (compile-time/append-only), so toggling the tracer
+is the whole hot-path difference.
+
+Headline number (``results/bench/obs.json`` → ``BENCH_summary.json``):
+``obs_overhead_frac`` — the worse of the serve / train overhead fractions
+(``on/off - 1``; negative = within noise). The ``--check`` gate in
+``benchmarks/run.py`` holds it under an absolute 2% ceiling.
+
+Usage: PYTHONPATH=src python -m benchmarks.bench_obs [--full]
+"""
+from __future__ import annotations
+
+import argparse
+import gc
+
+import jax
+
+from benchmarks.bench_serve import _arch, _workload
+from benchmarks.common import save_result
+from repro.api import ExecutionConfig, Runtime
+from repro.data.synthetic import ClassStream
+from repro.models import lm
+from repro.models.mlp import mlp_arch
+from repro.obs import ObsConfig, clock, observability
+from repro.obs.tracing import NULL_TRACER
+from repro.optim import adamw, constant
+from repro.serve.config import ServeConfig
+from repro.serve.engine import Engine
+from repro.train.trainer import TrainerConfig, train_loop
+
+
+def _median(xs):
+    s = sorted(xs)
+    return s[len(s) // 2]
+
+
+def _summ(times: dict) -> dict:
+    """Overhead = median of per-pair on/off ratios.
+
+    Each rep runs off and on back-to-back on the same workload seed, so the
+    within-pair ratio cancels the slow drift (load, thermal, allocator
+    state) that dominates absolute times on a shared box; the median then
+    discards the occasional stall that lands inside one pair. Minima are
+    reported for context."""
+    ratios = [on / off for off, on in zip(times["off"], times["on"]) if off > 0]
+    return {"off_s": round(min(times["off"]), 4),
+            "on_s": round(min(times["on"]), 4),
+            "off_median_s": round(_median(times["off"]), 4),
+            "on_median_s": round(_median(times["on"]), 4),
+            "overhead_frac": (round(_median(ratios) - 1.0, 4)
+                              if ratios else None),
+            "reps": len(times["off"])}
+
+
+def _serve_engine(params, cfg, n_slots, max_len, obs):
+    rt = Runtime(execution=ExecutionConfig(obs=obs))
+    return Engine(params, cfg,
+                  serve=ServeConfig(n_slots=n_slots, max_len=max_len,
+                                    page_size=16),
+                  runtime=rt)
+
+
+def _bench_serve(obs_on: ObsConfig, *, tiny: bool, quick: bool, reps: int):
+    """ONE engine instance, tracing toggled per rep.
+
+    Two separately-constructed engines running identical code differ by
+    >10% wall time on a busy box (instance-level allocation/layout bias —
+    measured off-vs-off), which swamps a 2% overhead target. The engine's
+    obs hooks all dispatch on ``self._tracer``/``self._traced`` (the metrics
+    CounterView is live in both variants by design), so swapping in the
+    NullTracer on the same instance isolates exactly the tracing cost."""
+    cfg = _arch(tiny)
+    # short per-rep workloads: many quick pairs beat few long ones — the
+    # pairwise-median estimator (see _summ) tightens with pair count, while
+    # a long run just gives box-load drift more room inside each pair
+    if tiny:
+        n_requests, n_slots, max_len = 6, 2, 64
+    elif quick:
+        n_requests, n_slots, max_len = 6, 4, 128
+    else:
+        n_requests, n_slots, max_len = 12, 8, 128
+    params = lm.init_params(jax.random.key(0), cfg)
+    eng = _serve_engine(params, cfg, n_slots, max_len, obs_on)
+    real_tracer = eng._tracer
+
+    def set_tracing(on: bool):
+        eng._tracer = real_tracer if on else NULL_TRACER
+        eng._traced = on
+
+    eng.run(_workload(n_requests, max_len, cfg.vocab))  # warmup: compile
+    times = {"off": [], "on": []}
+    for rep in range(reps):
+        pair = [("off", False), ("on", True)]
+        if rep % 2:
+            pair.reverse()  # alternate order: cancel position-in-pair bias
+        for name, on in pair:
+            set_tracing(on)
+            reqs = _workload(n_requests, max_len, cfg.vocab, seed=rep + 1)
+            gc.collect()  # GC drift between reps otherwise swamps the signal
+            t0 = clock.now()
+            eng.run(reqs)
+            times[name].append(clock.now() - t0)
+    set_tracing(True)
+    return times
+
+
+def _bench_train(obs_on: ObsConfig, *, tiny: bool, quick: bool, reps: int):
+    """ONE obs-enabled Runtime (same executable), tracing toggled per rep.
+
+    Same rationale as ``_bench_serve``: a separate obs-off Runtime would
+    build a *second* jitted executable, and two executables of identical
+    code differ by several percent wall time on a busy box (instance-level
+    bias — the same effect measured engine-vs-engine). The trainer reads
+    ``observability(...).tracer`` at loop entry, so swapping the shared
+    Observability's tracer isolates exactly the per-step tracing cost the
+    <2% promise is about; the ledgered executable and live metrics counters
+    are identical in both variants. Batch 256 keeps the step
+    compute-dominated (quickstart-scale) rather than a dispatch-bound
+    micro-step."""
+    sizes = (32, 16, 16, 4) if tiny else (256, 128, 128, 8)
+    steps = 4 if tiny else (16 if quick else 32)
+    batch = 32 if tiny else 256
+    cfg = mlp_arch(sizes)
+    opt = adamw(constant(1e-2), clip=1.0)
+    rt = Runtime(execution=ExecutionConfig(obs=obs_on))
+    ob = observability(obs_on)
+    real_tracer = ob.tracer
+
+    def set_tracing(on: bool):
+        ob.tracer = real_tracer if on else NULL_TRACER
+
+    tcfg = TrainerConfig(steps=steps, log_every=10 ** 9, seed=0)
+
+    def data():
+        return ClassStream(dim=sizes[0], n_classes=sizes[-1],
+                           seed=0).batches(batch)
+
+    train_loop(rt, cfg, opt, data(), tcfg)  # warmup: compile
+    times = {"off": [], "on": []}
+    for rep in range(reps):
+        pair = [("off", False), ("on", True)]
+        if rep % 2:
+            pair.reverse()  # alternate order: cancel position-in-pair bias
+        for name, on in pair:
+            set_tracing(on)
+            gc.collect()  # GC drift between reps otherwise swamps the signal
+            t0 = clock.now()
+            train_loop(rt, cfg, opt, data(), tcfg)
+            times[name].append(clock.now() - t0)
+    set_tracing(True)
+    return times
+
+
+def run(quick: bool = True, tiny: bool = False):
+    reps = 3 if tiny else (41 if quick else 81)
+    obs_on = ObsConfig()  # trace + metrics + ledgers + flight, no exports
+    out = {"obs": "tracing on vs off, same instances", "reps": reps,
+           "serve": _summ(_bench_serve(obs_on, tiny=tiny, quick=quick,
+                                       reps=reps)),
+           "train": _summ(_bench_train(obs_on, tiny=tiny, quick=quick,
+                                       reps=reps))}
+    fracs = [v["overhead_frac"] for v in (out["serve"], out["train"])
+             if v["overhead_frac"] is not None]
+    out["obs_overhead_frac"] = max(fracs) if fracs else None
+    if not tiny:
+        save_result("obs", out)
+    print(f"serve overhead {out['serve']['overhead_frac']:+.2%} "
+          f"({out['serve']['off_s']}s -> {out['serve']['on_s']}s) | "
+          f"train overhead {out['train']['overhead_frac']:+.2%} "
+          f"({out['train']['off_s']}s -> {out['train']['on_s']}s) | "
+          f"headline {out['obs_overhead_frac']:+.2%}")
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    run(quick=not args.full)

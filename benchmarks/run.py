@@ -5,7 +5,10 @@ One benchmark per paper table/figure — see DESIGN.md §6 for the index.
 After the sweep, :func:`write_summary` distills ``results/bench/*.json``
 into a top-level ``BENCH_summary.json`` — one JSON line per benchmark with
 its key metric and the delta vs the previous summary — so the benchmark
-trajectory is machine-readable across PRs.
+trajectory is machine-readable across PRs. ``--check`` turns that trajectory
+into a gate: recompute the summary from the artifacts on disk, compare each
+key metric to the git-committed value under the per-metric tolerances in
+``_TOLERANCES``, and exit nonzero on any regression.
 """
 import argparse
 import json
@@ -53,7 +56,66 @@ _KEY_METRICS = {
     # the same mixed-max_new workload (>1 = continuous batching wins)
     "serve": ("continuous_vs_legacy_tok_per_s",
               lambda d: _get(d, "continuous_vs_legacy_tok_per_s")),
+    # worst-case obs-on/obs-off wall-time overhead across serve + train
+    # (negative = within noise); held under 2% by the --check ceiling
+    "obs": ("obs_overhead_frac", lambda d: _get(d, "obs_overhead_frac")),
 }
+
+
+# --check gate: per-metric tolerance for value-vs-prev regressions.
+# direction: which way is WORSE. rel_tol / abs_slack: a regression is flagged
+# only past prev*(1±rel_tol) shifted by abs_slack — wall-time metrics get
+# generous slack (shared CI boxes), ratio metrics get tight ones. ceiling
+# (optional): an absolute bound enforced even when prev is missing.
+_TOLERANCES = {
+    "compact_step_ms": {"direction": "lower", "rel_tol": 0.25, "abs_slack": 10.0},
+    "block_fused_step_ms": {"direction": "lower", "rel_tol": 0.25, "abs_slack": 10.0},
+    "adaptive_vs_fixed_flops": {"direction": "lower", "rel_tol": 0.05, "abs_slack": 0.0},
+    "escaped_flop_frac": {"direction": "lower", "rel_tol": 0.0, "abs_slack": 0.005},
+    "wasted_work_frac": {"direction": "lower", "rel_tol": 0.25, "abs_slack": 0.02},
+    "continuous_vs_legacy_tok_per_s": {"direction": "higher", "rel_tol": 0.15,
+                                       "abs_slack": 0.0},
+    "obs_overhead_frac": {"direction": "lower", "rel_tol": 0.0,
+                          "abs_slack": 0.01, "ceiling": 0.02},
+}
+
+
+def check_regressions(records, tolerances=None) -> list:
+    """Flag per-metric regressions in ``write_summary`` records.
+
+    Returns human-readable failure strings (empty = gate passes). A record
+    participates only when its metric has a tolerance entry; ``value=None``
+    (artifact missing the number) and ``prev=None`` (first appearance) are
+    never regressions — except a metric with a ``ceiling``, which is an
+    absolute bound on ``value`` regardless of history."""
+    tolerances = _TOLERANCES if tolerances is None else tolerances
+    failures = []
+    for rec in records:
+        tol = tolerances.get(rec.get("metric"))
+        value = rec.get("value")
+        if tol is None or value is None:
+            continue
+        name, metric = rec.get("name"), rec.get("metric")
+        ceiling = tol.get("ceiling")
+        if ceiling is not None and value > ceiling:
+            failures.append(
+                f"{name}: {metric}={value:.6g} exceeds ceiling {ceiling:g}")
+        prev = rec.get("prev")
+        if prev is None:
+            continue
+        if tol["direction"] == "lower":
+            bound = prev * (1.0 + tol["rel_tol"]) + tol["abs_slack"]
+            if value > bound:
+                failures.append(
+                    f"{name}: {metric} regressed {prev:.6g} -> {value:.6g} "
+                    f"(allowed <= {bound:.6g})")
+        else:
+            bound = prev * (1.0 - tol["rel_tol"]) - tol["abs_slack"]
+            if value < bound:
+                failures.append(
+                    f"{name}: {metric} regressed {prev:.6g} -> {value:.6g} "
+                    f"(allowed >= {bound:.6g})")
+    return failures
 
 
 def _parse_summary(text: str) -> dict:
@@ -150,15 +212,29 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--check", action="store_true",
+                    help="skip the sweep: recompute BENCH_summary.json from "
+                         "the artifacts on disk and exit nonzero on any "
+                         "per-metric regression vs the git-committed summary")
     args = ap.parse_args()
     quick = not args.full
+
+    if args.check:
+        records = write_summary()
+        failures = check_regressions(records)
+        for f in failures:
+            print(f"REGRESSION: {f}")
+        print(f"--check: {len(records)} metric(s), "
+              f"{len(failures)} regression(s)")
+        raise SystemExit(1 if failures else 0)
 
     from benchmarks import (bench_adaptive, bench_block_granularity,
                             bench_cost, bench_coverage,
                             bench_fig1a_correlation, bench_fig1b_mask_vs_sketch,
                             bench_fig2a_proxies, bench_fig2b_spectral,
                             bench_fig3_larger_archs, bench_fig4_location,
-                            bench_resilience, bench_serve, bench_variance)
+                            bench_obs, bench_resilience, bench_serve,
+                            bench_variance)
     jobs = {
         "fig1a_correlation": bench_fig1a_correlation.run,
         "fig1b_mask_vs_sketch": bench_fig1b_mask_vs_sketch.run,
@@ -173,6 +249,7 @@ def main():
         "coverage": bench_coverage.run,
         "resilience": bench_resilience.run,
         "serve": bench_serve.run,
+        "obs": bench_obs.run,
         "distributed": _run_distributed,
         "backward_fusion": _run_backward_fusion,
     }

@@ -619,6 +619,48 @@ class ThreadUncapturedTargetRule:
         return sorted(out)
 
 
+# ---------------------------------------------------------------------------
+# Rule 9: wall-clock reads outside repro/obs
+# ---------------------------------------------------------------------------
+
+# the sanctioned clock lives in repro/obs/clock.py; every timing read in the
+# package goes through it so spans / metrics / ad-hoc timers share one
+# timebase. _ns/monotonic variants are the same violation in disguise.
+_WALL_CLOCK = frozenset({"time.perf_counter", "time.perf_counter_ns",
+                         "time.time", "time.time_ns",
+                         "time.monotonic", "time.monotonic_ns"})
+
+
+@dataclasses.dataclass(frozen=True)
+class WallClockOutsideObsRule:
+    id: str = "wall-clock-outside-obs"
+    description: str = ("time.perf_counter/time.time read outside repro/obs — "
+                        "use repro.obs.clock.now()/wall() so every timer "
+                        "shares the span/metrics timebase")
+    allow: Tuple[str, ...] = ("obs/*",)
+
+    def check(self, ctx: FileContext) -> List[Finding]:
+        if _allowed(self, ctx):
+            return []
+        out = set()
+
+        def add(line, what):
+            out.add(Finding(
+                ctx.path, line, self.id,
+                f"{what} — use repro.obs.clock.now() (perf_counter) or "
+                "repro.obs.clock.wall() (time.time) instead"))
+
+        for line, dotted in ctx.imported_names:
+            if dotted in _WALL_CLOCK:
+                add(line, f"import of {dotted}")
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, (ast.Attribute, ast.Name)):
+                r = ctx.resolve(node)
+                if r in _WALL_CLOCK:
+                    add(node.lineno, r)
+        return sorted(out)
+
+
 DEFAULT_RULES: Tuple[Rule, ...] = (
     JaxVersionGatedRule(),
     CustomVjpRule(),
@@ -628,6 +670,7 @@ DEFAULT_RULES: Tuple[Rule, ...] = (
     TracerBranchRule(),
     SwallowedExceptionRule(),
     ThreadUncapturedTargetRule(),
+    WallClockOutsideObsRule(),
 )
 
 

@@ -19,6 +19,11 @@ One import gives the whole paper-reproduction surface:
     resilience``): in-graph gradient sentinel with exact-budget escalation,
     seeded fault injection, and checkpoint-rollback / elastic-remesh
     recovery (see docs/resilience.md).
+  * :class:`ObsConfig` / :class:`Observability` — host-side execution
+    observability (``ExecutionConfig.obs``): spans (Chrome-trace export),
+    the unified metrics registry, compile/memory ledgers, and the flight
+    recorder's crash bundles; ``Runtime.observability()`` is the accessor
+    (see docs/observability.md).
   * :func:`register_estimator` — plug in new unbiased-VJP estimator families
     (RAD / BASIS-style) without touching core.
   * :class:`SiteSpec` / :class:`ExecutionPlan` / :func:`resolve_site` — the
@@ -48,6 +53,7 @@ from repro.core import SketchConfig, SketchPolicy
 from repro.core.estimators import (Estimator, EstimatorVJP, get_estimator,
                                    register_estimator, registered_backends)
 from repro.core.site import ExecutionPlan, SiteSpec, resolve_site
+from repro.obs import Observability, ObsConfig
 from repro.resilience import (FaultPlan, FaultSpec, GradSentinel,
                               ResilienceConfig, Supervisor)
 from repro.serve.config import ServeConfig
@@ -65,6 +71,8 @@ __all__ = [
     "FaultPlan",
     "FaultSpec",
     "GradSentinel",
+    "Observability",
+    "ObsConfig",
     "ResilienceConfig",
     "Runtime",
     "ServeConfig",

@@ -44,6 +44,14 @@ class ExecutionConfig:
         non-finite/norm-explosion flag — bit-identical training when the
         sentinel never trips. ``None`` (the default) compiles the plain
         three-argument step. See docs/resilience.md.
+      obs: a :class:`repro.obs.ObsConfig` enabling execution observability:
+        wall-clock spans on the train/serve/recovery hot paths, the unified
+        metrics registry, compile/memory ledgers on steps built through
+        ``Runtime.train_step``, and the flight recorder's crash bundles.
+        Purely host-side — the compiled computation is untouched, so
+        training stays bit-identical with obs on or off. ``None`` (the
+        default) disables it entirely (null tracer, zero allocation on the
+        step path). See docs/observability.md.
     """
 
     mesh: Optional[Any] = None
@@ -56,6 +64,7 @@ class ExecutionConfig:
     cost_mode: bool = False
     telemetry: Optional[Any] = None  # repro.telemetry.TelemetryConfig
     resilience: Optional[Any] = None  # repro.resilience.ResilienceConfig
+    obs: Optional[Any] = None  # repro.obs.ObsConfig
 
     def __post_init__(self):
         object.__setattr__(self, "data_axes", tuple(self.data_axes))
@@ -75,6 +84,9 @@ class ExecutionConfig:
                                                        "sentinel"):
             raise ValueError("resilience must be a repro.resilience."
                              f"ResilienceConfig, got {self.resilience!r}")
+        if self.obs is not None and not hasattr(self.obs, "trace_capacity"):
+            raise ValueError("obs must be a repro.obs.ObsConfig, got "
+                             f"{self.obs!r}")
 
     def site_spec(self, role: str, cfg, *, d_out: int, d_in: int,
                   has_bias: bool = False, x_ndim: int = 3):

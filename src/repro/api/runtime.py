@@ -60,6 +60,96 @@ def _cache_clear():  # test hook
     del _STEP_BUILDS[:]
 
 
+def _ledger_key(runtime, cfg, budget, donate) -> str:
+    """Human-readable spelling of one step-cache key for the compile ledger
+    (same identity granularity as _STEP_CACHE: runtime hash disambiguates
+    equal arch/budget under different policies/meshes)."""
+    name = getattr(cfg, "name", type(cfg).__name__)
+    return (f"train_step/{name}/budget={budget}/donate={donate}"
+            f"/rt={hash(runtime) & 0xffffffff:08x}")
+
+
+def _with_ledger(jfn, ob, lkey: str, want_memory: bool):
+    """Wrap a jitted step so its first call runs AOT lower+compile, timing
+    the trace and compile phases separately and recording
+    ``memory_analysis()`` into the shared ledgers; later calls dispatch to
+    the compiled executable directly.
+
+    Falls back to the plain jitted callable — permanently — if AOT is
+    unavailable or a later call arrives with different arg shapes (the
+    compiled object is monomorphic; ``jax.jit`` re-specializes instead).
+    Host-side only: the computation, donation and outputs are unchanged.
+    """
+    from repro.obs import clock, ledgers
+
+    state = {"compiled": None, "first": True}
+
+    def step(*args, **kw):
+        compiled = state["compiled"]
+        if compiled is not None:
+            try:
+                return compiled(*args, **kw)
+            except (TypeError, ValueError):
+                # shape-polymorphic caller — hand back to jit's own cache
+                state["compiled"] = None
+                return jfn(*args, **kw)
+        if not state["first"]:
+            return jfn(*args, **kw)
+        state["first"] = False
+        t0 = clock.now()
+        try:
+            lowered = jfn.lower(*args, **kw)
+            t1 = clock.now()
+            compiled = lowered.compile()
+            t2 = clock.now()
+        except Exception:
+            # AOT path unavailable on this release/call — time the first
+            # call as one opaque trace+compile+run figure instead
+            t0 = clock.now()
+            out = jfn(*args, **kw)
+            _ledger_compile(ob, lkey, first_call_s=clock.now() - t0)
+            return out
+        mem = None
+        if want_memory:
+            try:
+                mem = ledgers.memory_summary(compiled.memory_analysis())
+            except Exception:
+                mem = None
+        _ledger_compile(ob, lkey, trace_s=t1 - t0, compile_s=t2 - t1,
+                        memory=mem)
+        if ob is not None and ob.tracer.enabled:
+            parent = ob.tracer.current_id()
+            ob.tracer.add_span("jit_trace", t0, t1, parent=parent, key=lkey)
+            ob.tracer.add_span("xla_compile", t1, t2, parent=parent, key=lkey)
+        state["compiled"] = compiled
+        return compiled(*args, **kw)
+
+    return step
+
+
+def _ledger_compile(ob, lkey: str, *, trace_s=None, compile_s=None,
+                    first_call_s=None, memory=None):
+    from repro.obs import ledgers
+
+    kw = dict(trace_s=trace_s, compile_s=compile_s, first_call_s=first_call_s)
+    if ob is not None and ob.compile_ledger is not None:
+        ob.compile_ledger.record_compile(lkey, **kw)
+    if ob is not None and ob.memory_ledger is not None and memory is not None:
+        ob.memory_ledger.record(lkey, memory)
+        ob.memory_ledger.sample(lkey)
+    if ledgers.global_active():
+        ledgers.GLOBAL_COMPILE_LEDGER.record_compile(lkey, **kw)
+
+
+def _ledger_hit(ob, lkey: str):
+    from repro.obs import ledgers
+
+    if ob is not None and ob.compile_ledger is not None:
+        ob.compile_ledger.record_hit(lkey)
+    if ledgers.global_active():
+        ledgers.GLOBAL_COMPILE_LEDGER.record_hit(lkey)
+
+
 @dataclasses.dataclass(frozen=True)
 class Runtime:
     """Unified sketched-backprop runtime (hashable; compare by value).
@@ -94,6 +184,18 @@ class Runtime:
                                        decode=decode, layer_index=layer_index,
                                        n_layers=n_layers)
 
+    # -- observability ------------------------------------------------------
+
+    def observability(self):
+        """The shared :class:`repro.obs.Observability` for this runtime's
+        ``execution.obs`` config: tracer, metrics registries, compile/memory
+        ledgers (``.report()`` gives the JSON-ready rollup — compile
+        hit/miss, per-step memory, merged metrics). The disabled singleton
+        when ``obs`` is None."""
+        from repro.obs import observability
+
+        return observability(self.execution.obs)
+
     # -- training -----------------------------------------------------------
 
     def train_step(self, cfg, opt, *, budget: Optional[float] = 1.0,
@@ -109,9 +211,19 @@ class Runtime:
             # every budget is the same exact step — collapse the cache key
             # so a multi-bucket schedule with no policy compiles once
             budget = 1.0
+        from repro.obs import ledgers, observability
+
+        ob = observability(self.execution.obs)
+        ledger_on = jitted and (ob.compile_ledger is not None
+                                or ob.memory_ledger is not None)
+        global_on = jitted and ledgers.global_active()
+        lkey = (_ledger_key(self, cfg, budget, donate)
+                if (ledger_on or global_on) else None)
         key = (self, cfg, opt, budget, donate, jitted)
         fn = _cache_get(key)
         if fn is not None:
+            if lkey is not None:
+                _ledger_hit(ob if ledger_on else None, lkey)
             return fn
         import jax
 
@@ -121,6 +233,9 @@ class Runtime:
                              execution=self.execution)
         if jitted:
             fn = jax.jit(fn, donate_argnums=(0,) if donate else ())
+            if lkey is not None:
+                fn = _with_ledger(fn, ob if ledger_on else None, lkey,
+                                  ob.memory_ledger is not None)
         _cache_put(key, fn)
         return fn
 

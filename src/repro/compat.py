@@ -24,6 +24,7 @@ outside the distributed stack may call ``jax.tree.*`` directly.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import inspect
 import os
@@ -49,6 +50,8 @@ __all__ = [
     "tree_flatten_with_path",
     "register_dataclass",
     "user_frames",
+    "named_scope",
+    "trace_annotation",
 ]
 
 
@@ -113,11 +116,19 @@ def enable_compilation_cache(cache_dir: Optional[str] = None, *,
     ``min_compile_time_secs=None`` keeps JAX's own threshold (~1 s), which
     caches exactly the expensive compiles worth persisting. Do NOT lower it
     to cache everything: serializing the long tail of sub-second executables
-    costs more wall-clock than it saves, and on at least one in-range
-    release (0.4.37 CPU) a reloaded tiny executable breaks donated-buffer
-    aliasing across an elastic mesh switch (garbage in donated outputs —
-    caught by the resilience suite, which is why this knob is opt-in).
+    costs more wall-clock than it saves.
+
+    jax 0.4.37 (jaxlib 0.4.36) CPU is blacklisted outright: an executable
+    *reloaded* from the persistent cache loses its input-output aliasing
+    metadata, so donated state chains free buffers that are still alive —
+    recycled bytes in donated outputs at best, ``malloc_consolidate():
+    invalid chunk size`` at worst. Reproduce by running the resilience
+    drill twice against a warm cache. This is a version blacklist rather
+    than the usual feature detection because the breakage is silent memory
+    corruption — there is nothing to probe without tripping it.
     """
+    if jax.default_backend() == "cpu" and jax.__version__ == "0.4.37":
+        return False
     if cache_dir is None:
         if os.environ.get("JAX_COMPILATION_CACHE_DIR"):
             return True  # explicitly configured — respect it
@@ -246,6 +257,41 @@ def user_frames(source_info):
                 for f in siu.user_frames(source_info)]
     except Exception:
         return []
+
+
+# ---------------------------------------------------------------------------
+# profiler / naming annotations (consumed by repro.obs.tracing)
+# ---------------------------------------------------------------------------
+
+
+def named_scope(name: str):
+    """``jax.named_scope`` context manager, or a null context where absent.
+
+    Purely a tracing-time op-naming aid (shows up in HLO / jaxpr dumps);
+    absence degrades to nothing.
+    """
+    fn = getattr(jax, "named_scope", None)
+    return fn(name) if fn is not None else contextlib.nullcontext()
+
+
+def _resolve_trace_annotation():
+    try:
+        return getattr(jax.profiler, "TraceAnnotation", None)
+    except AttributeError:  # pragma: no cover - profiler module absent
+        return None
+
+
+_TRACE_ANNOTATION = _resolve_trace_annotation()
+
+
+def trace_annotation(name: str):
+    """``jax.profiler.TraceAnnotation`` context manager when this release
+    has one, else a null context — host-side spans opened through it appear
+    on the TraceMe timeline of a real ``jax.profiler`` capture (negligible
+    cost outside an active profiling session)."""
+    if _TRACE_ANNOTATION is None:  # pragma: no cover - whole range has it
+        return contextlib.nullcontext()
+    return _TRACE_ANNOTATION(name)
 
 
 # ---------------------------------------------------------------------------

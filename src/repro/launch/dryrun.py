@@ -26,7 +26,6 @@ Usage:
 """
 import argparse
 import json
-import time
 import traceback
 
 import jax
@@ -43,6 +42,8 @@ from repro.launch.hlo_analysis import (HW, collective_bytes, cost_summary,
                                        fit_depth_model, predict_depth_model,
                                        roofline_terms)
 from repro.launch.mesh import dp_axes, make_production_mesh, mp_axes
+from repro.obs import clock
+from repro.obs.ledgers import memory_summary
 from repro.optim import adamw, cosine_warmup
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
@@ -215,10 +216,10 @@ def _builder(cfg, cell, mesh, policy, cost_mode, sp=True):
 
 
 def _lower_compile(fn, args):
-    t0 = time.time()
+    t0 = clock.now()
     lowered = fn.lower(*args)
     compiled = lowered.compile()
-    return compiled, time.time() - t0
+    return compiled, clock.now() - t0
 
 
 def run_cell(arch: str, cell_name: str, *, multi_pod: bool, policy_name: str = "compact",
@@ -238,16 +239,8 @@ def run_cell(arch: str, cell_name: str, *, multi_pod: bool, policy_name: str = "
     compiled, dt = _lower_compile(fn, args)
     ma = compiled.memory_analysis()
     rec["compile_s"] = round(dt, 2)
-    rec["memory"] = {
-        "argument_GB_per_dev": ma.argument_size_in_bytes / 1e9,
-        "output_GB_per_dev": ma.output_size_in_bytes / 1e9,
-        "temp_GB_per_dev": ma.temp_size_in_bytes / 1e9,
-        "alias_GB_per_dev": ma.alias_size_in_bytes / 1e9,
-        "peak_GB_per_dev": (ma.argument_size_in_bytes + ma.output_size_in_bytes
-                            + ma.temp_size_in_bytes - ma.alias_size_in_bytes) / 1e9,
-        "fits_hbm": (ma.argument_size_in_bytes + ma.output_size_in_bytes
-                     + ma.temp_size_in_bytes - ma.alias_size_in_bytes) < hw.hbm_bytes,
-    }
+    # same field set the obs memory ledger records per train_step executable
+    rec["memory"] = memory_summary(ma, hbm_bytes=hw.hbm_bytes)
     rec["rolled_cost"] = cost_summary(compiled)
     rec["rolled_collectives"] = collective_bytes(compiled.as_text())
     del compiled, fn, args

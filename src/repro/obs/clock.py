@@ -1,0 +1,20 @@
+"""The one sanctioned wall-clock source.
+
+Every host-side timing in ``src/`` routes through this module — the
+``wall-clock-outside-obs`` lint rule (``repro.analysis``) forbids
+``time.perf_counter`` / ``time.time`` anywhere else under ``src/repro`` so
+that spans, metrics and ledgers all share one monotonic timebase and no
+module quietly grows its own ad-hoc timing again.
+
+``now()`` is the monotonic timestamp used by spans, the serving engine's
+request stamps, the straggler controller and the ledgers; ``wall()`` is
+epoch time, only for labeling artifacts (crash-bundle metadata).
+"""
+from __future__ import annotations
+
+import time
+
+__all__ = ["now", "wall"]
+
+now = time.perf_counter
+wall = time.time

@@ -1,0 +1,162 @@
+"""Compile & memory ledgers: where compile time and HBM actually go.
+
+**Compile ledger** — one entry per executable built through
+``Runtime.train_step`` (and per ``launch/dryrun`` lower+compile), keyed by
+the same human-readable description of the Runtime step-cache key
+(``(runtime, arch, opt, budget, donate)``), recording trace/compile wall
+seconds and subsequent cache **hits** — the machine-readable answer to "how
+many distinct executables did this run/suite build, and what did each cost"
+(the tier-1 warm-run wall-time floor; conftest can dump the process-global
+ledger via ``REPRO_COMPILE_LEDGER``).
+
+**Memory ledger** — per-compiled-step ``compiled.memory_analysis()``
+(argument/output/temp/alias, peak bytes per device — same fields the dry-run
+records) plus live ``device.memory_stats()`` samples where real hardware
+provides them (feature-detected; host CPU devices return nothing).
+
+Both are plain-python and bounded-cost: entries are appended only at compile
+time (rare) or on explicit ``sample()`` calls, never in the step hot loop.
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+from typing import Any, Dict, List, Optional
+
+from repro.obs import clock
+
+__all__ = ["CompileLedger", "MemoryLedger", "memory_summary",
+           "device_memory_stats", "GLOBAL_COMPILE_LEDGER", "global_active",
+           "GLOBAL_ENV"]
+
+GLOBAL_ENV = "REPRO_COMPILE_LEDGER"
+
+
+def memory_summary(ma, hbm_bytes: Optional[int] = None) -> dict:
+    """``memory_analysis()`` result → the repo's standard GB-per-device dict
+    (the exact field set ``launch/dryrun`` has always recorded; ``fits_hbm``
+    only when an HBM size is given)."""
+    peak = (ma.argument_size_in_bytes + ma.output_size_in_bytes
+            + ma.temp_size_in_bytes - ma.alias_size_in_bytes)
+    out = {
+        "argument_GB_per_dev": ma.argument_size_in_bytes / 1e9,
+        "output_GB_per_dev": ma.output_size_in_bytes / 1e9,
+        "temp_GB_per_dev": ma.temp_size_in_bytes / 1e9,
+        "alias_GB_per_dev": ma.alias_size_in_bytes / 1e9,
+        "peak_GB_per_dev": peak / 1e9,
+    }
+    if hbm_bytes is not None:
+        out["fits_hbm"] = peak < hbm_bytes
+    return out
+
+
+def device_memory_stats() -> List[dict]:
+    """Live per-device allocator stats where the backend offers them.
+
+    Real TPU/GPU devices expose ``memory_stats()`` (bytes in use, peak,
+    limit); host-CPU fakes either lack the method or return ``None`` — those
+    devices are simply omitted, so on the test mesh this is ``[]``.
+    """
+    import jax
+
+    out = []
+    for d in jax.devices():
+        fn = getattr(d, "memory_stats", None)
+        if fn is None:
+            continue
+        try:
+            stats = fn()
+        except (RuntimeError, NotImplementedError):
+            stats = None
+        if stats:
+            out.append({"device": str(d), **{k: v for k, v in stats.items()}})
+    return out
+
+
+class CompileLedger:
+    """Append-only record of executable builds and step-cache hits."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.entries: List[dict] = []
+        self._hits: Dict[str, int] = {}
+
+    def record_compile(self, key: str, *, trace_s: Optional[float] = None,
+                       compile_s: Optional[float] = None,
+                       first_call_s: Optional[float] = None,
+                       **extra) -> dict:
+        entry = {"key": key, "event": "compile", "at": clock.now(),
+                 "trace_s": trace_s, "compile_s": compile_s,
+                 "first_call_s": first_call_s}
+        entry.update(extra)
+        with self._lock:
+            self.entries.append(entry)
+        return entry
+
+    def record_hit(self, key: str) -> None:
+        with self._lock:
+            self._hits[key] = self._hits.get(key, 0) + 1
+
+    def summary(self) -> dict:
+        with self._lock:
+            entries = list(self.entries)
+            hits = dict(self._hits)
+        compile_s = sum(e["compile_s"] or 0.0 for e in entries)
+        first_s = sum(e["first_call_s"] or 0.0 for e in entries)
+        return {"compiles": len(entries), "hits": sum(hits.values()),
+                "distinct_keys": len({e["key"] for e in entries} | set(hits)),
+                "total_compile_s": compile_s,
+                "total_first_call_s": first_s}
+
+    def to_json(self) -> dict:
+        summary = self.summary()  # takes the lock itself — don't hold it here
+        with self._lock:
+            return {"summary": summary,
+                    "hits_by_key": dict(self._hits),
+                    "entries": [dict(e) for e in self.entries]}
+
+    def write(self, path: str) -> str:
+        d = os.path.dirname(os.path.abspath(path))
+        os.makedirs(d, exist_ok=True)
+        with open(path, "w") as f:
+            json.dump(self.to_json(), f, indent=2, default=str)
+        return path
+
+
+class MemoryLedger:
+    """Per-executable memory analyses + on-demand live device samples."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.by_key: Dict[str, dict] = {}
+        self.samples: List[dict] = []
+
+    def record(self, key: str, ma_or_summary: Any) -> dict:
+        summ = (ma_or_summary if isinstance(ma_or_summary, dict)
+                else memory_summary(ma_or_summary))
+        with self._lock:
+            self.by_key[key] = summ
+        return summ
+
+    def sample(self, label: str = "") -> List[dict]:
+        stats = device_memory_stats()
+        if stats:
+            with self._lock:
+                self.samples.append({"label": label, "at": clock.now(),
+                                     "devices": stats})
+        return stats
+
+    def to_json(self) -> dict:
+        with self._lock:
+            return {"by_key": {k: dict(v) for k, v in self.by_key.items()},
+                    "live_samples": [dict(s) for s in self.samples]}
+
+
+# Process-global compile ledger: opt-in via the REPRO_COMPILE_LEDGER env var
+# (conftest dumps it to results/compile_ledger.json after the tier-1 suite).
+GLOBAL_COMPILE_LEDGER = CompileLedger()
+
+
+def global_active() -> bool:
+    return bool(os.environ.get(GLOBAL_ENV))

@@ -20,9 +20,10 @@ and steps-to-recover.
 """
 from __future__ import annotations
 
-import time
 from typing import Callable, Iterable, Optional
 
+from repro.obs import clock, observability
+from repro.obs.metrics import MetricsRegistry
 from repro.resilience.faults import DeviceLossFault, FaultInjector
 from repro.resilience.sentinel import RollbackRequired
 
@@ -52,12 +53,30 @@ class Supervisor:
         self.tcfg = tcfg
         self.injector = FaultInjector.wrap(fault_plan)
         self.events: list = []
-        self.recoveries = 0
+        # recovery counters live in the unified registry; `recoveries` stays
+        # readable/assignable as a plain int through the property below
+        self._ob = observability(runtime.execution.obs)
+        self.metrics = MetricsRegistry()
+        if self._ob.metrics is not None:
+            self._ob.adopt("resilience", self.metrics)
+        self._recoveries = self.metrics.counter("resilience.recoveries")
+        self._event_count = self.metrics.counter("resilience.events")
+
+    @property
+    def recoveries(self) -> int:
+        return int(self._recoveries.value)
+
+    @recoveries.setter
+    def recoveries(self, v: int) -> None:
+        self._recoveries.set(v)
 
     # -- event plumbing ------------------------------------------------------
 
     def _record(self, rec: dict, sink=None):
         self.events.append(dict(rec))
+        self._event_count.inc()
+        if self._ob.flight is not None:
+            self._ob.flight.note(rec)
         if sink is not None:
             sink.write(dict(rec))
 
@@ -90,6 +109,7 @@ class Supervisor:
 
         rcfg = self.runtime.execution.resilience
         sink = tsinks.build_sinks(self.runtime.execution.telemetry)
+        tracer = self._ob.tracer
         history: list = []
         attempt = 0
         try:
@@ -104,36 +124,51 @@ class Supervisor:
                     return state, history
                 except RollbackRequired as e:
                     history.extend(e.history)
+                    self._ob.dump_crash("rollback", {
+                        "step": e.step, "cause": e.cause, "attempt": attempt})
                     self._bump(e, rcfg)
                     attempt += 1
-                    t0 = time.perf_counter()
-                    resume = (ckptlib.latest_verified_step(self.tcfg.ckpt_dir)
-                              if self.tcfg.ckpt_dir else None)
-                    state = None  # train_loop auto-restores (verified) or re-inits
-                    self._record(tsinks.recovery_record(
-                        "rollback", step=e.step, cause=e.cause,
-                        resume_step=int(resume or 0),
-                        steps_lost=e.step + 1 - int(resume or 0),
-                        wall_s=time.perf_counter() - t0), sink)
+                    with tracer.span("recovery.rollback", step=e.step,
+                                     cause=e.cause):
+                        t0 = clock.now()
+                        resume = (
+                            ckptlib.latest_verified_step(self.tcfg.ckpt_dir)
+                            if self.tcfg.ckpt_dir else None)
+                        state = None  # train_loop auto-restores (verified) or re-inits
+                        self._record(tsinks.recovery_record(
+                            "rollback", step=e.step, cause=e.cause,
+                            resume_step=int(resume or 0),
+                            steps_lost=e.step + 1 - int(resume or 0),
+                            wall_s=clock.now() - t0), sink)
                 except DeviceLossFault as e:
                     history.extend(e.history)
+                    self._ob.dump_crash("device_loss", {
+                        "step": e.step, "mesh_shape": list(e.mesh_shape),
+                        "attempt": attempt})
                     self._bump(e, rcfg)
                     attempt += 1
                     if not self.tcfg.ckpt_dir:
                         raise
-                    t0 = time.perf_counter()
-                    old = self.runtime.execution.mesh
-                    old_shape = tuple(old.devices.shape) if old is not None else ()
-                    new_mesh = self._remesh(e.mesh_shape)
-                    state, resume = elastic.resume_on_mesh(
-                        self.tcfg.ckpt_dir, e.state, new_mesh)
-                    self._record(tsinks.recovery_record(
-                        "device_loss_reshard", step=e.step, cause="device_loss",
-                        resume_step=int(resume),
-                        steps_lost=e.step - int(resume),
-                        old_mesh=list(old_shape),
-                        new_mesh=list(e.mesh_shape),
-                        wall_s=time.perf_counter() - t0), sink)
+                    with tracer.span("recovery.device_loss", step=e.step):
+                        t0 = clock.now()
+                        old = self.runtime.execution.mesh
+                        old_shape = (tuple(old.devices.shape)
+                                     if old is not None else ())
+                        new_mesh = self._remesh(e.mesh_shape)
+                        state, resume = elastic.resume_on_mesh(
+                            self.tcfg.ckpt_dir, e.state, new_mesh)
+                        self._record(tsinks.recovery_record(
+                            "device_loss_reshard", step=e.step,
+                            cause="device_loss",
+                            resume_step=int(resume),
+                            steps_lost=e.step - int(resume),
+                            old_mesh=list(old_shape),
+                            new_mesh=list(e.mesh_shape),
+                            wall_s=clock.now() - t0), sink)
+                except ckptlib.CheckpointError as e:
+                    # unrecoverable inside train_loop (retry ladder exhausted)
+                    self._ob.dump_crash("checkpoint_error", {"error": str(e)})
+                    raise
         finally:
             if sink is not None:
                 sink.close()

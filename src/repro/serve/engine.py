@@ -27,7 +27,6 @@ docs/serving.md for the full contract.
 """
 from __future__ import annotations
 
-import time
 from typing import List, Optional
 
 import jax
@@ -36,6 +35,8 @@ import numpy as np
 
 from repro.api.runtime import Runtime
 from repro.configs.base import ArchConfig
+from repro.obs import clock, observability
+from repro.obs.metrics import MetricsRegistry
 from repro.serve import kv_cache
 from repro.serve.config import ServeConfig
 from repro.serve.scheduler import Request, Scheduler, Slot
@@ -74,8 +75,17 @@ class Engine:
         self.runtime = runtime if runtime is not None else Runtime()
         self.layout = kv_cache.plan_layout(cfg, serve)
         self.scheduler = Scheduler(serve, paged=self.layout.paged)
-        self.counters = {k: 0 for k in _COUNTER_KEYS}
-        self.counters.update(prefill_s=0.0, decode_s=0.0)
+        # metrics: each engine owns a registry (instances never collide) and
+        # registers it with the shared Observability for export/reporting;
+        # `counters` keeps the historical dict spelling as a view
+        self.obs = observability(self.runtime.execution.obs)
+        self._tracer = self.obs.tracer
+        self._traced = self._tracer.enabled
+        self.metrics = MetricsRegistry()
+        if self.obs.metrics is not None:
+            self.obs.adopt("serve", self.metrics)
+        self.counters = self.metrics.view(
+            "serve", _COUNTER_KEYS + ("prefill_s", "decode_s"))
         self.ring = RingSink(capacity=serve.ring_capacity)
         self.trace_counts: dict = {}
 
@@ -157,13 +167,14 @@ class Engine:
         survives) with the dropped count recorded.
         """
         requests = list(requests)
-        truncated = self.scheduler.submit(requests, time.perf_counter())
-        self.counters["truncated_tokens"] += truncated
-        sched = self.scheduler
-        while sched.pending() or sched.live_slots():
-            self._refill()
-            if sched.live_slots():
-                self._decode_one_step()
+        with self._tracer.span("serve.run", n_requests=len(requests)):
+            truncated = self.scheduler.submit(requests, clock.now())
+            self.counters["truncated_tokens"] += truncated
+            sched = self.scheduler
+            while sched.pending() or sched.live_slots():
+                self._refill()
+                if sched.live_slots():
+                    self._decode_one_step()
         return requests
 
     def _refill(self):
@@ -178,7 +189,7 @@ class Engine:
 
     def _prefill_wave(self, wave: List[Request], pack: bool, align: int):
         serve, c = self.serve, self.counters
-        t0 = time.perf_counter()
+        t0 = clock.now()
         offs, off = [], 0
         for r in wave:
             offs.append(off)
@@ -206,7 +217,7 @@ class Engine:
         first, pref = self._bucket_prefill(bucket)(
             self.params, batch, jnp.asarray(last))
         first_np = np.asarray(first)  # one [n_slots] host transfer
-        now = time.perf_counter()
+        now = clock.now()
         c["batches"] += 1
         c["prefill_calls"] += 1
         c["prefill_tokens"] += bucket
@@ -227,12 +238,16 @@ class Engine:
             self._pos[slot.idx] = slot.pos
             c["tokens_out"] += 1
             self._maybe_finish(slot, tok, now)
-        c["prefill_s"] += time.perf_counter() - t0
+        end = clock.now()
+        c["prefill_s"] += end - t0
+        if self._traced:
+            self._tracer.add_span("prefill_wave", t0, end, bucket=int(bucket),
+                                  n=len(wave))
 
     def _decode_one_step(self):
         sched, c = self.scheduler, self.counters
         live = sched.live_slots()
-        t0 = time.perf_counter()
+        t0 = clock.now()
         c["decode_steps"] += 1
         c["wasted_decode_steps"] += self.serve.n_slots - len(live)
         toks = jnp.asarray(self._cur[:, None])
@@ -244,7 +259,7 @@ class Engine:
         else:
             nxt, self._state = self._decode(self.params, self._state, toks, pos)
         nxt_np = np.asarray(nxt)  # the ONE batched host sync for this step
-        now = time.perf_counter()
+        now = clock.now()
         for s in live:
             t = int(nxt_np[s.idx])
             s.outs.append(t)
@@ -255,6 +270,8 @@ class Engine:
             c["decode_tokens"] += 1
             self._maybe_finish(s, t, now)
         c["decode_s"] += now - t0
+        if self._traced:
+            self._tracer.add_span("decode_step", t0, now, live=len(live))
 
     def _maybe_finish(self, slot: Slot, tok: int, now: float):
         r = slot.req
@@ -268,12 +285,26 @@ class Engine:
         n_new = len(slot.outs)
         req = self.scheduler.finish(slot, reason, now)
         self.counters["requests_done"] += 1
+        span_id = None
+        if self._traced:
+            # the request's full lifecycle, reconstructed post-hoc from the
+            # scheduler's existing stamps: queued -> prefill (admit..first
+            # token, includes the KV insert) -> decode; `span_id` on the
+            # ring record joins latency rows to the trace
+            tr = self._tracer
+            span_id = tr.add_span("request", req.t_submit, req.t_done,
+                                  stop=reason, prompt_len=int(len(req.prompt)),
+                                  new_tokens=n_new)
+            tr.add_span("queued", req.t_submit, req.t_admit, parent=span_id)
+            tr.add_span("prefill", req.t_admit, req.t_first, parent=span_id)
+            tr.add_span("decode", req.t_first, req.t_done, parent=span_id)
         self.ring.write({
             "prompt_len": int(len(req.prompt)), "new_tokens": n_new,
             "stop": reason, "truncated_tokens": req.truncated,
             "queue_s": req.t_admit - req.t_submit,
             "ttft_s": req.t_first - req.t_submit,
             "latency_s": req.t_done - req.t_submit,
+            "span_id": span_id,
         })
         self._cur[slot.idx] = 0
         self._pos[slot.idx] = 0

@@ -17,7 +17,6 @@ single-request decoding — test-enforced in tests/test_serve.py.
 """
 from __future__ import annotations
 
-import time
 from typing import List, Optional
 
 import jax
@@ -26,6 +25,8 @@ import numpy as np
 
 from repro.api.runtime import Runtime
 from repro.configs.base import ArchConfig
+from repro.obs import clock, observability
+from repro.obs.metrics import MetricsRegistry
 from repro.serve.scheduler import Request
 from repro.serve.serve_step import greedy_sample
 from repro.telemetry.sinks import RingSink
@@ -58,11 +59,15 @@ class RunToCompletionEngine:
 
         self._prefill = jax.jit(pf)
         self._decode = jax.jit(dc)
-        self.counters = {"batches": 0, "prefill_calls": 0, "prefill_tokens": 0,
-                         "decode_steps": 0, "tokens_out": 0,
-                         "truncated_tokens": 0, "dead_slot_steps": 0,
-                         "wasted_decode_steps": 0,
-                         "prefill_s": 0.0, "decode_s": 0.0}
+        self.obs = observability(self.runtime.execution.obs)
+        self.metrics = MetricsRegistry()
+        if self.obs.metrics is not None:
+            self.obs.adopt("serve_legacy", self.metrics)
+        self.counters = self.metrics.view(
+            "serve_legacy",
+            ("batches", "prefill_calls", "prefill_tokens", "decode_steps",
+             "tokens_out", "truncated_tokens", "dead_slot_steps",
+             "wasted_decode_steps", "prefill_s", "decode_s"))
         self.ring = RingSink(capacity=256)
 
     def _count(self, key: str):
@@ -111,18 +116,18 @@ class RunToCompletionEngine:
             segs[j, :len(p)] = 1
             lens[j] = len(p)
         last_idx = np.maximum(lens - 1, 0)
-        t0 = time.perf_counter()
+        t0 = clock.now()
         first, caches = self._prefill(
             self.params, {"tokens": jnp.asarray(toks), "segments": jnp.asarray(segs)},
             jnp.asarray(last_idx))
         first_np = np.asarray(first)
-        t_prefill = time.perf_counter() - t0
+        t_prefill = clock.now() - t0
         outs = [[int(first_np[j])] for j in range(B)]
         max_new = max(r.max_new for r in reqs)
         cur = first[:, None]
         pos = jnp.asarray(lens)  # per-slot positions (heterogeneous prompts)
         wasted = dead = 0
-        t0 = time.perf_counter()
+        t0 = clock.now()
         for t in range(1, max_new):
             # every slot decodes every step — that is the run-to-completion
             # deal. One [N] host transfer per step (dead-slot discipline).
@@ -135,7 +140,7 @@ class RunToCompletionEngine:
             cur = nxt[:, None]
             pos = pos + 1
         jax.block_until_ready(cur)
-        t_decode = time.perf_counter() - t0
+        t_decode = clock.now() - t0
         for j, r in enumerate(reqs):
             r.out = np.asarray(outs[j][:r.max_new], np.int32)
             r.stop = "length"

@@ -90,10 +90,20 @@ def _part(p):
     return f"x:{p}"
 
 
+def _snapshot(tree):
+    """Owned host copies of every leaf. ``jax.device_get`` on the CPU
+    backend returns zero-copy *views* of device buffers; with donated train
+    steps those buffers are reused in place by later steps, so a view held
+    across an async write races the training loop (torn leaves in the
+    written checkpoint, and freed-buffer reads once donation drops the
+    allocation). ``np.array(..., copy=True)`` pins the snapshot."""
+    return compat.tree_map(
+        lambda x: np.array(jax.device_get(x), copy=True), tree)
+
+
 def save(ckpt_dir: str, step: int, tree, *, keep: int = 3):
     """Synchronous atomic save."""
-    host_tree = compat.tree_map(lambda x: np.asarray(jax.device_get(x)), tree)
-    _write(ckpt_dir, step, host_tree, keep)
+    _write(ckpt_dir, step, _snapshot(tree), keep)
 
 
 class _Writer(threading.Thread):
@@ -101,23 +111,30 @@ class _Writer(threading.Thread):
     ``self.error`` (not swallowed by the dying daemon thread) and re-raised
     as :class:`CheckpointError` by :meth:`CheckpointManager.wait`."""
 
-    def __init__(self, ckpt_dir, step, host_tree, keep):
+    def __init__(self, ckpt_dir, step, host_tree, keep, tracer=None):
         super().__init__(daemon=True)
         self.error: BaseException | None = None
         self._job = (ckpt_dir, step, host_tree, keep)
+        self._tracer = tracer
 
     def run(self):
         try:
-            _write(*self._job)
+            if self._tracer is not None and self._tracer.enabled:
+                # I/O span on the writer thread (the tracer's nesting state
+                # is per-thread; the ring is shared)
+                with self._tracer.span("ckpt_io_write", step=self._job[1]):
+                    _write(*self._job)
+            else:
+                _write(*self._job)
         except BaseException as e:  # captured for wait(); never swallowed
             self.error = e
 
 
-def save_async(ckpt_dir: str, step: int, tree, *, keep: int = 3) -> _Writer:
+def save_async(ckpt_dir: str, step: int, tree, *, keep: int = 3,
+               tracer=None) -> _Writer:
     """Snapshot to host, write in background. Returns the writer thread;
     check ``.error`` after ``.join()`` (CheckpointManager does both)."""
-    host_tree = compat.tree_map(lambda x: np.asarray(jax.device_get(x)), tree)
-    t = _Writer(ckpt_dir, step, host_tree, keep)
+    t = _Writer(ckpt_dir, step, _snapshot(tree), keep, tracer)
     t.start()
     return t
 
@@ -252,17 +269,20 @@ def restore(ckpt_dir: str, tree_like, *, step=None, shardings=None):
 class CheckpointManager:
     """Trainer-facing manager: periodic async saves + crash-safe resume."""
 
-    def __init__(self, ckpt_dir: str, every: int = 100, keep: int = 3):
+    def __init__(self, ckpt_dir: str, every: int = 100, keep: int = 3,
+                 tracer=None):
         self.dir = ckpt_dir
         self.every = every
         self.keep = keep
+        self.tracer = tracer  # repro.obs tracer; async writes record I/O spans
         self._pending: _Writer | None = None
 
     def maybe_save(self, step: int, tree):
         if step % self.every != 0:
             return False
         self.wait()
-        self._pending = save_async(self.dir, step, tree, keep=self.keep)
+        self._pending = save_async(self.dir, step, tree, keep=self.keep,
+                                   tracer=self.tracer)
         return True
 
     def wait(self):

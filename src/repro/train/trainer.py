@@ -24,6 +24,7 @@ import numpy as np
 
 from repro import compat
 from repro.api import Runtime
+from repro.obs import observability
 from repro.configs.base import ArchConfig
 from repro.core import SketchPolicy
 from repro.optim import Optimizer
@@ -168,13 +169,38 @@ def train_loop(runtime: Runtime, cfg: ArchConfig, opt: Optimizer,
         injector = FaultInjector.wrap(faults)
         if rcfg.sentinel:
             sentinel = GradSentinel(rcfg)
+    ob = observability(runtime.execution.obs)
+    tracer = ob.tracer
+    traced = tracer.enabled
     key = compat.prng_key(tcfg.seed)
     if state is None:
         state = init_state(jax.random.fold_in(key, 0), cfg, opt)
 
-    ckpt = CheckpointManager(tcfg.ckpt_dir, tcfg.ckpt_every) if tcfg.ckpt_dir else None
+    ckpt = (CheckpointManager(tcfg.ckpt_dir, tcfg.ckpt_every, tracer=tracer)
+            if tcfg.ckpt_dir else None)
     if ckpt is not None:
-        restored = ckpt.restore_or_none(state)
+        # restore() yields host numpy leaves; commit them to device arrays
+        # *before* the loop. The compiled step donates its state argument,
+        # and donating an auto-converted numpy operand hands XLA a
+        # conversion temporary to alias in place — the whole donation chain
+        # then rides memory whose keep-alive drops with this call frame
+        # (observed as the resumed run's final state.step reading recycled
+        # bytes once the allocator is under churn).
+        mesh = runtime.execution.mesh
+        if mesh is not None:
+            from repro.train import elastic
+            restored = ckpt.restore_or_none(
+                state, shardings=elastic.state_shardings(state, mesh))
+        else:
+            restored = ckpt.restore_or_none(state)
+            if restored is not None:
+                # an explicit target device forces owned copies; deviceless
+                # device_put (like the jit-call conversion) may zero-copy
+                # aligned numpy buffers, which the donating step then aliases
+                dev = jax.local_devices()[0]
+                restored = (compat.tree_map(
+                    lambda x: jax.device_put(x, dev), restored[0]),
+                    restored[1])
         if restored is not None:
             state, step0 = restored
             print(f"[trainer] resumed from step {step0}")
@@ -185,8 +211,9 @@ def train_loop(runtime: Runtime, cfg: ArchConfig, opt: Optimizer,
     buckets = schedule.buckets()
     if sentinel is not None and None not in buckets:
         buckets = buckets + (None,)
-    steps_by_budget = {b: runtime.train_step(cfg, opt, budget=b)
-                       for b in buckets}
+    with tracer.span("build_buckets", n_buckets=len(buckets)):
+        steps_by_budget = {b: runtime.train_step(cfg, opt, budget=b)
+                           for b in buckets}
     controller = schedule.make_controller(policy=runtime.policy)
     fetch_each_step = bool(controller is not None
                            and getattr(controller, "wants_metrics", False))
@@ -199,6 +226,8 @@ def train_loop(runtime: Runtime, cfg: ArchConfig, opt: Optimizer,
             sink.write(dict(rec))
         if on_event is not None:
             on_event(dict(rec))
+        if ob.flight is not None:
+            ob.flight.note(rec)
 
     def ckpt_wait_safe():
         # a pending async write may carry a CheckpointError; before raising a
@@ -208,14 +237,22 @@ def train_loop(runtime: Runtime, cfg: ArchConfig, opt: Optimizer,
         if ckpt is None:
             return
         try:
-            ckpt.wait()
+            with tracer.span("ckpt_wait"):
+                ckpt.wait()
         except ckptlib.CheckpointError as e:
             emit({"event": "ckpt_io_error", "step": step, "error": str(e)})
+            ob.dump_crash("ckpt_io", {"step": step, "error": str(e)})
 
+    reg = ob.metrics
+    steps_counter = reg.counter("train.steps") if reg is not None else None
+    budget_gauge = reg.gauge("train.budget") if reg is not None else None
     history = []
     data_it = iter(data)
     start_step = int(jax.device_get(state.step))
+    loop_span = tracer.span("train_loop", start_step=start_step,
+                            steps=tcfg.steps)
     try:
+      with loop_span:
         for step in range(start_step, tcfg.steps):
             batch = next(data_it)
             fscale = 1.0
@@ -224,19 +261,21 @@ def train_loop(runtime: Runtime, cfg: ArchConfig, opt: Optimizer,
                 if fault is not None:
                     emit({"event": "fault_injected", "step": step,
                           "kind": fault.kind})
-                    if fault.kind == "device_loss":
-                        ckpt_wait_safe()
-                        raise DeviceLossFault(step, fault.mesh_shape,
-                                              history=history, state=state)
-                    if fault.kind == "slow":
-                        time.sleep(fault.sleep_s)
-                    elif fault.kind == "ckpt_io":
-                        if ckpt is not None:
-                            ckptlib.inject_fault_once()
-                    elif fault.kind == "nonfinite":
-                        fscale = float("nan")
-                    elif fault.kind == "spike":
-                        fscale = fault.scale
+                    with tracer.span("fault_injected", step=step,
+                                     kind=fault.kind):
+                        if fault.kind == "device_loss":
+                            ckpt_wait_safe()
+                            raise DeviceLossFault(step, fault.mesh_shape,
+                                                  history=history, state=state)
+                        if fault.kind == "slow":
+                            time.sleep(fault.sleep_s)
+                        elif fault.kind == "ckpt_io":
+                            if ckpt is not None:
+                                ckptlib.inject_fault_once()
+                        elif fault.kind == "nonfinite":
+                            fscale = float("nan")
+                        elif fault.kind == "spike":
+                            fscale = fault.scale
             step_key = jax.random.fold_in(key, step + 1)
             if seed_salt:
                 # retried trajectories resample their sketches; salt 0 is
@@ -249,10 +288,21 @@ def train_loop(runtime: Runtime, cfg: ArchConfig, opt: Optimizer,
             fn = steps_by_budget[budget]
             if controller:
                 controller.step_begin()
-            if rcfg is not None:
+            if traced:
+                # span attrs built only on the traced path — tracing-off
+                # stays allocation-free here
+                with tracer.span("train_step", step=step,
+                                 budget=-1.0 if budget is None else budget):
+                    if rcfg is not None:
+                        state, metrics = fn(state, batch, step_key, fscale)
+                    else:
+                        state, metrics = fn(state, batch, step_key)
+            elif rcfg is not None:
                 state, metrics = fn(state, batch, step_key, fscale)
             else:
                 state, metrics = fn(state, batch, step_key)
+            if steps_counter is not None:
+                steps_counter.inc()
             host_m = None  # full fetch (sink/log cadence only)
             host_scalars = None
             if controller or sentinel is not None:
@@ -280,6 +330,11 @@ def train_loop(runtime: Runtime, cfg: ArchConfig, opt: Optimizer,
             if sink is not None and step % tel.interval == 0:
                 host_m = _host_metrics(metrics)
                 sink.write(dict(host_m, step=step, budget=budget))
+            if budget_gauge is not None and (
+                    step % tcfg.log_every == 0 or step == tcfg.steps - 1):
+                budget_gauge.set(-1.0 if budget is None else budget)
+                if ob.flight is not None:
+                    ob.flight.snapshot(step)
             if step % tcfg.log_every == 0 or step == tcfg.steps - 1:
                 m = host_m if host_m is not None else _host_metrics(metrics)
                 m = dict(m, step=step, budget=budget)
@@ -300,19 +355,25 @@ def train_loop(runtime: Runtime, cfg: ArchConfig, opt: Optimizer,
                     # recorded hiccup, no lost checkpoint cadence
                     emit({"event": "ckpt_io_recovered", "step": step,
                           "error": str(e)})
-                    ckptlib.save(ckpt.dir, step + 1, state, keep=ckpt.keep)
+                    ob.dump_crash("ckpt_io", {"step": step, "error": str(e)})
+                    with tracer.span("ckpt_save_sync", step=step + 1):
+                        ckptlib.save(ckpt.dir, step + 1, state, keep=ckpt.keep)
         if ckpt is not None:
             try:
-                ckpt.wait()
+                with tracer.span("ckpt_wait"):
+                    ckpt.wait()
             except ckptlib.CheckpointError as e:
                 if rcfg is None:
                     raise
                 emit({"event": "ckpt_io_recovered", "step": tcfg.steps,
                       "error": str(e)})
-                ckptlib.save(ckpt.dir, tcfg.steps, state, keep=ckpt.keep)
+                ob.dump_crash("ckpt_io", {"step": tcfg.steps, "error": str(e)})
+                with tracer.span("ckpt_save_sync", step=tcfg.steps):
+                    ckptlib.save(ckpt.dir, tcfg.steps, state, keep=ckpt.keep)
     finally:
         if sink is not None:
             sink.close()
+        ob.export()
     return state, history
 
 

@@ -15,7 +15,10 @@ from repro import compat  # noqa: E402
 
 compat.ensure_host_devices(8)
 # persistent XLA compilation cache: warm suite reruns skip recompiles of
-# unchanged programs (feature-detected no-op on releases without it)
+# unchanged programs. No-op on releases without it AND on the blacklisted
+# jax 0.4.37 CPU, where reloaded executables corrupt donated buffers (see
+# compat.enable_compilation_cache) — the call stays so other releases keep
+# their warm reruns.
 compat.enable_compilation_cache()
 
 import jax  # noqa: E402
@@ -25,3 +28,20 @@ import pytest  # noqa: E402
 @pytest.fixture
 def key():
     return compat.prng_key(0)
+
+
+def pytest_sessionfinish(session, exitstatus):
+    """Opt-in compile-cost report for the suite itself: run with
+    ``REPRO_COMPILE_LEDGER=1`` and every Runtime.train_step compile the
+    tests trigger is tallied into ``results/compile_ledger.json``
+    (trace/compile wall seconds + hit/miss per executable key)."""
+    from repro.obs import ledgers
+
+    if not ledgers.global_active():
+        return
+    out = os.path.join(ROOT, "results", "compile_ledger.json")
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    ledgers.GLOBAL_COMPILE_LEDGER.write(out)
+    summ = ledgers.GLOBAL_COMPILE_LEDGER.summary()
+    print(f"\n[obs] compile ledger -> {out}: {summ['compiles']} compile(s), "
+          f"{summ['hits']} hit(s), {summ['total_compile_s']:.1f}s compiling")

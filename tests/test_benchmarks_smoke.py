@@ -24,6 +24,7 @@ import pytest
     "benchmarks.bench_adaptive",
     "benchmarks.bench_resilience",
     "benchmarks.bench_serve",
+    "benchmarks.bench_obs",
 ])
 def test_bench_module_imports(mod):
     importlib.import_module(mod)
@@ -103,6 +104,68 @@ def test_serve_bench_tiny():
     # per-request latency stamps only exist on the continuous engines
     assert v["paged"]["latency_p50_s"] is not None
     assert v["legacy"]["latency_p50_s"] is None
+
+
+def test_obs_bench_tiny():
+    """The obs-overhead bench end-to-end at toy scale: both paths produce a
+    pairwise-ratio overhead estimate and the headline is their max. (The
+    <2% claim itself is gated on the committed full-size artifact by
+    run.py --check, not on this noisy tiny run.)"""
+    from benchmarks import bench_obs as bo
+
+    out = bo.run(tiny=True)
+    assert out["reps"] == 3
+    for path in ("serve", "train"):
+        r = out[path]
+        assert r["reps"] == 3
+        assert r["off_s"] > 0 and r["on_s"] > 0
+        assert r["overhead_frac"] is not None
+    assert out["obs_overhead_frac"] == max(out["serve"]["overhead_frac"],
+                                           out["train"]["overhead_frac"])
+
+
+def test_check_regressions_units():
+    """The --check gate's comparison logic: ceilings bind even without
+    history, both directions flag past their tolerance band, and missing
+    values/prevs/tolerances never flag."""
+    from benchmarks.run import check_regressions
+
+    tol = {"step_ms": {"direction": "lower", "rel_tol": 0.10, "abs_slack": 1.0},
+           "tok_per_s": {"direction": "higher", "rel_tol": 0.10, "abs_slack": 0.0},
+           "frac": {"direction": "lower", "rel_tol": 0.0, "abs_slack": 0.0,
+                    "ceiling": 0.02}}
+
+    def rec(metric, value, prev=None, name="b"):
+        return {"name": name, "metric": metric, "value": value, "prev": prev}
+
+    # within band: 10% rel + 1.0 abs slack on a prev of 100 allows 111
+    assert check_regressions([rec("step_ms", 111.0, 100.0)], tol) == []
+    [f] = check_regressions([rec("step_ms", 111.1, 100.0)], tol)
+    assert "regressed" in f and "step_ms" in f
+    # higher-is-better: 90 is allowed on prev 100, 89.9 is not
+    assert check_regressions([rec("tok_per_s", 90.0, 100.0)], tol) == []
+    assert len(check_regressions([rec("tok_per_s", 89.9, 100.0)], tol)) == 1
+    # ceiling binds with no prev at all; under-ceiling first appearance is ok
+    [f] = check_regressions([rec("frac", 0.03)], tol)
+    assert "ceiling" in f
+    assert check_regressions([rec("frac", 0.015)], tol) == []
+    # ceiling + regression can both fire on one record
+    assert len(check_regressions([rec("frac", 0.03, prev=0.01)], tol)) == 2
+    # silent skips: no value, no tolerance entry
+    assert check_regressions([rec("step_ms", None, 100.0),
+                              rec("unknown_metric", 5.0, 1.0)], tol) == []
+
+
+def test_check_gate_passes_on_committed_artifacts():
+    """run.py --check against the repo's own committed artifacts + summary
+    must pass — it is the regression gate this PR turns on."""
+    import subprocess
+    import sys
+
+    r = subprocess.run([sys.executable, "-m", "benchmarks.run", "--check"],
+                       capture_output=True, text=True)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "0 regression(s)" in r.stdout
 
 
 def test_backward_fusion_bench_tiny():

@@ -31,6 +31,7 @@ _BAD = [
     ("bad_tracer_branch.py", "tracer-branch", {7, 9}),
     ("bad_swallowed.py", "swallowed-exception", {8, 16}),
     ("bad_thread.py", "thread-uncaptured-target", {10, 16}),
+    ("bad_wall_clock.py", "wall-clock-outside-obs", {2, 7, 9, 10}),
 ]
 
 _GOOD = [
@@ -42,6 +43,7 @@ _GOOD = [
     "good_tracer_branch.py",
     "good_swallowed.py",
     "good_thread.py",
+    "good_wall_clock.py",
 ]
 
 

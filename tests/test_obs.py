@@ -1,0 +1,438 @@
+"""Observability layer (`repro.obs`): spans/tracing, the unified metrics
+registry, compile/memory ledgers, and the flight recorder — plus the
+end-to-end claims the docs make: Chrome-trace/Perfetto export round-trips,
+serve ring records join to request-lifecycle spans by ``span_id``, a
+checkpoint-IO fault leaves a crash bundle containing the ``fault_injected``
+span, and observability (on or off) never changes trained numerics — the
+obs-on state is bit-identical to ``obs=None``.
+"""
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.api import ExecutionConfig, Runtime
+from repro.configs.base import ArchConfig
+from repro.data.synthetic import ClassStream
+from repro.models import lm
+from repro.models.mlp import mlp_arch
+from repro.obs import NULL_OBS, ObsConfig, observability
+from repro.obs.ledgers import CompileLedger, memory_summary
+from repro.obs.metrics import CounterView, MetricsRegistry
+from repro.obs.tracing import NULL_TRACER, Tracer
+from repro.optim import adamw, constant
+from repro.resilience import FaultPlan, FaultSpec, ResilienceConfig
+from repro.resilience import Supervisor
+from repro.serve.config import ServeConfig
+from repro.serve.engine import Engine, Request
+from repro.train.trainer import TrainerConfig, train_loop
+
+SIZES = (32, 16, 16, 4)
+
+SERVE_CFG = ArchConfig(name="obs-test", family="dense", n_layers=2,
+                       d_model=64, n_heads=4, n_kv=2, d_ff=128, vocab=256,
+                       q_chunk=32, kv_chunk=32)
+
+
+def _cfg():
+    return mlp_arch(SIZES)
+
+
+def _opt():
+    return adamw(constant(1e-2), clip=1.0)
+
+
+def _data(batch=16, seed=0):
+    return ClassStream(dim=SIZES[0], n_classes=SIZES[-1], seed=seed).batches(batch)
+
+
+def _obs_cfg(tmp_path, **kw):
+    """A per-test ObsConfig: `observability()` shares state between EQUAL
+    configs (by design), so the unique tmp_path crash_dir keeps each test's
+    tracer/registries isolated."""
+    kw.setdefault("crash_dir", str(tmp_path / "crash"))
+    return ObsConfig(**kw)
+
+
+def _leaves(state):
+    return [np.asarray(x) for x in jax.tree.leaves(
+        {"p": state.params, "o": state.opt_state})]
+
+
+# ---------------------------------------------------------------------------
+# config + shared-state plumbing
+# ---------------------------------------------------------------------------
+
+
+def test_obsconfig_validation_and_keyed_sharing(tmp_path):
+    with pytest.raises(ValueError):
+        ObsConfig(trace_capacity=0)
+    with pytest.raises(ValueError):
+        ObsConfig(flight_capacity=0)
+    cfg = _obs_cfg(tmp_path)
+    assert hash(cfg) == hash(_obs_cfg(tmp_path))  # frozen & hashable
+    # equal configs -> the SAME mutable Observability (keyed-state idiom)
+    assert observability(cfg) is observability(_obs_cfg(tmp_path))
+    assert observability(None) is NULL_OBS
+    assert not NULL_OBS.enabled
+    assert NULL_OBS.tracer is NULL_TRACER
+    assert NULL_OBS.report() == {"enabled": False}
+    assert NULL_OBS.dump_crash("anything") is None
+
+
+def test_runtime_observability_accessor(tmp_path):
+    cfg = _obs_cfg(tmp_path)
+    rt = Runtime(execution=ExecutionConfig(obs=cfg))
+    assert rt.observability() is observability(cfg)
+    assert Runtime().observability() is NULL_OBS
+
+
+def test_disabled_features_are_none(tmp_path):
+    ob = observability(_obs_cfg(tmp_path, trace=False, metrics=False,
+                                compile_ledger=False, memory_ledger=False,
+                                flight=False))
+    assert ob.tracer is NULL_TRACER
+    assert ob.metrics is None and ob.flight is None
+    assert ob.compile_ledger is None and ob.memory_ledger is None
+    assert ob.dump_crash("no-flight") is None
+
+
+# ---------------------------------------------------------------------------
+# tracer units + Chrome-trace/Perfetto round-trip
+# ---------------------------------------------------------------------------
+
+
+def test_tracer_nesting_and_ring_bound():
+    tr = Tracer(capacity=4)
+    with tr.span("outer", step=1) as outer:
+        assert tr.current_id() == outer.sid
+        with tr.span("inner") as inner:
+            assert inner.parent == outer.sid
+            assert tr.current_id() == inner.sid
+    assert tr.current_id() is None
+    [inner_done, outer_done] = tr.spans()  # completion order
+    assert (inner_done.name, outer_done.name) == ("inner", "outer")
+    assert outer_done.attrs == {"step": 1}
+    assert 0.0 <= inner_done.duration_s <= outer_done.duration_s
+    for i in range(10):
+        with tr.span(f"s{i}"):
+            pass
+    assert len(tr.spans()) == 4  # bounded ring: oldest dropped
+    tr.clear()
+    assert tr.spans() == []
+
+
+def test_tracer_records_error_spans():
+    tr = Tracer()
+    with pytest.raises(RuntimeError):
+        with tr.span("doomed"):
+            raise RuntimeError("boom")
+    [s] = tr.spans("doomed")
+    assert s.attrs["error"] == "RuntimeError"
+
+
+def test_add_span_returns_joinable_id():
+    tr = Tracer()
+    sid = tr.add_span("request", 1.0, 3.0, stop="eos")
+    tr.add_span("decode", 2.0, 3.0, parent=sid)
+    [req] = tr.spans("request")
+    [dec] = tr.spans("decode")
+    assert req.sid == sid and dec.parent == sid
+    assert req.duration_s == 2.0
+
+
+def test_chrome_trace_roundtrip(tmp_path):
+    """export_chrome writes the JSON object Perfetto/chrome://tracing load:
+    complete events (ph "X"), µs timestamps relative to the tracer origin,
+    span/parent ids under args — and it survives a json round-trip."""
+    tr = Tracer()
+    with tr.span("parent", step=3):
+        with tr.span("child"):
+            pass
+    path = tr.export_chrome(str(tmp_path / "sub" / "trace.json"))
+    with open(path) as f:
+        doc = json.load(f)
+    assert doc["displayTimeUnit"] == "ms"
+    events = doc["traceEvents"]
+    assert [e["name"] for e in events] == ["child", "parent"]
+    by_name = {e["name"]: e for e in events}
+    for e in events:
+        assert e["ph"] == "X" and e["pid"] == 1
+        assert e["dur"] >= 0.0 and e["ts"] >= 0.0  # µs, origin-relative
+    assert by_name["child"]["args"]["parent_id"] == \
+        by_name["parent"]["args"]["span_id"]
+    assert by_name["parent"]["args"]["step"] == 3
+    # the child interval nests inside the parent interval
+    p, c = by_name["parent"], by_name["child"]
+    assert p["ts"] <= c["ts"]
+    assert c["ts"] + c["dur"] <= p["ts"] + p["dur"] + 1e-6
+
+
+def test_jsonl_export_one_record_per_span(tmp_path):
+    tr = Tracer()
+    for i in range(3):
+        with tr.span("step", step=i):
+            pass
+    path = tr.export_jsonl(str(tmp_path / "spans.jsonl"))
+    recs = [json.loads(l) for l in open(path) if l.strip()]
+    assert [r["name"] for r in recs] == ["step"] * 3
+    assert [r["step"] for r in recs] == [0, 1, 2]
+    assert all(r["dur_s"] >= 0 and "sid" in r for r in recs)
+
+
+def test_null_tracer_is_falsy_noop():
+    assert not NULL_TRACER and not NULL_TRACER.enabled
+    with NULL_TRACER.span("x", a=1) as s:
+        assert s is None
+    assert NULL_TRACER.add_span("x", 0.0, 1.0) is None
+    assert NULL_TRACER.spans() == [] and NULL_TRACER.records() == []
+    assert NULL_TRACER.to_chrome()["traceEvents"] == []
+
+
+# ---------------------------------------------------------------------------
+# metrics registry
+# ---------------------------------------------------------------------------
+
+
+def test_registry_kinds_snapshot_prometheus():
+    reg = MetricsRegistry()
+    c = reg.counter("serve.tokens_out")
+    c.inc(5)
+    assert reg.counter("serve.tokens_out") is c  # idempotent constructor
+    reg.gauge("serve.live_slots").set(3)
+    h = reg.histogram("serve.latency_s", buckets=(0.1, 1.0))
+    for v in (0.05, 0.5, 5.0):
+        h.observe(v)
+    snap = reg.snapshot()
+    assert snap["serve.tokens_out"] == 5.0
+    assert snap["serve.live_slots"] == 3.0
+    assert snap["serve.latency_s.count"] == 3
+    assert snap["serve.latency_s.max"] == 5.0
+    assert snap["serve.latency_s.mean"] == pytest.approx(5.55 / 3)
+    text = reg.to_prometheus()
+    assert "# TYPE serve_tokens_out counter" in text
+    assert "serve_live_slots 3" in text
+    assert 'serve_latency_s_bucket{le="+Inf"} 3' in text
+    assert "serve_latency_s_count 3" in text
+    with pytest.raises(TypeError):
+        reg.gauge("serve.tokens_out")  # kind mismatch is a bug
+
+
+def test_counter_view_keeps_dict_ergonomics():
+    reg = MetricsRegistry()
+    view = reg.view("serve", ["tokens_out", "decode_s"])
+    view["tokens_out"] += 7
+    view["decode_s"] += 0.25
+    view["new_key"] = 2  # assignment grows the view, like a dict
+    assert dict(view) == {"tokens_out": 7, "decode_s": 0.25, "new_key": 2}
+    assert view["tokens_out"] == 7 and isinstance(view["tokens_out"], int)
+    assert reg.snapshot()["serve.tokens_out"] == 7.0  # lives in the registry
+    with pytest.raises(KeyError):
+        view["never_registered"]
+    with pytest.raises(TypeError):
+        del view["tokens_out"]
+    assert isinstance(view, CounterView) and len(view) == 3
+
+
+def test_observability_merges_adopted_registries(tmp_path):
+    ob = observability(_obs_cfg(tmp_path))
+    ob.metrics.counter("train.steps").inc(4)
+    eng = MetricsRegistry()
+    eng.counter("serve.tokens_out").inc(9)
+    ob.adopt("engine0", eng)
+    snap = ob.metrics_snapshot()
+    assert snap["train.steps"] == 4.0 and snap["serve.tokens_out"] == 9.0
+    prom = ob.prometheus()
+    assert "train_steps 4" in prom and "serve_tokens_out 9" in prom
+
+
+# ---------------------------------------------------------------------------
+# ledgers
+# ---------------------------------------------------------------------------
+
+
+def test_compile_ledger_summary_and_write(tmp_path):
+    led = CompileLedger()
+    led.record_compile("k1", trace_s=0.5, compile_s=2.0)
+    led.record_compile("k2", first_call_s=1.0)
+    led.record_hit("k1")
+    led.record_hit("k1")
+    s = led.summary()
+    assert s == {"compiles": 2, "hits": 2, "distinct_keys": 2,
+                 "total_compile_s": 2.0, "total_first_call_s": 1.0}
+    path = led.write(str(tmp_path / "ledger.json"))
+    doc = json.load(open(path))
+    assert doc["summary"] == s
+    assert doc["hits_by_key"] == {"k1": 2}
+    assert [e["key"] for e in doc["entries"]] == ["k1", "k2"]
+
+
+def test_memory_summary_fields():
+    class MA:  # the stable slice of jax's memory_analysis result
+        argument_size_in_bytes = 4e9
+        output_size_in_bytes = 1e9
+        temp_size_in_bytes = 2e9
+        alias_size_in_bytes = 1e9
+
+    out = memory_summary(MA(), hbm_bytes=int(8e9))
+    assert out["peak_GB_per_dev"] == pytest.approx(6.0)
+    assert out["fits_hbm"] is True
+    assert memory_summary(MA(), hbm_bytes=int(4e9))["fits_hbm"] is False
+    assert "fits_hbm" not in memory_summary(MA())
+
+
+def test_runtime_train_step_feeds_ledgers(tmp_path):
+    """One Runtime.train_step build -> one compile-ledger entry with the
+    trace/compile wall split and a memory-ledger record under the same key;
+    a second train_step call is a step-cache hit."""
+    cfg = _obs_cfg(tmp_path)
+    rt = Runtime(execution=ExecutionConfig(obs=cfg))
+    arch, opt = _cfg(), _opt()  # the step cache keys on these identities
+    step = rt.train_step(arch, opt)
+    state = rt.init_state(jax.random.key(0), arch, opt)
+    batch = next(iter(_data()))
+    state, _ = step(state, batch, jax.random.key(1))
+    ob = rt.observability()
+    [entry] = ob.compile_ledger.entries
+    assert entry["key"].startswith("train_step/mlp")
+    assert (entry["compile_s"] or 0) > 0 or (entry["first_call_s"] or 0) > 0
+    assert rt.train_step(arch, opt) is step  # cached
+    assert ob.compile_ledger.summary()["hits"] == 1
+    [(mkey, mem)] = ob.memory_ledger.to_json()["by_key"].items()
+    assert mkey == entry["key"]
+    assert mem["peak_GB_per_dev"] > 0
+    rep = ob.report()
+    assert rep["enabled"] and rep["compile"]["summary"]["compiles"] == 1
+    assert mkey in rep["memory"]["by_key"]
+
+
+# ---------------------------------------------------------------------------
+# serve: ring records join to lifecycle spans by span_id
+# ---------------------------------------------------------------------------
+
+
+def test_serve_ring_span_ids_reconstruct_lifecycles(tmp_path):
+    """Every finished request's ring record carries the sid of its `request`
+    span; the queued/prefill/decode children parent onto it and their
+    durations ARE the ring's queue_s/ttft_s/latency_s stamps (the spans are
+    reconstructed post-hoc from the same scheduler timestamps)."""
+    cfg = _obs_cfg(tmp_path)
+    rt = Runtime(execution=ExecutionConfig(obs=cfg))
+    params = lm.init_params(jax.random.key(0), SERVE_CFG)
+    eng = Engine(params, SERVE_CFG,
+                 serve=ServeConfig(n_slots=2, max_len=64, page_size=16),
+                 runtime=rt)
+    rng = np.random.default_rng(0)
+    reqs = [Request(prompt=rng.integers(1, SERVE_CFG.vocab, size=n)
+                    .astype(np.int32), max_new=m)
+            for n, m in [(5, 4), (9, 3), (3, 6), (7, 2)]]
+    eng.run(reqs)
+    tracer = rt.observability().tracer
+    by_sid = {s.sid: s for s in tracer.spans()}
+    recs = [r for r in eng.ring.records if "span_id" in r]
+    assert len(recs) == 4
+    for rec in recs:
+        req_span = by_sid[rec["span_id"]]
+        assert req_span.name == "request"
+        assert req_span.attrs["stop"] in ("length", "eos")
+        assert req_span.attrs["new_tokens"] == rec["new_tokens"]
+        assert req_span.duration_s == rec["latency_s"]
+        kids = {s.name: s for s in tracer.spans()
+                if s.parent == rec["span_id"]}
+        assert set(kids) == {"queued", "prefill", "decode"}
+        assert kids["queued"].duration_s == rec["queue_s"]
+        # ttft = queue + prefill (both intervals share the admit stamp)
+        assert kids["queued"].duration_s + kids["prefill"].duration_s == \
+            pytest.approx(rec["ttft_s"])
+    # the engine's hot-loop spans landed too, under serve.run
+    assert tracer.spans("serve.run") and tracer.spans("decode_step")
+    # counters reached the shared registry through the adopted view
+    snap = rt.observability().metrics_snapshot()
+    assert snap["serve.requests_done"] == 4.0
+    assert snap["serve.tokens_out"] == sum(r.max_new for r in reqs)
+
+
+# ---------------------------------------------------------------------------
+# crash bundles + trainer integration
+# ---------------------------------------------------------------------------
+
+
+def test_ckpt_io_fault_leaves_crash_bundle(tmp_path):
+    """An injected checkpoint-IO fault dumps a flight-recorder bundle whose
+    spans.json (Chrome-trace form) contains the fault_injected span."""
+    cfg = _obs_cfg(tmp_path)
+    rcfg = ResilienceConfig(rollback_after=0)
+    plan = FaultPlan(faults=(FaultSpec(step=3, kind="ckpt_io"),))
+    rt = Runtime(execution=ExecutionConfig(resilience=rcfg, obs=cfg))
+    train_loop(rt, _cfg(), _opt(), _data(),
+               TrainerConfig(steps=10, log_every=5,
+                             ckpt_dir=str(tmp_path / "ckpt"), ckpt_every=4),
+               faults=plan)
+    bundle = os.path.join(cfg.crash_dir, "crash_000_ckpt_io")
+    assert os.path.isdir(bundle)
+    meta = json.load(open(os.path.join(bundle, "meta.json")))
+    assert meta["reason"] == "ckpt_io"
+    # the fault arms at step 3; the async writer's failure surfaces at a
+    # later checkpoint wait — the bundle records the step that observed it
+    assert meta["n_spans"] > 0 and meta["extra"]["step"] >= 3
+    spans = json.load(open(os.path.join(bundle, "spans.json")))
+    names = {e["name"] for e in spans["traceEvents"]}
+    assert "fault_injected" in names and "train_step" in names
+    for fname in ("metrics.json", "events.json"):
+        json.load(open(os.path.join(bundle, fname)))  # valid JSON, present
+
+
+def test_supervisor_rollback_bundle_and_recovery_span(tmp_path):
+    cfg = _obs_cfg(tmp_path)
+    rcfg = ResilienceConfig(rollback_after=2, escalate_steps=2)
+    plan = FaultPlan(faults=(FaultSpec(step=6, kind="nonfinite"),
+                             FaultSpec(step=7, kind="nonfinite")))
+    tcfg = TrainerConfig(steps=12, log_every=4,
+                         ckpt_dir=str(tmp_path / "ckpt"), ckpt_every=3)
+    rt = Runtime(execution=ExecutionConfig(resilience=rcfg, obs=cfg))
+    sup = Supervisor(rt, _cfg(), _opt(), tcfg, fault_plan=plan)
+    state, _ = sup.run(_data())
+    assert int(np.asarray(state.step)) == 12
+    assert sup.recoveries == 1
+    # recovery counters live in the unified registry (adopted component)
+    snap = rt.observability().metrics_snapshot()
+    assert snap["resilience.recoveries"] == 1.0
+    assert snap["resilience.events"] >= 1.0
+    # the rollback crash bundle + the recovery span
+    bundle = os.path.join(cfg.crash_dir, "crash_000_rollback")
+    meta = json.load(open(os.path.join(bundle, "meta.json")))
+    assert meta["extra"]["cause"] == "nonfinite_or_norm"
+    events = json.load(open(os.path.join(bundle, "events.json")))
+    assert any(e.get("event") == "fault_injected" for e in events)
+    [rec] = rt.observability().tracer.spans("recovery.rollback")
+    assert rec.attrs["step"] == 7 and rec.duration_s > 0
+
+
+def test_trainer_exports_configured_traces(tmp_path):
+    chrome = str(tmp_path / "trace.json")
+    jsonl = str(tmp_path / "spans.jsonl")
+    cfg = _obs_cfg(tmp_path, chrome_trace=chrome, trace_jsonl=jsonl)
+    rt = Runtime(execution=ExecutionConfig(obs=cfg))
+    train_loop(rt, _cfg(), _opt(), _data(), TrainerConfig(steps=4))
+    doc = json.load(open(chrome))
+    names = {e["name"] for e in doc["traceEvents"]}
+    assert {"train_loop", "train_step", "jit_trace", "xla_compile"} <= names
+    steps = [e for e in doc["traceEvents"] if e["name"] == "train_step"]
+    assert sorted(e["args"]["step"] for e in steps) == [0, 1, 2, 3]
+    recs = [json.loads(l) for l in open(jsonl) if l.strip()]
+    assert {r["name"] for r in recs} == names
+
+
+def test_observability_never_changes_numerics(tmp_path):
+    """obs=None vs the full ObsConfig: bit-identical final state (spans,
+    registries and ledgers are host-side — the computation is untouched)."""
+    tcfg = TrainerConfig(steps=6, log_every=3, seed=0)
+    off, _ = train_loop(Runtime(execution=ExecutionConfig(obs=None)),
+                        _cfg(), _opt(), _data(), tcfg)
+    on, _ = train_loop(
+        Runtime(execution=ExecutionConfig(obs=_obs_cfg(tmp_path))),
+        _cfg(), _opt(), _data(), tcfg)
+    for a, b in zip(_leaves(off), _leaves(on)):
+        np.testing.assert_array_equal(a, b)
