@@ -34,6 +34,8 @@ from benchmarks.common import save_result
 from repro import compat
 from repro.analysis.invariants import g_reader_passes
 from repro.core import SketchConfig, SketchPolicy
+from repro.core.estimators import get_estimator
+from repro.core.scores import column_scores
 from repro.core.sketching import column_plan, effective_cfg
 
 # ---------------------------------------------------------------------------
@@ -92,6 +94,15 @@ def _unfused_site_bwd(cfg, G2d, X2d, w, key):
     return dX, dW, db
 
 
+def _carry_site_bwd(backend, cfg, G2d, X2d, w, key, state):
+    """The plan-carry one-pass backward ("onepass"/"stale"): the plan is
+    sampled from the CARRIED previous-step scores (``state`` — no score pass
+    over G), so the backward's only G read is the estimator sweep itself."""
+    est = get_estimator(backend)
+    out = est.apply_with_state(cfg, G2d, X2d, w, key, state, has_b=True)
+    return out.dx, out.rows, out.cols, out.db_c, out.state
+
+
 def g_pass_accounting(budget: float, *, N=2048, n=1024, d=256, block=128) -> dict:
     """How many times does the backward stream the gradient matrix G from
     HBM? Counted as HLO instructions reading a G-shaped buffer in the
@@ -113,6 +124,15 @@ def g_pass_accounting(budget: float, *, N=2048, n=1024, d=256, block=128) -> dic
         .lower(G, x, w, key).compile()
     c_unfused = jax.jit(lambda G, x, w, k: _unfused_site_bwd(cfg, G, x, w, k)) \
         .lower(G, x, w, key).compile()
+    state = jnp.ones((n,), jnp.float32)  # carried scores (uniform prior)
+    carry = {}
+    for backend in ("onepass", "stale"):
+        ccfg = SketchConfig(method="l1", budget=budget, backend=backend,
+                            block=block)
+        carry[backend] = jax.jit(
+            lambda G, x, w, k, s, b=backend, c=ccfg:
+            _carry_site_bwd(b, c, G, x, w, k, s)) \
+            .lower(G, x, w, key, state).compile()
 
     def stats(compiled):
         ca = compiled.cost_analysis()
@@ -124,20 +144,32 @@ def g_pass_accounting(budget: float, *, N=2048, n=1024, d=256, block=128) -> dic
     readers_fused, bytes_fused = stats(c_fused)
     readers_fallback, bytes_fallback = stats(c_fallback)
     readers_unfused, bytes_unfused = stats(c_unfused)
+    readers_onepass, bytes_onepass = stats(carry["onepass"])
+    readers_stale, bytes_stale = stats(carry["stale"])
     rec = {
         "shape": {"N": N, "n": n, "d": d, "block": block, "budget": budget},
         "g_bytes": N * n * 4,
         "g_passes_fused": readers_fused,
         "g_passes_fallback": readers_fallback,
         "g_passes_unfused": readers_unfused,
+        # plan-carry estimators: the plan comes from carried scores, so the
+        # backward reads G exactly once (the ISSUE's acceptance number —
+        # gated at a --check ceiling of 1 and per-estimator in tests)
+        "g_passes_onepass": readers_onepass,
+        "g_passes_stale": readers_stale,
         "bytes_accessed_fused_bwd": bytes_fused,
         "bytes_accessed_fallback_bwd": bytes_fallback,
         "bytes_accessed_unfused_bwd": bytes_unfused,
+        "bytes_accessed_onepass_bwd": bytes_onepass,
+        "bytes_accessed_stale_bwd": bytes_stale,
     }
     print(f"  G readers (HBM passes over G): fused {readers_fused} "
           f"(bytes model {bytes_fused/1e6:.1f} MB)  vmem-fallback "
           f"{readers_fallback} ({bytes_fallback/1e6:.1f} MB)  vs pre-PR shape "
           f"{readers_unfused} ({bytes_unfused/1e6:.1f} MB)")
+    print(f"  plan-carry (one-pass): onepass {readers_onepass} "
+          f"({bytes_onepass/1e6:.1f} MB)  stale {readers_stale} "
+          f"({bytes_stale/1e6:.1f} MB)")
     return rec
 
 
@@ -230,14 +262,132 @@ def _mesh_step_time(budget: float, reps: int, tiny: bool) -> dict:
     return out
 
 
+# ---------------------------------------------------------------------------
+# Part 3: single-device step time — two-pass vs the plan-carry estimators
+# ---------------------------------------------------------------------------
+
+
+def _local_step_time(budget: float, reps: int, tiny: bool) -> dict:
+    """Local (non-TP, single-logical-device) train-step timing of the same
+    LM with the legacy two-pass block backward vs the two plan-carry
+    one-pass estimators. CPU wall-times are not a hardware claim (the XLA
+    oracles run, not the TPU kernels) — the stale-plan step time rides
+    BENCH_summary.json so the trajectory is tracked; the HBM claim is the
+    G-reader accounting above."""
+    from repro.api import ExecutionConfig, Runtime
+    from repro.configs.base import ArchConfig
+    from repro.optim import sgd
+    from repro.train.train_step import init_state
+
+    if tiny:
+        arch = ArchConfig(name="bench", family="dense", n_layers=1, d_model=32,
+                          n_heads=4, n_kv=2, d_ff=64, vocab=64,
+                          q_chunk=16, kv_chunk=16)
+        B, S, blk = 8, 16, 4
+    else:
+        arch = ArchConfig(name="bench", family="dense", n_layers=2, d_model=256,
+                          n_heads=8, n_kv=4, d_ff=1024, vocab=1024,
+                          q_chunk=64, kv_chunk=64)
+        B, S, blk = 16, 64, 64
+    opt = sgd(0.1)
+    toks = jax.random.randint(compat.prng_key(1), (B, S), 0, arch.vocab)
+    batch = {"tokens": toks, "labels": toks}
+    key = compat.prng_key(2)
+
+    variants = {
+        "block_twopass": "pallas",   # score pass + fused kernel sweep
+        "block_onepass": "onepass",  # streaming selection, carried plan
+        "block_stale": "stale",      # kept-only sweep, carried plan
+    }
+    out = {}
+    for name, backend in variants.items():
+        pol = SketchPolicy(base=SketchConfig(method="l1", budget=budget,
+                                             backend=backend, block=blk))
+        rt = Runtime(policy=pol, execution=ExecutionConfig())
+        state = init_state(compat.prng_key(0), arch, opt, pol,
+                           execution=rt.execution)
+        step = rt.train_step(arch, opt, donate=False)
+        s, m = step(state, batch, key)  # warmup / compile
+        jax.block_until_ready(m["loss"])
+        times = []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            s2, m2 = step(state, batch, key)
+            jax.block_until_ready(m2["loss"])
+            times.append(time.perf_counter() - t0)
+        out[name] = {"step_ms": float(np.median(times) * 1e3),
+                     "loss": float(m["loss"])}
+        print(f"  {name:14s} step {out[name]['step_ms']:8.2f} ms   "
+              f"loss {out[name]['loss']:.4f}")
+    for name in ("block_onepass", "block_stale"):
+        out[name]["speedup_vs_twopass"] = (out["block_twopass"]["step_ms"]
+                                           / out[name]["step_ms"])
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Part 4: probe-measured excess variance of the stale plan
+# ---------------------------------------------------------------------------
+
+
+def stale_plan_variance(budget: float, *, N=512, n=512, d=128, block=64,
+                        rho=0.9, reps=16) -> dict:
+    """How much variance does planning from step-(t-1) scores cost?
+
+    Consecutive-step gradient matrices are modelled as AR(1)-correlated,
+    ``G_t = ρ·G_{t-1} + sqrt(1-ρ²)·ε`` (paper Fig. 1a measures ρ ≈ 0.9+ for
+    adjacent steps). Both arms run the SAME stale-plan estimator backward on
+    ``G_t`` with ``want_probe=True``; only the carried scores differ — the
+    stale arm plans from ``scores(G_{t-1})``, the fresh arm from
+    ``scores(G_t)``. The probe's unbiased per-site variance estimate
+    (telemetry ``var`` field, repro/telemetry/probes.py) is averaged over
+    keys; the ratio stale/fresh is the probe-measured excess variance of
+    carrying the plan. Both arms are unbiased regardless (the solver floors
+    every keep probability above zero) — staleness only moves variance."""
+    cfg = SketchConfig(method="l1", budget=budget, backend="stale", block=block)
+    est = get_estimator("stale")
+    ks = jax.random.split(compat.prng_key(7), 5)
+    X = jax.random.normal(ks[0], (N, d), jnp.float32)
+    w = jax.random.normal(ks[1], (n, d), jnp.float32) / np.sqrt(d)
+    G1 = jax.random.normal(ks[2], (N, n), jnp.float32) \
+        * (1.0 + 4.0 * jax.nn.sigmoid(jnp.linspace(-4, 4, n)))[None, :]
+    eps = jax.random.normal(ks[3], (N, n), jnp.float32)
+    G2 = rho * G1 + np.sqrt(1.0 - rho ** 2) * eps
+    s_stale = column_scores("l1", G1)
+    s_fresh = column_scores("l1", G2)
+
+    @jax.jit
+    def probe_var(key, carry):
+        out = est.apply_with_state(cfg, G2, X, w, key, carry, has_b=True,
+                                   want_probe=True)
+        return out.probe[1]  # unbiased E‖dŴ − dW‖² estimate ("var" field)
+
+    keys = jax.random.split(ks[4], reps)
+    v_stale = float(np.mean([probe_var(k, s_stale) for k in keys]))
+    v_fresh = float(np.mean([probe_var(k, s_fresh) for k in keys]))
+    rec = {"rho": rho, "reps": reps,
+           "shape": {"N": N, "n": n, "d": d, "block": block, "budget": budget},
+           "probe_var_stale": v_stale, "probe_var_fresh": v_fresh,
+           "excess_var_ratio": v_stale / v_fresh if v_fresh else None}
+    print(f"  stale-plan probe variance: stale {v_stale:.4g} vs fresh "
+          f"{v_fresh:.4g}  ratio {rec['excess_var_ratio']:.3f} (rho={rho})")
+    return rec
+
+
 def run(quick: bool = True, budget: float = 0.25, reps: int = 20,
         tiny: bool = False) -> dict:
     compat.ensure_host_devices(8)
     out = {"budget": budget, "mesh": "2x4"}
     if tiny:
         out["g_passes"] = g_pass_accounting(budget, N=256, n=256, d=64, block=64)
+        out["stale_plan"] = stale_plan_variance(budget, N=128, n=128, d=32,
+                                                block=32, reps=4)
     else:
         out["g_passes"] = g_pass_accounting(budget)
+        out["stale_plan"] = stale_plan_variance(budget)
+    out["train_step_local"] = _local_step_time(budget,
+                                               reps=(3 if tiny else reps),
+                                               tiny=tiny)
     out["train_step"] = _mesh_step_time(budget, reps=(3 if tiny else reps), tiny=tiny)
     # pre-PR committed artifact, for the before/after record (the historical
     # tiny config refreshed by bench_distributed; see docs/perf.md)

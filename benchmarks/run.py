@@ -61,6 +61,24 @@ _KEY_METRICS = {
     "obs": ("obs_overhead_frac", lambda d: _get(d, "obs_overhead_frac")),
 }
 
+# Additional per-artifact metrics (emitted as "<artifact>:<metric>" records
+# after the headline record, so by-name lookups of the headline still work).
+# backward_fusion grew the one-pass accounting in the plan-carry PR: the
+# HLO G-reader counts for the onepass/stale estimators are ABSOLUTE claims
+# (ceiling 1 — the single HBM pass over G), the stale step time tracks the
+# carry path's wall trajectory, and the probe-measured excess variance keeps
+# the staleness cost honest (see docs/perf.md).
+_EXTRA_METRICS = {
+    "backward_fusion": [
+        ("g_passes_onepass", lambda d: _get(d, "g_passes", "g_passes_onepass")),
+        ("g_passes_stale", lambda d: _get(d, "g_passes", "g_passes_stale")),
+        ("stale_step_ms",
+         lambda d: _get(d, "train_step_local", "block_stale", "step_ms")),
+        ("stale_excess_var",
+         lambda d: _get(d, "stale_plan", "excess_var_ratio")),
+    ],
+}
+
 
 # --check gate: per-metric tolerance for value-vs-prev regressions.
 # direction: which way is WORSE. rel_tol / abs_slack: a regression is flagged
@@ -77,6 +95,17 @@ _TOLERANCES = {
                                        "abs_slack": 0.0},
     "obs_overhead_frac": {"direction": "lower", "rel_tol": 0.0,
                           "abs_slack": 0.01, "ceiling": 0.02},
+    # the one-pass contract is absolute: the compiled plan-carry backward
+    # reads G exactly once — zero tolerance, enforced even without history
+    "g_passes_onepass": {"direction": "lower", "rel_tol": 0.0,
+                         "abs_slack": 0.0, "ceiling": 1},
+    "g_passes_stale": {"direction": "lower", "rel_tol": 0.0,
+                       "abs_slack": 0.0, "ceiling": 1},
+    "stale_step_ms": {"direction": "lower", "rel_tol": 0.25, "abs_slack": 10.0},
+    # probe-measured variance ratio of carrying the plan one step (AR rho=0.9
+    # gradients); stochastic, so a wide band + an absolute sanity ceiling
+    "stale_excess_var": {"direction": "lower", "rel_tol": 0.5,
+                         "abs_slack": 0.25, "ceiling": 3.0},
 }
 
 
@@ -176,15 +205,22 @@ def write_summary(results_dir: str = RESULTS,
             continue
         metric, extract = _KEY_METRICS.get(
             name, ("n_entries", lambda d: float(len(d)) if isinstance(d, dict) else None))
-        value = extract(data)
-        p = prev.get(name, {})
-        prev_value = p.get("value") if p.get("metric") == metric else None
-        rec = {"name": name, "metric": metric,
-               "value": None if value is None else float(value),
-               "prev": prev_value,
-               "delta": (float(value) - prev_value
-                         if value is not None and prev_value is not None else None)}
-        records.append(rec)
+
+        def _rec(rec_name, metric, value):
+            p = prev.get(rec_name, {})
+            prev_value = p.get("value") if p.get("metric") == metric else None
+            return {"name": rec_name, "metric": metric,
+                    "value": None if value is None else float(value),
+                    "prev": prev_value,
+                    "delta": (float(value) - prev_value
+                              if value is not None and prev_value is not None
+                              else None)}
+
+        records.append(_rec(name, metric, extract(data)))
+        for metric2, extract2 in _EXTRA_METRICS.get(name, ()):
+            # satellite metrics ride as "<artifact>:<metric>" records so the
+            # headline record keeps its by-name identity
+            records.append(_rec(f"{name}:{metric2}", metric2, extract2(data)))
     with open(summary_path, "w") as f:
         for rec in records:
             f.write(json.dumps(rec) + "\n")

@@ -35,6 +35,7 @@ _EXPORTS = {
     "analyze_runtime": "coverage", "check_baseline": "coverage",
     "load_baseline": "coverage", "role_hint": "coverage",
     "donated_input_bytes": "invariants", "g_reader_passes": "invariants",
+    "g_reader_ceiling": "invariants", "G_READER_CEILINGS": "invariants",
     "involuntary_remat_count": "invariants",
 }
 
@@ -69,6 +70,8 @@ __all__ = [
     "load_baseline",
     "check_baseline",
     "g_reader_passes",
+    "g_reader_ceiling",
+    "G_READER_CEILINGS",
     "involuntary_remat_count",
     "donated_input_bytes",
 ]

@@ -21,10 +21,32 @@ import re
 import tempfile
 from typing import Optional, Tuple
 
-__all__ = ["g_reader_passes", "involuntary_remat_count",
-           "donated_input_bytes", "REMAT_WARNING"]
+__all__ = ["g_reader_passes", "g_reader_ceiling", "G_READER_CEILINGS",
+           "involuntary_remat_count", "donated_input_bytes", "REMAT_WARNING"]
 
 REMAT_WARNING = "Involuntary full rematerialization"
+
+# Per-estimator ceilings on the HLO G-reader count (see g_reader_passes).
+# The legacy compact/pallas backward reads G at most twice (a score pass
+# plus the fused dX/dW/db pass); the plan-carry estimators sample from the
+# previous step's carried scores, so their ONLY read of G is the backward
+# kernel itself — exactly one pass. Asserted per-estimator in
+# tests/test_benchmarks_smoke.py and recorded by the dryrun coverage record
+# and benchmarks/bench_backward_fusion.py (BENCH_summary.json gates the
+# one-pass paths at a --check ceiling of 1).
+G_READER_CEILINGS = {
+    "mask": 2,       # score pass + masked-G matmuls (dense, no gather)
+    "compact": 2,    # score pass + one-gather fused backward
+    "pallas": 2,     # score pass + fused kernel sweep
+    "onepass": 1,    # streaming selection: score/plan inside the one sweep
+    "stale": 1,      # carried plan: kept-only fused sweep w/ score refresh
+}
+
+
+def g_reader_ceiling(backend: str) -> int:
+    """The G-reader ceiling for an estimator backend (unknown/third-party
+    backends get the legacy two-pass ceiling)."""
+    return G_READER_CEILINGS.get(backend, 2)
 
 
 def g_reader_passes(hlo_text: str, N: int, n: int) -> int:

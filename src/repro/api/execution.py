@@ -52,6 +52,14 @@ class ExecutionConfig:
         training stays bit-identical with obs on or off. ``None`` (the
         default) disables it entirely (null tracer, zero allocation on the
         step path). See docs/observability.md.
+      fused_vmem_limit: VMEM budget (bytes) for the fused/streaming Pallas
+        backward kernels' resident accumulators — above it the dispatch
+        drops to the one-gather XLA fallback (``repro.kernels.ops``).
+        ``None`` (the default) defers to the ``REPRO_FUSED_VMEM_LIMIT`` env
+        var, then the built-in ~12 MiB headroom default. Steps built from
+        this config bind the value (and the obs metrics registry, which
+        records every dispatch/fallback decision) via
+        ``kernels.ops.configure``. See docs/perf.md.
     """
 
     mesh: Optional[Any] = None
@@ -65,6 +73,7 @@ class ExecutionConfig:
     telemetry: Optional[Any] = None  # repro.telemetry.TelemetryConfig
     resilience: Optional[Any] = None  # repro.resilience.ResilienceConfig
     obs: Optional[Any] = None  # repro.obs.ObsConfig
+    fused_vmem_limit: Optional[int] = None  # bytes; kernels.ops.configure
 
     def __post_init__(self):
         object.__setattr__(self, "data_axes", tuple(self.data_axes))
@@ -87,6 +96,11 @@ class ExecutionConfig:
         if self.obs is not None and not hasattr(self.obs, "trace_capacity"):
             raise ValueError("obs must be a repro.obs.ObsConfig, got "
                              f"{self.obs!r}")
+        if self.fused_vmem_limit is not None:
+            if (not isinstance(self.fused_vmem_limit, int)
+                    or self.fused_vmem_limit <= 0):
+                raise ValueError("fused_vmem_limit must be a positive int "
+                                 f"(bytes), got {self.fused_vmem_limit!r}")
 
     def site_spec(self, role: str, cfg, *, d_out: int, d_in: int,
                   has_bias: bool = False, x_ndim: int = 3):

@@ -255,7 +255,10 @@ class Runtime:
     def init_state(self, key, cfg, opt):
         from repro.train.train_step import init_state
 
-        return init_state(key, cfg, opt)
+        # policy/execution let plan-carry estimators ("onepass"/"stale")
+        # seed their permanent per-site score leaves (core/plan_state.py)
+        return init_state(key, cfg, opt, self.policy,
+                          execution=self.execution)
 
     # -- serving ------------------------------------------------------------
 

@@ -31,7 +31,7 @@ import jax
 __all__ = ["Estimator", "EstimatorVJP", "register_estimator", "get_estimator",
            "registered_backends", "BUILTIN_BACKENDS"]
 
-BUILTIN_BACKENDS = ("mask", "compact", "pallas")
+BUILTIN_BACKENDS = ("mask", "compact", "pallas", "onepass", "stale")
 
 
 @dataclasses.dataclass
@@ -54,6 +54,12 @@ class EstimatorVJP:
     norm estimates — see ``repro/telemetry/probes.py``). Populated only by
     :meth:`Estimator.apply_with_probe`; ``None`` means "this estimator emits
     no probe" and the site reports zeros.
+
+    ``state`` (optional, plan carry): the refreshed per-site plan state
+    (e.g. fresh column scores, ``[n]`` f32) emitted by
+    :meth:`Estimator.apply_with_state` on plan-carry estimators. The site
+    spine routes it out as the sslot cotangent; the train step writes it
+    back into the params tree for the next step (core/plan_state.py).
     """
 
     dx: jax.Array  # [N, d_in] flattened-input gradient
@@ -63,6 +69,7 @@ class EstimatorVJP:
     cols: Optional[jax.Array] = None
     db_c: Optional[jax.Array] = None
     probe: Optional[jax.Array] = None
+    state: Optional[jax.Array] = None
 
     @property
     def is_compact(self) -> bool:
@@ -122,6 +129,14 @@ class Estimator:
     name: str = "?"
     supports_compact_grad: bool = False
     tp_shardable: bool = False
+    # Plan-carry estimators sample the step-t sketch from state carried over
+    # from step t-1 (previous-step column scores) instead of a fresh score
+    # pass over G — the backward's ONLY read of G is the estimator kernel
+    # itself (one HBM pass). The site spine threads the state through the
+    # custom_vjp as an extra "sslot" params leaf (SiteSpec.carry_rows /
+    # core/plan_state.py); apply_with_state consumes it and returns the
+    # refreshed state via EstimatorVJP.state.
+    plan_carry: bool = False
 
     def validate(self, cfg) -> None:  # noqa: B027 — optional hook
         pass
@@ -143,6 +158,31 @@ class Estimator:
 
     def compact_rank(self, cfg, n: int) -> int:
         raise NotImplementedError(f"estimator {self.name!r} is not compact")
+
+    def carry_size(self, cfg, n: int) -> int:
+        """Static size of the per-site plan-carry state vector for a site of
+        width ``n`` (required when ``plan_carry``; consumed by the sslot
+        builder in core/plan_state.py)."""
+        raise NotImplementedError(f"estimator {self.name!r} carries no plan")
+
+    def apply_with_state(self, cfg, G2d, X2d, w, key, state, *, has_b,
+                         want_probe: bool = False,
+                         score_psum_axes=None) -> EstimatorVJP:
+        """Plan-carry spelling of ``apply``: sample the sketch from the
+        CARRIED ``state`` (previous-step scores; ``None`` = no carry yet —
+        estimators must degrade to a uniform prior), run the one-pass
+        backward, and return the EstimatorVJP with ``state`` set to the
+        refreshed carry. Called instead of ``apply``/``apply_with_probe``
+        when ``plan_carry`` — ``want_probe`` folds the telemetry hook in so
+        a carry estimator computes at most one backward.
+
+        Default: ignores ``state`` and delegates (no refresh emitted) — a
+        non-carry estimator reached through this hook still behaves."""
+        if want_probe:
+            return self.apply_with_probe(cfg, G2d, X2d, w, key, has_b=has_b,
+                                         score_psum_axes=score_psum_axes)
+        return self.apply(cfg, G2d, X2d, w, key, has_b=has_b,
+                          score_psum_axes=score_psum_axes)
 
 
 _REGISTRY: Dict[str, Estimator] = {}

@@ -1,0 +1,159 @@
+"""Plan-carry state: previous-step column scores threaded through the step.
+
+Plan-carry estimators ("onepass", "stale" — see ``core/sketched_linear``)
+sample the step-t sketch from scores computed at step t-1, so the backward's
+only read of ``G`` is the estimator kernel itself (ISSUE: one HBM pass over
+G). The carry has to survive from one jitted step to the next, which means it
+must live in ``TrainState`` — and to reach the site backward inside
+``jax.grad`` it must ride the *params* tree, the same transport trick as
+``core/compact_grad`` gradient slots and ``telemetry/probes`` probe slots.
+
+Unlike those (zero slots merged per-step and stripped from the gradients),
+the carry is a PERMANENT params leaf:
+
+* :func:`with_plan_state` merges an ``"sslot"`` leaf (``[n]`` f32, ones = the
+  uniform prior) into every carry-capable site at ``init_state`` time.
+* ``nn.common.dense`` threads the leaf into the site spine; the backward
+  defines its cotangent to be the REFRESHED scores (``EstimatorVJP.state``).
+* :func:`collect_plan_state` pulls the fresh scores out of the gradient tree
+  and zeroes the leaves (tree congruence for the optimizer; an sslot never
+  contributes to the grad norm or the moment buffers).
+* :func:`write_plan_state` overwrites the post-update params' sslot leaves
+  with the fresh scores — before sentinel gating, so a tripped step keeps
+  the old carry along with the old weights.
+
+Unbiasedness does not depend on the carry's freshness: the solver floors
+every keep probability strictly above zero (``optimal_probabilities``'s
+relative eps floor + ``_weights_from_scores``'s all-zero guard), so
+conditioned on ANY carry value ``E[dW | carry] = GᵀX`` exactly — staleness
+only moves variance (measured by the telemetry probes; docs/telemetry.md).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import estimators
+
+__all__ = ["PLAN_SLOT", "plan_carry_capable", "policy_uses_carry",
+           "with_plan_state", "collect_plan_state", "write_plan_state"]
+
+PLAN_SLOT = "sslot"
+
+
+def plan_carry_capable(cfg) -> bool:
+    """Does this site's estimator carry a plan? (slot-worthiness check)."""
+    if cfg is None or cfg.is_noop:
+        return False
+    try:
+        est = estimators.get_estimator(cfg.backend)
+    except KeyError:
+        return False
+    return getattr(est, "plan_carry", False)
+
+
+def policy_uses_carry(policy) -> bool:
+    """True when any config the policy can hand out (base or a role
+    override) is a plan-carry estimator — the cheap gate ``init_state`` uses
+    before walking the params tree."""
+    if policy is None:
+        return False
+    if plan_carry_capable(getattr(policy, "base", None)):
+        return True
+    return any(plan_carry_capable(cfg)
+               for _, cfg in getattr(policy, "overrides", ()) or ())
+
+
+def with_plan_state(params, policy, *, n_layers: int = 1, mesh=None,
+                    data_axes=("data",), model_axes=("model",),
+                    tp_sketch: bool = False):
+    """Merge uniform-prior carry leaves into ``params`` at every site whose
+    resolved :class:`~repro.core.site.SiteSpec` carries a plan.
+
+    Mirrors ``telemetry.probes.with_probe_slots`` — emission consumes the
+    same site resolution as ``nn.common.dense``'s dispatch, so a leaf
+    appears exactly when the backward will consume it (``carry_rows``; TP
+    plans never carry — plan-carry estimators are not tp_shardable and fall
+    back to the dense mask path there). Ones, not zeros: equal scores are
+    the uniform sampling prior for step 0, and the solver's probability
+    floor keeps every later carry strictly positive.
+
+    Only ``location="all"`` policies get leaves (scan-stacked models cannot
+    distinguish layers statically — same restriction as the other slots).
+    """
+    if policy is None or policy.location != "all":
+        return params
+    from repro.core.site import resolve_tree_site
+
+    def walk(node, path):
+        if isinstance(node, dict):
+            out = {k: walk(v, path + (k,)) for k, v in node.items()}
+            spec = resolve_tree_site(path, node, policy, n_layers=n_layers,
+                                     mesh=mesh, data_axes=data_axes,
+                                     model_axes=model_axes,
+                                     tp_sketch=tp_sketch)
+            if spec is not None and spec.carry_rows:
+                lead = node["w"].shape[:-2]
+                out[PLAN_SLOT] = jnp.ones(lead + (spec.carry_rows,),
+                                          jnp.float32)
+            return out
+        if isinstance(node, (list, tuple)):
+            return type(node)(walk(v, path) for v in node)
+        return node
+
+    return walk(params, ())
+
+
+def collect_plan_state(grads) -> Tuple[object, Dict[str, jax.Array]]:
+    """Pull the refreshed scores out of a gradient tree.
+
+    Returns ``(clean_grads, fresh)``: ``clean_grads`` has every ``"sslot"``
+    cotangent replaced by zeros (congruent with the params tree, invisible
+    to the grad norm and the optimizer moments), and ``fresh`` maps the
+    ``/``-joined site path to its refreshed score vector.
+    """
+    fresh: Dict[str, jax.Array] = {}
+
+    def walk(node, path):
+        if isinstance(node, dict):
+            out = {}
+            for k, v in node.items():
+                if k == PLAN_SLOT:
+                    fresh["/".join(map(str, path + (k,)))] = v
+                    out[k] = jnp.zeros_like(v)
+                else:
+                    out[k] = walk(v, path + (k,))
+            return out
+        if isinstance(node, (list, tuple)):
+            return type(node)(walk(v, path + (i,)) for i, v in enumerate(node))
+        return node
+
+    clean = walk(grads, ())
+    return clean, fresh
+
+
+def write_plan_state(params, fresh: Dict[str, jax.Array]):
+    """Overwrite the params tree's carry leaves with ``fresh`` (the map
+    :func:`collect_plan_state` produced). Paths absent from ``fresh`` keep
+    their current carry."""
+    if not fresh:
+        return params
+
+    def walk(node, path):
+        if isinstance(node, dict):
+            out = {}
+            for k, v in node.items():
+                p = path + (k,)
+                key = "/".join(map(str, p))
+                if k == PLAN_SLOT and key in fresh:
+                    out[k] = fresh[key].astype(v.dtype)
+                else:
+                    out[k] = walk(v, p)
+            return out
+        if isinstance(node, (list, tuple)):
+            return type(node)(walk(v, path + (i,)) for i, v in enumerate(node))
+        return node
+
+    return walk(params, ())

@@ -15,7 +15,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["column_scores", "SCORE_METHODS"]
+__all__ = ["column_scores", "SCORE_METHODS", "kernel_reduction_mode",
+           "scores_from_kernel_reduction"]
 
 
 def _f32(x):
@@ -81,3 +82,25 @@ def column_scores(method: str, G: jax.Array, W: jax.Array | None = None) -> jax.
         raise ValueError(f"unknown score method {method!r}; choose from {SCORE_METHODS}")
     s = _BASE[base](G, W)
     return jnp.square(s) if squared else s
+
+
+def kernel_reduction_mode(method: str) -> str | None:
+    """The streaming kernel reduction mode underlying ``method``: ``"l1"``
+    (Σ|G| per column) or ``"l2"`` (ΣG² per column), or None when the score
+    cannot be computed from a single column reduction (var/ds/gsv). The
+    one-pass estimators only support methods with a non-None mode — their
+    fresh scores are produced by the backward kernels' in-sweep reduction
+    (``kernels.ref.COL_SCORE_MODES``)."""
+    base = method[:-3] if method.endswith("_sq") else method
+    return base if base in ("l1", "l2") else None
+
+
+def scores_from_kernel_reduction(method: str, red: jax.Array) -> jax.Array:
+    """Map a raw kernel column reduction (Σ|G| for mode "l1", ΣG² for "l2")
+    to :func:`column_scores` semantics for ``method``, including the ``_sq``
+    variants — so carried scores are interchangeable with fresh ones."""
+    base = kernel_reduction_mode(method)
+    if base is None:
+        raise ValueError(f"method {method!r} has no kernel column reduction")
+    s = red if base == "l1" else jnp.sqrt(red)
+    return jnp.square(s) if method.endswith("_sq") else s

@@ -106,6 +106,12 @@ class SiteSpec:
     ``probe_capable``: the backward can emit the telemetry probe vector —
     via the estimator's ``apply_with_probe`` hook on the local plan, via the
     in-body ``plan()`` marginals on the TP plans.
+    ``carry_rows``: static size of the per-site plan-carry state (sslot) a
+    plan-carry estimator ("onepass"/"stale") threads through the backward —
+    the previous step's column scores — or None when the estimator carries
+    no plan. Local plan only; the sslot builder in core/plan_state.py emits
+    state leaves from this field, the same way gslot/pslot builders consume
+    compact_rows/probe_capable.
     """
 
     role: str
@@ -116,6 +122,7 @@ class SiteSpec:
     d_in: int = 0
     compact_rows: Optional[int] = None
     probe_capable: bool = False
+    carry_rows: Optional[int] = None
 
 
 @lru_cache(maxsize=None)
@@ -194,6 +201,7 @@ def _resolve(role, cfg, d_out, d_in, has_bias, x_ndim, mesh, data_axes,
         eff = dataclasses.replace(cfg, backend="mask", block=0)
 
     rows = None
+    carry = None
     if eff is not None and not eff.is_noop:
         try:
             est = estimators.get_estimator(eff.backend)
@@ -205,6 +213,12 @@ def _resolve(role, cfg, d_out, d_in, has_bias, x_ndim, mesh, data_axes,
                 rows = n_mp * est.compact_rank(eff, d_out // n_mp)
             else:  # tp_row and local both emit d_out-indexed rows
                 rows = est.compact_rank(eff, d_out)
+        if (est is not None and getattr(est, "plan_carry", False)
+                and plan.kind == "local"):
+            # Plan-carry estimators thread previous-step scores through the
+            # spine; the mask fallback above already rewrote eff.backend for
+            # TP-incompatible sites, so carry stays local-plan only.
+            carry = est.carry_size(eff, d_out)
 
     if plan.is_tp:
         # TP plans probe from the in-body plan marginals (ColumnPlan.probs)
@@ -215,7 +229,7 @@ def _resolve(role, cfg, d_out, d_in, has_bias, x_ndim, mesh, data_axes,
         probe = probe_capable(eff)
     return SiteSpec(role=role, cfg=eff, plan=plan, has_bias=has_bias,
                     d_out=d_out, d_in=d_in, compact_rows=rows,
-                    probe_capable=probe)
+                    probe_capable=probe, carry_rows=carry)
 
 
 def resolve_site(role: str, cfg: Optional[SketchConfig], *, d_out: int,
@@ -271,7 +285,7 @@ def _flatten_leading(x):
 
 
 @partial(jax.custom_vjp, nondiff_argnums=(0,))
-def _site_linear(spec: SiteSpec, x, w, b, key, slot, pslot):
+def _site_linear(spec: SiteSpec, x, w, b, key, slot, pslot, sslot):
     plan = spec.plan
     if plan.kind == "local":
         y = jnp.einsum("...i,oi->...o", x, w)
@@ -298,29 +312,42 @@ def _site_linear(spec: SiteSpec, x, w, b, key, slot, pslot):
                             out_specs=P(dp, None, None))(*args)
 
 
-def _fwd(spec, x, w, b, key, slot, pslot):
-    y = _site_linear(spec, x, w, b, key, slot, pslot)
-    return y, (x, w, key, b is not None, slot, pslot is not None)
+def _fwd(spec, x, w, b, key, slot, pslot, sslot):
+    y = _site_linear(spec, x, w, b, key, slot, pslot, sslot)
+    return y, (x, w, key, b is not None, slot, pslot is not None, sslot)
 
 
 def _bwd(spec, res, g):
-    x, w, key, has_b, slot, want_probe = res
+    x, w, key, has_b, slot, want_probe, sslot = res
     kind = spec.plan.kind
     if kind == "local":
-        return _local_bwd(spec.cfg, x, w, key, has_b, slot, want_probe, g)
+        return _local_bwd(spec.cfg, x, w, key, has_b, slot, want_probe,
+                          sslot, g)
     if kind == "tp_exact":
-        return _tp_exact_bwd(spec, x, w, has_b, slot, want_probe, g)
-    return _tp_sketch_bwd(spec, x, w, key, has_b, slot, want_probe, g)
+        outs = _tp_exact_bwd(spec, x, w, has_b, slot, want_probe, g)
+    else:
+        outs = _tp_sketch_bwd(spec, x, w, key, has_b, slot, want_probe, g)
+    # Plan-carry estimators are local-plan only (tp_shardable=False ⇒ the
+    # mask fallback strips the carry before a TP plan is chosen), so on the
+    # TP plans the sslot cotangent — when a carry rode along at all — is the
+    # unchanged carry: echo zeros so the train step's write-back is a no-op.
+    s_ct = None if sslot is None else jnp.zeros_like(sslot)
+    return outs + (s_ct,)
 
 
 _site_linear.defvjp(_fwd, _bwd)
 
 
 def sketched_site(spec: SiteSpec, x, w, b=None, key=None, slot=None,
-                  pslot=None):
+                  pslot=None, sslot=None):
     """Run one site through the spine. ``key=None`` / noop cfg on the local
     plan short-circuits to a plain exact linear (no custom_vjp at all —
-    identical to the historical ``sketched_linear`` behavior)."""
+    identical to the historical ``sketched_linear`` behavior).
+
+    ``sslot`` (optional): the site's plan-carry state leaf (previous-step
+    column scores) for plan-carry estimators. Its cotangent out of the
+    custom_vjp is the REFRESHED carry, which core/plan_state.py writes back
+    into the params tree after the optimizer step."""
     if spec.plan.kind == "local" and (spec.cfg is None or spec.cfg.is_noop
                                       or key is None):
         y = jnp.einsum("...i,oi->...o", x, w)
@@ -328,19 +355,26 @@ def sketched_site(spec: SiteSpec, x, w, b=None, key=None, slot=None,
     if spec.plan.kind in ("tp_column", "tp_row"):
         assert tp_estimator(spec.cfg) is not None, \
             "TP sketched site on a non-tp_shardable backend"
-    return _site_linear(spec, x, w, b, key, slot, pslot)
+    return _site_linear(spec, x, w, b, key, slot, pslot, sslot)
 
 
 # -- local plan --------------------------------------------------------------
 
 
-def _local_bwd(cfg, x, w, key, has_b, slot, want_probe, g):
+def _local_bwd(cfg, x, w, key, has_b, slot, want_probe, sslot, g):
     G2d, _ = _flatten_leading(g)
     X2d, _ = _flatten_leading(x)
     n = G2d.shape[-1]
 
     est = estimators.get_estimator("mask" if cfg.is_noop else cfg.backend)
-    if want_probe:
+    if getattr(est, "plan_carry", False):
+        # one-pass plan-carry backward: the step-t sketch is sampled from
+        # the carried step-(t-1) scores (sslot; None ⇒ uniform prior), and
+        # the refreshed scores come back in out.state. want_probe is folded
+        # in so the carry estimator runs at most one sweep over G.
+        out = est.apply_with_state(cfg, G2d, X2d, w, key, sslot, has_b=has_b,
+                                   want_probe=want_probe)
+    elif want_probe:
         # telemetry: the optional estimator hook may fill out.probe; the
         # probe rides the probe slot's cotangent out of jax.grad
         out = est.apply_with_probe(cfg, G2d, X2d, w, key, has_b=has_b)
@@ -352,9 +386,17 @@ def _local_bwd(cfg, x, w, key, has_b, slot, want_probe, g):
 
         probe_ct = (out.probe if out.probe is not None
                     else jnp.zeros((PROBE_WIDTH,), jnp.float32))
+    state_ct = None
+    if sslot is not None:
+        # the sslot cotangent carries the refreshed scores out of jax.grad;
+        # zeros (= "carry unchanged" after the train step's write-back merge)
+        # when the estimator emitted no refresh
+        state_ct = (out.state.astype(sslot.dtype)
+                    if out.state is not None else jnp.zeros_like(sslot))
     dX = out.dx.reshape(x.shape)
     if not out.is_compact:
-        return _pack(dX, out.dw.astype(w.dtype), out.db, has_b, slot, probe_ct)
+        return _pack(dX, out.dw.astype(w.dtype), out.db, has_b, slot,
+                     probe_ct, state_ct)
 
     db = None
     if has_b:
@@ -365,14 +407,14 @@ def _local_bwd(cfg, x, w, key, has_b, slot, want_probe, g):
         slot_ct = CompactGrad(rows=out.rows.astype(jnp.float32),
                               idx=out.cols.astype(jnp.float32))
         return (dX, jnp.zeros_like(w), db if has_b else None, None, slot_ct,
-                probe_ct)
+                probe_ct, state_ct)
     dW = jnp.zeros_like(w).at[out.cols].add(out.rows.astype(w.dtype))
-    return _pack(dX, dW, db, has_b, slot, probe_ct)
+    return _pack(dX, dW, db, has_b, slot, probe_ct, state_ct)
 
 
-def _pack(dx, dw, db, has_b, slot, probe_ct):
+def _pack(dx, dw, db, has_b, slot, probe_ct, state_ct=None):
     # slot primal is all-zeros, so returning it doubles as its zero cotangent
-    return (dx, dw, db if has_b else None, None, slot, probe_ct)
+    return (dx, dw, db if has_b else None, None, slot, probe_ct, state_ct)
 
 
 # -- TP sketched plans (column / row) ----------------------------------------

@@ -43,8 +43,10 @@ import jax.numpy as jnp
 from repro.core import estimators
 from repro.core.compact_grad import CompactGrad, compact_rank
 from repro.core.estimators import EstimatorVJP
+from repro.core.scores import kernel_reduction_mode, scores_from_kernel_reduction
 from repro.core.sketching import (COLUMN_METHODS, SketchConfig, column_plan,
-                                  effective_cfg, sketch_dense)
+                                  column_plan_from_scores, effective_cfg,
+                                  sketch_dense)
 
 __all__ = ["sketched_linear", "linear"]
 
@@ -196,9 +198,135 @@ class _PallasEstimator(_CompactEstimator):
         return EstimatorVJP(dx=dX2d, rows=rows, cols=idx, db_c=db_c)
 
 
+class _PlanCarryEstimator(_PallasEstimator):
+    """Shared machinery of the one-HBM-pass estimators: the step-t sketch is
+    sampled from CARRIED column scores (previous step, or a uniform prior on
+    the first step) — no score pass over G — and the backward kernel's
+    single sweep over G produces the gradient AND the score refresh.
+
+    Unbiasedness does not depend on the carry being fresh: conditioned on
+    the carried scores, every column keeps a strictly positive probability
+    (``optimal_probabilities``'s relative floor + the all-zero guard in
+    ``column_plan_from_scores``) and kept columns are rescaled by 1/p, so
+    ``E[dW | carry] = GᵀX`` exactly — staleness only moves variance, which
+    the telemetry probe measures online (docs/telemetry.md).
+    """
+
+    plan_carry = True
+    # the carried state is not threaded through the TP shard_map path; under
+    # tp_sketch these sites fall back like any non-shardable estimator
+    tp_shardable = False
+
+    def validate(self, cfg) -> None:
+        super().validate(cfg)
+        if kernel_reduction_mode(cfg.method) is None:
+            raise ValueError(
+                f"backend {cfg.backend!r} needs an l1/l2-family score method "
+                f"(its fresh scores come from the backward kernel's in-sweep "
+                f"column reduction), got {cfg.method!r}")
+
+    def carry_size(self, cfg, n: int) -> int:
+        return n
+
+    def apply(self, cfg, G2d, X2d, w, key, *, has_b, score_psum_axes=None):
+        return self.apply_with_state(cfg, G2d, X2d, w, key, None, has_b=has_b,
+                                     score_psum_axes=score_psum_axes)
+
+    def apply_with_probe(self, cfg, G2d, X2d, w, key, *, has_b,
+                         score_psum_axes=None):
+        return self.apply_with_state(cfg, G2d, X2d, w, key, None, has_b=has_b,
+                                     want_probe=True,
+                                     score_psum_axes=score_psum_axes)
+
+    def apply_with_state(self, cfg, G2d, X2d, w, key, state, *, has_b,
+                         want_probe=False, score_psum_axes=None):
+        from repro.telemetry.probes import probe_from_rows
+
+        n = G2d.shape[-1]
+        cfg = effective_cfg(cfg, n)
+        if state is None:
+            state = jnp.ones((n,), jnp.float32)  # uniform prior (first step)
+        plan = column_plan_from_scores(cfg, state, key, want_compact=True)
+        out = self._one_pass(cfg, G2d, plan, w, X2d, state)
+        if want_probe:
+            out.probe = probe_from_rows(out.rows, jnp.take(plan.probs, out.cols))
+        return out
+
+    def _one_pass(self, cfg, G2d, plan, w, X2d, state) -> EstimatorVJP:
+        raise NotImplementedError
+
+
+class _OnePassEstimator(_PlanCarryEstimator):
+    """Streaming selection: ALL of G streams through the backward kernel
+    once; kept blocks (gated by the plan sampled from the carried scores)
+    feed dX/compact-dW/db while EVERY column's fresh score is reduced in the
+    same sweep — a full score refresh per step, one HBM pass over G."""
+
+    name = "onepass"
+
+    def _one_pass(self, cfg, G2d, plan, w, X2d, state):
+        from repro.kernels import ops as kops
+        from repro.kernels import ref as kref
+
+        mode = kernel_reduction_mode(cfg.method)
+        idx, scales = plan.indices, plan.scales
+        if cfg.block > 1:
+            dX2d, dWc, db_blk, red = kops.block_stream_matmul_fused(
+                G2d, idx, scales, w, X2d, block=cfg.block, score_mode=mode)
+            bs = cfg.block
+            cols = (idx[:, None] * bs
+                    + jnp.arange(bs, dtype=idx.dtype)[None, :]).reshape(-1)
+            rows, db_c = dWc.reshape(-1, w.shape[1]), db_blk.reshape(-1)
+        else:
+            dX2d, rows, db_c, red = kref.gather_cols_onepass_ref(
+                G2d, idx, scales, w, X2d, score_mode=mode)
+            cols = idx
+        fresh = scores_from_kernel_reduction(cfg.method, red)
+        return EstimatorVJP(dx=dX2d, rows=rows, cols=cols, db_c=db_c,
+                            state=fresh)
+
+
+class _StalePlanEstimator(_PlanCarryEstimator):
+    """Stale-plan estimator: the kept-only fused gather backward (same G
+    traffic as the ``pallas`` backend's fused kernel — dropped blocks are
+    never read), with the kept columns' raw scores reduced from the tiles
+    already in VMEM. The refresh is PARTIAL — unkept columns keep their
+    carried score until sampled — so scores can be arbitrarily stale; the
+    probability floor keeps every column visited eventually and the
+    estimator unbiased (see class docstring above)."""
+
+    name = "stale"
+
+    def _one_pass(self, cfg, G2d, plan, w, X2d, state):
+        from repro.kernels import ops as kops
+        from repro.kernels import ref as kref
+
+        mode = kernel_reduction_mode(cfg.method)
+        idx, scales = plan.indices, plan.scales
+        if cfg.block > 1:
+            dX2d, dWc, db_blk, kept_red = kops.block_gather_matmul_fused(
+                G2d, idx, scales, w, X2d, block=cfg.block,
+                with_scores=True, score_mode=mode)
+            bs = cfg.block
+            cols = (idx[:, None] * bs
+                    + jnp.arange(bs, dtype=idx.dtype)[None, :]).reshape(-1)
+            rows, db_c = dWc.reshape(-1, w.shape[1]), db_blk.reshape(-1)
+            kept_red = kept_red.reshape(-1)
+        else:
+            dX2d, rows, db_c, kept_red = kref.gather_cols_fused_scores_ref(
+                G2d, idx, scales, w, X2d, score_mode=mode)
+            cols = idx
+        fresh = state.at[cols].set(
+            scores_from_kernel_reduction(cfg.method, kept_red))
+        return EstimatorVJP(dx=dX2d, rows=rows, cols=cols, db_c=db_c,
+                            state=fresh)
+
+
 estimators.register_estimator(_MaskEstimator())
 estimators.register_estimator(_CompactEstimator())
 estimators.register_estimator(_PallasEstimator())
+estimators.register_estimator(_OnePassEstimator())
+estimators.register_estimator(_StalePlanEstimator())
 
 
 # ---------------------------------------------------------------------------
@@ -208,7 +336,7 @@ estimators.register_estimator(_PallasEstimator())
 
 def sketched_linear(x, w, b=None, *, key=None, cfg: Optional[SketchConfig] = None,
                     grad_slot: Optional[CompactGrad] = None,
-                    probe_slot=None):
+                    probe_slot=None, plan_state=None):
     """Public entry point. ``cfg=None`` (or noop cfg / no key) = exact linear.
 
     This is the *local* :class:`~repro.core.site.ExecutionPlan` instantiation
@@ -220,11 +348,17 @@ def sketched_linear(x, w, b=None, *, key=None, cfg: Optional[SketchConfig] = Non
     by ``nn.common.dense`` from the params tree) switches the backward to
     the estimator's ``apply_with_probe`` hook and routes the per-site probe
     vector out through the slot's cotangent — see repro/telemetry/probes.py.
+
+    ``plan_state`` (an ``[n]`` f32 leaf, normally threaded in by
+    ``nn.common.dense`` from the params tree — core/plan_state.py) is the
+    carried plan state of plan-carry estimators ("onepass"/"stale"): the
+    previous step's column scores the backward samples its sketch from. The
+    refreshed scores ride out as this argument's cotangent.
     """
     from repro.core import site
 
     return site.sketched_site(site.local_spec(cfg), x, w, b, key,
-                              grad_slot, probe_slot)
+                              grad_slot, probe_slot, plan_state)
 
 
 # Alias used across the nn substrate.

@@ -39,6 +39,7 @@ __all__ = [
     "ALL_METHODS",
     "static_rank",
     "column_plan",
+    "column_plan_from_scores",
     "column_gate",
     "apply_rcs",
     "sketch_dense",
@@ -248,6 +249,69 @@ def _block_plan(cfg: SketchConfig, G2d, W, key, *, want_compact: bool,
     gate_blk = jnp.zeros((nb,), jnp.float32).at[idx].set(inv_p_sel)
     gate = jnp.repeat(gate_blk, bs)
     return ColumnPlan(indices=idx, scales=inv_p_sel, gate=gate, probs=probs_cols)
+
+
+def _weights_from_scores(scores: jax.Array) -> jax.Array:
+    """Convex-program weights from precomputed proxy scores: w = s², with an
+    all-zero guard (uniform) so the sampler's marginals stay well-defined for
+    any carried state. ``optimal_probabilities`` then adds its own relative
+    floor, keeping every p_i strictly positive — the property that makes a
+    plan sampled from STALE scores still conditionally unbiased (staleness
+    can only inflate variance, never zero out a coordinate's probability)."""
+    w = jnp.square(scores.astype(jnp.float32))
+    return jnp.where(jnp.sum(w) > 0, w, jnp.ones_like(w))
+
+
+def column_plan_from_scores(cfg: SketchConfig, scores: jax.Array,
+                            key: jax.Array, *,
+                            want_compact: bool = True) -> ColumnPlan:
+    """Sample a column sketch from PRECOMPUTED per-column proxy scores — no
+    read of G. This is the planning half of the one-pass backward paths:
+    the carry estimators feed it the previous step's scores (O(n) state), so
+    the only G traffic left is the backward kernel's own single sweep.
+
+    ``scores`` must follow :func:`repro.core.scores.column_scores` semantics
+    for ``cfg.method`` ([n] f32, non-negative). Requires ``exact_r`` (the
+    carry paths need static compact shapes).
+    """
+    n = scores.shape[-1]
+    cfg = effective_cfg(cfg, n)
+    if not cfg.exact_r:
+        raise ValueError("column_plan_from_scores requires exact_r=True")
+    if cfg.block > 1:
+        bs = cfg.block
+        nb = n // bs
+        rb = static_block_rank(cfg, n)
+        w_blk = jnp.sum(_weights_from_scores(scores).reshape(nb, bs), axis=-1)
+        w_blk = jnp.where(jnp.sum(w_blk) > 0, w_blk, jnp.ones_like(w_blk))
+        p = solver.optimal_probabilities(w_blk, rb)
+        if rb >= nb:
+            ones = jnp.ones((n,), jnp.float32)
+            return ColumnPlan(indices=jnp.arange(nb, dtype=jnp.int32),
+                              scales=jnp.ones((nb,), jnp.float32),
+                              gate=ones, probs=ones)
+        idx = solver.sample_exact_r(key, p, rb)
+        inv_p_sel = 1.0 / jnp.maximum(jnp.take(p, idx), 1e-20)
+        probs_cols = jnp.repeat(p, bs)
+        if want_compact:
+            return ColumnPlan(indices=idx, scales=inv_p_sel, gate=None,
+                              probs=probs_cols)
+        gate = jnp.repeat(
+            jnp.zeros((nb,), jnp.float32).at[idx].set(inv_p_sel), bs)
+        return ColumnPlan(indices=idx, scales=inv_p_sel, gate=gate,
+                          probs=probs_cols)
+    r = static_rank(cfg, n)
+    p = solver.optimal_probabilities(_weights_from_scores(scores), r)
+    if r >= n:
+        ones = jnp.ones((n,), jnp.float32)
+        idx = jnp.arange(n, dtype=jnp.int32)
+        return ColumnPlan(indices=idx, scales=ones, gate=ones, probs=ones)
+    idx = solver.sample_exact_r(key, p, r)
+    inv_p_sel = 1.0 / jnp.maximum(jnp.take(p, idx), 1e-20)
+    if want_compact:
+        return ColumnPlan(indices=idx, scales=inv_p_sel, gate=None, probs=p)
+    gate = jnp.zeros((n,), jnp.float32).at[idx].set(inv_p_sel)
+    return ColumnPlan(indices=idx, scales=inv_p_sel, gate=gate, probs=p)
 
 
 def column_gate(cfg: SketchConfig, G2d, W, key) -> jax.Array:

@@ -304,6 +304,9 @@ def run_cell(arch: str, cell_name: str, *, multi_pod: bool, policy_name: str = "
                                   seq_len=cell.seq_len)
             gate = check_baseline(rep)
             hlo_flops = rec.get("cost_full_depth", rec["rolled_cost"])
+            from repro.analysis.invariants import g_reader_ceiling
+
+            backend = getattr(policy[0].base, "backend", None)
             rec["coverage"] = {
                 **rep.summary(),
                 "escaped_frac_vs_hlo": rep.escaped_frac_vs_hlo(
@@ -311,6 +314,11 @@ def run_cell(arch: str, cell_name: str, *, multi_pod: bool, policy_name: str = "
                 "baseline_ok": gate.ok,
                 "baseline_used": gate.used,
                 "baseline_message": gate.message(),
+                # per-estimator HBM accounting contract (docs/perf.md): the
+                # compiled backward may read G at most this many times —
+                # 1 for the plan-carry one-pass estimators, 2 legacy
+                "g_reader_ceiling": (g_reader_ceiling(backend)
+                                     if backend else None),
             }
         except Exception:
             rec["coverage"] = {"error": traceback.format_exc(limit=3)}

@@ -126,19 +126,20 @@ def dense(params, x, ctx: Ctx, role: str):
     cfg = ctx.cfg_for(role)
     slot = params.get("gslot")
     pslot = params.get("pslot")
+    sslot = params.get("sslot")  # plan-carry scores (core/plan_state.py)
     key = ctx.site_key(role)
     w = params["w"]
     b = params.get("b")
     if cfg is None or key is None:
         return linear(x, w, b, key=key, cfg=cfg, grad_slot=slot,
-                      probe_slot=pslot)
+                      probe_slot=pslot, plan_state=sslot)
     spec = ctx.site_spec(role, cfg, w, has_bias=b is not None, x_ndim=x.ndim)
     if spec.plan.kind == "local":
         return linear(x, w, b, key=key, cfg=spec.cfg, grad_slot=slot,
-                      probe_slot=pslot)
+                      probe_slot=pslot, plan_state=sslot)
     from repro.core.site import sketched_site
 
-    return sketched_site(spec, x, w, b, key, slot, pslot)
+    return sketched_site(spec, x, w, b, key, slot, pslot, sslot)
 
 
 def rmsnorm_init(d: int, dtype=jnp.float32):

@@ -29,6 +29,7 @@ from repro.api.execution import ExecutionConfig
 from repro.configs.base import ArchConfig
 from repro.core import SketchPolicy
 from repro.core import compact_grad as cgrad
+from repro.core import plan_state as pstate
 from repro.models import lm
 from repro.optim import Optimizer, global_grad_norm
 
@@ -43,8 +44,23 @@ class TrainState:
     step: jax.Array
 
 
-def init_state(key, cfg: ArchConfig, opt: Optimizer) -> TrainState:
+def init_state(key, cfg: ArchConfig, opt: Optimizer,
+               policy: Optional[SketchPolicy] = None, *,
+               execution: Optional[ExecutionConfig] = None) -> TrainState:
+    """Fresh train state. ``policy``/``execution`` (optional, backwards
+    compatible) let plan-carry estimators ("onepass"/"stale") merge their
+    permanent per-site score leaves into the params tree — without them a
+    carry policy still runs, every step just re-seeds from the uniform
+    prior (see core/plan_state.py)."""
     params = lm.init_params(key, cfg)
+    if pstate.policy_uses_carry(policy):
+        ex = execution
+        params = pstate.with_plan_state(
+            params, policy, n_layers=cfg.n_layers,
+            mesh=ex.mesh if ex else None,
+            data_axes=ex.data_axes if ex else ("data",),
+            model_axes=ex.model_axes if ex else ("model",),
+            tp_sketch=ex.tp_sketch if ex else False)
     return TrainState(params=params, opt_state=opt.init(params),
                       step=jnp.zeros((), jnp.int32))
 
@@ -98,6 +114,16 @@ def make_train_step(cfg: ArchConfig, opt: Optimizer, policy: Optional[SketchPoli
     telemetry_on = (tel is not None and tel.probes and policy is not None
                     and accum == 1)
     rcfg = ex.resilience
+    carry_on = pstate.policy_uses_carry(policy)
+    if ex.fused_vmem_limit is not None or ex.obs is not None:
+        # bind the execution-level kernel knobs once per step build: the
+        # fused-dispatch VMEM budget and the obs metrics sink its
+        # dispatch/fallback decisions are recorded into (kernels/ops.py)
+        from repro.kernels import ops as kops
+        from repro.obs import observability
+
+        kops.configure(vmem_limit=ex.fused_vmem_limit,
+                       metrics=observability(ex.obs).metrics)
 
     def ctx_for(key):
         return ex.make_ctx(policy=policy, key=key)
@@ -162,7 +188,19 @@ def make_train_step(cfg: ArchConfig, opt: Optimizer, policy: Optional[SketchPoli
             zeros = compat.tree_map(lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
             (loss, grads), metrics = jax.lax.scan(micro, (jnp.zeros(()), zeros), (mbs, keys))
             metrics = compat.tree_map(lambda m: m[-1], metrics)
+        fresh_scores = {}
+        if carry_on:
+            # plan carry: the sslot cotangents ARE the refreshed scores —
+            # pull them out (zeroing the leaves keeps the gradient tree
+            # congruent for the optimizer and the grad norm; under accum the
+            # scan has averaged the microbatches' scores, still a valid carry)
+            grads, fresh_scores = pstate.collect_plan_state(grads)
         new_params, new_opt = opt.update(grads, state.opt_state, state.params, state.step)
+        if fresh_scores:
+            # write the refreshed carry over whatever the optimizer did to
+            # the sslot leaves (zero grads ⇒ only decay touched them) —
+            # BEFORE sentinel gating, so a tripped step keeps the old carry
+            new_params = pstate.write_plan_state(new_params, fresh_scores)
         gn = _global_norm(grads)
         if rcfg is not None and rcfg.sentinel:
             from repro.resilience.sentinel import gate_update, trip_flag

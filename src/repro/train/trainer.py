@@ -174,7 +174,8 @@ def train_loop(runtime: Runtime, cfg: ArchConfig, opt: Optimizer,
     traced = tracer.enabled
     key = compat.prng_key(tcfg.seed)
     if state is None:
-        state = init_state(jax.random.fold_in(key, 0), cfg, opt)
+        state = init_state(jax.random.fold_in(key, 0), cfg, opt,
+                           runtime.policy, execution=runtime.execution)
 
     ckpt = (CheckpointManager(tcfg.ckpt_dir, tcfg.ckpt_every, tracer=tracer)
             if tcfg.ckpt_dir else None)

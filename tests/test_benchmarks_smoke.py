@@ -181,11 +181,45 @@ def test_backward_fusion_bench_tiny():
     # its stream (was 3 readers when the dX kernel made its own pass, 4
     # before the shared dW/db gather)
     assert gp["g_passes_fallback"] <= 2, gp
+    # the plan-carry estimators are the headline: ONE HBM pass over G —
+    # the plan comes from carried scores (no score read), and the backward
+    # kernel's single sweep produces the gradient and the score refresh.
+    # Asserted against the per-estimator ceiling table the dryrun coverage
+    # record and run.py --check consume.
+    from repro.analysis.invariants import G_READER_CEILINGS
+
+    assert gp["g_passes_onepass"] <= G_READER_CEILINGS["onepass"] == 1, gp
+    assert gp["g_passes_stale"] <= G_READER_CEILINGS["stale"] == 1, gp
+    assert gp["g_passes_fused"] <= G_READER_CEILINGS["pallas"], gp
+    # stale-plan excess variance: probe-measured, finite, and >= ~1 (a stale
+    # plan can only add variance relative to fresh scores, up to MC noise)
+    sp = out["stale_plan"]
+    assert sp["probe_var_stale"] > 0 and sp["probe_var_fresh"] > 0
+    assert sp["excess_var_ratio"] > 0.5, sp
+    ts_local = out["train_step_local"]
+    assert {"block_twopass", "block_onepass", "block_stale"} <= set(ts_local)
+    for rec in ts_local.values():
+        assert rec["step_ms"] > 0
     if jax.device_count() >= 8:
         ts = out["train_step"]
         assert set(ts) >= {"exact", "compact_pre", "compact_fused"}
         for rec in ts.values():
             assert rec["step_ms"] > 0
+
+
+def test_g_reader_ceiling_table():
+    """The per-estimator HBM-accounting contract consumed by the smoke
+    assertions above, the dryrun coverage record, and run.py --check: every
+    builtin backend has a ceiling, the plan-carry estimators claim exactly
+    one G reader, and unknown third-party backends get the conservative
+    legacy bound."""
+    from repro.analysis import G_READER_CEILINGS, g_reader_ceiling
+    from repro.core.estimators import BUILTIN_BACKENDS
+
+    assert set(G_READER_CEILINGS) == set(BUILTIN_BACKENDS)
+    assert g_reader_ceiling("onepass") == g_reader_ceiling("stale") == 1
+    assert g_reader_ceiling("pallas") == g_reader_ceiling("mask") == 2
+    assert g_reader_ceiling("some_third_party_backend") == 2
 
 
 def test_g_reader_counter_parses_hlo():

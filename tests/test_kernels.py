@@ -10,7 +10,8 @@ from repro.kernels import ref
 from repro.kernels.col_scores import col_l1_scores
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.sketch_matmul import (block_gather_matmul, block_gather_matmul_dw,
-                                         block_gather_matmul_fused)
+                                         block_gather_matmul_fused,
+                                         block_stream_matmul_fused)
 
 
 def _tol(dt):
@@ -116,6 +117,148 @@ def test_dw_db_ref_matches_fused_halves():
     np.testing.assert_allclose(np.asarray(db), np.asarray(want_db),
                                rtol=1e-5, atol=1e-5)
     assert dWc.shape == (3, bs, d) and db.shape == (3, bs)
+
+
+@pytest.mark.parametrize("N,n,d,rb,bs,dt", [
+    (64, 512, 384, 2, 128, jnp.float32),
+    (32, 256, 96, 2, 64, jnp.float32),
+    (256, 1024, 512, 4, 128, jnp.bfloat16),
+])
+def test_stream_kernel_bit_identical_to_fused(N, n, d, rb, bs, dt):
+    """Streaming selection (one pass over ALL of G) is BIT-identical to the
+    kept-only fused kernel on dX/dWc/db for the same keep decisions: kept
+    blocks accumulate in the same order with the same operands, and dropped
+    blocks only touch the score reduction. Fresh scores match numpy."""
+    ks = jax.random.split(jax.random.key(N * n + d + 1), 4)
+    G = jax.random.normal(ks[0], (N, n), dt)
+    W = jax.random.normal(ks[1], (n, d), dt)
+    X = jax.random.normal(ks[2], (N, d), dt)
+    nb = n // bs
+    idx = jnp.sort(jax.random.choice(ks[3], nb, (rb,), replace=False)).astype(jnp.int32)
+    sc = jax.random.uniform(ks[3], (rb,), minval=0.5, maxval=2.0)
+    gates = jnp.zeros((nb,), jnp.float32).at[idx].set(sc.astype(jnp.float32))
+    slot_map = jnp.zeros((nb,), jnp.int32).at[idx].set(jnp.arange(rb, dtype=jnp.int32))
+
+    dX_s, dWc_s, db_s, scores = block_stream_matmul_fused(
+        G, gates, slot_map, W, X, rb=rb, block=bs, interpret=True)
+    dX_f, dWc_f, db_f = block_gather_matmul_fused(G, idx, sc, W, X, block=bs,
+                                                  interpret=True)
+    np.testing.assert_array_equal(np.asarray(dX_s, np.float32), np.asarray(dX_f, np.float32))
+    np.testing.assert_array_equal(np.asarray(dWc_s, np.float32), np.asarray(dWc_f, np.float32))
+    np.testing.assert_array_equal(np.asarray(db_s), np.asarray(db_f))
+
+    want_s = np.abs(np.asarray(G, np.float32)).sum(0)
+    tol = 2e-2 if dt == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(np.asarray(scores), want_s, rtol=tol, atol=tol)
+
+
+def test_fused_with_scores_outputs_unchanged():
+    """with_scores=True is a free rider: the three gradient outputs are
+    byte-identical with the flag on or off (Pallas kernel AND oracle), and
+    the appended kept-block scores equal the raw column reduction."""
+    ks = jax.random.split(jax.random.key(23), 4)
+    N, n, d, bs, rb = 32, 256, 96, 64, 2
+    G = jax.random.normal(ks[0], (N, n))
+    W = jax.random.normal(ks[1], (n, d))
+    X = jax.random.normal(ks[2], (N, d))
+    idx = jnp.asarray([1, 3], jnp.int32)
+    sc = jnp.asarray([1.5, 0.75], jnp.float32)
+    base = block_gather_matmul_fused(G, idx, sc, W, X, block=bs, interpret=True)
+    plus = block_gather_matmul_fused(G, idx, sc, W, X, block=bs, interpret=True,
+                                     with_scores=True)
+    for a, b in zip(base, plus[:3]):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    cols = (np.asarray(idx)[:, None] * bs + np.arange(bs)).reshape(-1)
+    want = np.abs(np.asarray(G, np.float32))[:, cols].sum(0).reshape(rb, bs)
+    np.testing.assert_allclose(np.asarray(plus[3]), want, rtol=1e-4, atol=1e-4)
+
+    rbase = ref.block_gather_matmul_fused_ref(G, idx, sc, W, X, block=bs)
+    rplus = ref.block_gather_matmul_fused_ref(G, idx, sc, W, X, block=bs,
+                                              with_scores=True)
+    for a, b in zip(rbase, rplus[:3]):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_allclose(np.asarray(rplus[3]), want, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("mode", ["l1", "l2"])
+def test_onepass_ref_matches_fused_ref(mode):
+    """The streaming one-pass XLA oracle produces the same gradients as the
+    kept-only fused oracle for the same plan, plus full fresh scores equal to
+    the direct column reduction."""
+    ks = jax.random.split(jax.random.key(31), 4)
+    N, n, d, bs = 24, 128, 40, 32
+    G = jax.random.normal(ks[0], (N, n))
+    W = jax.random.normal(ks[1], (n, d))
+    X = jax.random.normal(ks[2], (N, d))
+    idx = jnp.asarray([0, 3], jnp.int32)
+    sc = jnp.asarray([2.0, 0.5], jnp.float32)
+    dX, dWc, db, scores = ref.block_stream_matmul_onepass_ref(
+        G, idx, sc, W, X, block=bs, score_mode=mode)
+    rdX, rdW, rdb = ref.block_gather_matmul_fused_ref(G, idx, sc, W, X, block=bs)
+    np.testing.assert_allclose(np.asarray(dX), np.asarray(rdX), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(dWc), np.asarray(rdW), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(db), np.asarray(rdb), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(scores),
+                               np.asarray(ref.col_scores_ref(G, mode=mode)),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("mode", ["l1", "l2"])
+def test_col_scores_fp32_accumulation_property(mode):
+    """The fp32-accumulation promise in col_scores.py as a tested property:
+    at N = 10^5 rows the fp32 tree reduction of |G| / G² matches a float64
+    reference to ~1e-6 relative — naive fp16/bf16 accumulation would be off
+    by orders of magnitude more."""
+    rng = np.random.default_rng(0)
+    N, n = 100_000, 8
+    G64 = rng.standard_normal((N, n))
+    G = jnp.asarray(G64, jnp.float32)
+    got = np.asarray(col_l1_scores(G, mode=mode, interpret=True), np.float64)
+    red = np.abs if mode == "l1" else np.square
+    want = red(np.asarray(G, np.float64)).sum(0)  # f64 over the f32 values
+    # fp32 sequential tile accumulation: ~sqrt(steps)*eps relative; bf16
+    # accumulation would sit at ~1e-2 and fail this by three decades.
+    np.testing.assert_allclose(got, want, rtol=2e-5)
+
+
+def test_ops_fused_vmem_limit_resolution(monkeypatch):
+    """fused_vmem_limit(): configure() override > REPRO_FUSED_VMEM_LIMIT env
+    > built-in default; invalid values raise; dispatch decisions land in the
+    bound metrics registry."""
+    from repro.kernels import ops
+    from repro.obs.metrics import MetricsRegistry
+
+    monkeypatch.setattr(ops, "_VMEM_LIMIT_OVERRIDE", None)
+    monkeypatch.setattr(ops, "_METRICS", None)
+    monkeypatch.delenv("REPRO_FUSED_VMEM_LIMIT", raising=False)
+    assert ops.fused_vmem_limit() == ops._FUSED_VMEM_LIMIT
+
+    monkeypatch.setenv("REPRO_FUSED_VMEM_LIMIT", str(7 * 2 ** 20))
+    assert ops.fused_vmem_limit() == 7 * 2 ** 20
+    monkeypatch.setenv("REPRO_FUSED_VMEM_LIMIT", "not-a-number")
+    with pytest.raises(ValueError):
+        ops.fused_vmem_limit()
+    monkeypatch.setenv("REPRO_FUSED_VMEM_LIMIT", str(7 * 2 ** 20))
+
+    reg = MetricsRegistry()
+    ops.configure(vmem_limit=5 * 2 ** 20, metrics=reg)
+    assert ops.fused_vmem_limit() == 5 * 2 ** 20  # override beats env
+    assert reg.gauge("kernels.fused_vmem_limit").value == 5 * 2 ** 20
+    with pytest.raises(ValueError):
+        ops.configure(vmem_limit=0)
+
+    ks = jax.random.split(jax.random.key(3), 3)
+    N, n, d, bs = 16, 128, 32, 64
+    G = jax.random.normal(ks[0], (N, n))
+    W = jax.random.normal(ks[1], (n, d))
+    X = jax.random.normal(ks[2], (N, d))
+    idx = jnp.asarray([1], jnp.int32)
+    sc = jnp.asarray([2.0], jnp.float32)
+    monkeypatch.setenv("REPRO_FORCE_INTERPRET", "1")
+    ops.block_gather_matmul_fused(G, idx, sc, W, X, block=bs)
+    ops.block_stream_matmul_fused(G, idx, sc, W, X, block=bs)
+    assert reg.counter("kernels.fused.dispatch").value == 1
+    assert reg.counter("kernels.stream.dispatch").value == 1
 
 
 @pytest.mark.parametrize("N,n,dt,mode", [

@@ -1,0 +1,276 @@
+"""Plan-carry transport (core/plan_state.py) + one-pass estimator statistics.
+
+The carry invariants this file enforces:
+
+* MC-unbiasedness: conditioned on ANY carried scores (uniform prior or an
+  arbitrarily stale non-uniform carry), E[dX/dW/db] equals the exact
+  gradient — staleness moves variance only.
+* Refresh semantics: "onepass" refreshes every column's score each step;
+  "stale" refreshes only the kept columns (partial refresh).
+* Transport: sslot leaves are emitted exactly at carry-capable sites, ride
+  the params tree through a jitted train step, never pollute the gradient
+  norm or optimizer moments, and survive gradient accumulation.
+* TP fallback: plan-carry estimators are not tp_shardable — under
+  ``tp_sketch`` the site falls back to the dense mask backend and no carry
+  leaf exists.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import ExecutionConfig, Runtime, SketchConfig, SketchPolicy
+from repro.configs.base import ArchConfig
+from repro.core import plan_state as pstate
+from repro.core import sketched_linear
+from repro.core.estimators import get_estimator
+from repro.core.site import resolve_site
+from repro.data.synthetic import LMStream
+from repro.optim import sgd
+
+N, DIN, DOUT = 32, 16, 24
+
+TINY = ArchConfig(name="tiny-plan", family="dense", n_layers=2, d_model=32,
+                  n_heads=4, n_kv=2, d_ff=64, vocab=64, q_chunk=16, kv_chunk=16)
+
+
+def _batch(seed=0):
+    return next(iter(LMStream(vocab=TINY.vocab, seed=seed).batches(2, 16)))
+
+
+def _carry_policy(backend):
+    return SketchPolicy(base=SketchConfig(method="l1", budget=0.4,
+                                          backend=backend, block=4))
+
+
+# ---------------------------------------------------------------------------
+# Estimator statistics
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend,stale_carry", [
+    ("onepass", False), ("onepass", True),
+    ("stale", False), ("stale", True),
+])
+def test_mc_unbiased_under_any_carry(backend, stale_carry):
+    """E over keys of the plan-carry backward equals the exact gradient for
+    BOTH the uniform prior and a deliberately wrong (stale) non-uniform
+    carry — the floor on keep probabilities makes the conditional
+    expectation exact regardless of carry quality."""
+    cfg = SketchConfig(method="l1", budget=0.5, backend=backend, block=4)
+    ks = jax.random.split(jax.random.key(5), 3)
+    x = jax.random.normal(ks[0], (N, DIN))
+    w = jax.random.normal(ks[1], (DOUT, DIN)) / np.sqrt(DIN)
+    b = jax.random.normal(ks[2], (DOUT,)) * 0.1
+    g_out = jax.random.normal(jax.random.key(11), (N, DOUT))
+    # heteroscedastic-ish stale carry: wrong relative ordering on purpose
+    carry = (jnp.linspace(3.0, 0.2, DOUT).astype(jnp.float32)
+             if stale_carry else None)
+
+    def loss(x_, w_, b_, key):
+        return jnp.sum(sketched_linear(x_, w_, b_, key=key, cfg=cfg,
+                                       plan_state=carry) * g_out)
+
+    exact = jax.grad(lambda x_, w_, b_: jnp.sum(
+        sketched_linear(x_, w_, b_) * g_out), argnums=(0, 1, 2))(x, w, b)
+    gfn = jax.jit(lambda k: jax.grad(loss, argnums=(0, 1, 2))(x, w, b, k))
+    keys = jax.random.split(jax.random.key(7), 600)
+    gs = jax.lax.map(gfn, keys, batch_size=100)
+    for got, want in zip(gs, exact):
+        mean = np.asarray(got.mean(0))
+        std = np.asarray(got.std(0))
+        want = np.asarray(want)
+        scale = np.max(np.abs(want)) + 1e-9
+        det = std < 1e-6 * scale
+        np.testing.assert_allclose(mean[det], want[det], rtol=1e-3,
+                                   atol=1e-4 * scale)
+        if det.all():
+            continue
+        se = std[~det] / np.sqrt(len(keys)) + 1e-3 * scale
+        t = np.abs(mean[~det] - want[~det]) / se
+        assert np.mean(t) < 2.2, f"{backend} stale={stale_carry}: mean|t|={np.mean(t)}"
+        assert np.percentile(t, 95) < 5.0
+
+
+def test_onepass_full_refresh_stale_partial_refresh():
+    """"onepass" returns fresh scores for EVERY column (full refresh from the
+    streaming sweep); "stale" refreshes only the kept columns and carries the
+    rest through unchanged."""
+    cfg = lambda be: SketchConfig(method="l1", budget=0.4, backend=be, block=4)
+    ks = jax.random.split(jax.random.key(2), 3)
+    G = jax.random.normal(ks[0], (N, DOUT))
+    X = jax.random.normal(ks[1], (N, DIN))
+    w = jax.random.normal(ks[2], (DOUT, DIN))
+    carry = jnp.full((DOUT,), 7.0, jnp.float32)
+    want_fresh = np.abs(np.asarray(G, np.float32)).sum(0)
+
+    out1 = get_estimator("onepass").apply_with_state(
+        cfg("onepass"), G, X, w, jax.random.key(3), carry, has_b=True)
+    np.testing.assert_allclose(np.asarray(out1.state), want_fresh,
+                               rtol=1e-4, atol=1e-4)
+
+    out2 = get_estimator("stale").apply_with_state(
+        cfg("stale"), G, X, w, jax.random.key(3), carry, has_b=True)
+    s2 = np.asarray(out2.state)
+    kept = np.zeros(DOUT, bool)
+    kept[np.asarray(out2.cols)] = True
+    np.testing.assert_allclose(s2[kept], want_fresh[kept], rtol=1e-4, atol=1e-4)
+    np.testing.assert_array_equal(s2[~kept], np.full((~kept).sum(), 7.0))
+    assert not kept.all(), "budget 0.4 must drop some blocks for this test"
+
+
+# ---------------------------------------------------------------------------
+# Transport: collect/write roundtrip, slot emission
+# ---------------------------------------------------------------------------
+
+
+def test_collect_write_roundtrip():
+    params = {"layers": [{"w": jnp.zeros((4, 4)), "sslot": jnp.full((4,), 2.0)}],
+              "embed": jnp.zeros((3, 3))}
+    grads = {"layers": [{"w": jnp.ones((4, 4)), "sslot": jnp.asarray([1., 2., 3., 4.])}],
+             "embed": jnp.ones((3, 3))}
+    clean, fresh = pstate.collect_plan_state(grads)
+    # sslot cotangent zeroed (invisible to grad norm / optimizer moments)
+    np.testing.assert_array_equal(np.asarray(clean["layers"][0]["sslot"]),
+                                  np.zeros(4))
+    np.testing.assert_array_equal(np.asarray(clean["layers"][0]["w"]),
+                                  np.ones((4, 4)))
+    assert list(fresh) == ["layers/0/sslot"]
+    out = pstate.write_plan_state(params, fresh)
+    np.testing.assert_array_equal(np.asarray(out["layers"][0]["sslot"]),
+                                  np.asarray([1., 2., 3., 4.]))
+    np.testing.assert_array_equal(np.asarray(out["embed"]), np.zeros((3, 3)))
+    # no fresh scores -> identity
+    assert pstate.write_plan_state(params, {}) is params
+
+
+def test_policy_carry_gates():
+    assert not pstate.policy_uses_carry(None)
+    assert not pstate.policy_uses_carry(
+        SketchPolicy(base=SketchConfig(method="l1", budget=0.4, backend="pallas",
+                                       block=4)))
+    assert pstate.policy_uses_carry(_carry_policy("onepass"))
+    assert pstate.policy_uses_carry(_carry_policy("stale"))
+    # override-only carry counts too
+    pol = SketchPolicy(base=SketchConfig(method="l1", budget=0.4),
+                       overrides={"mlp_in": SketchConfig(
+                           method="l1", budget=0.4, backend="stale", block=4)})
+    assert pstate.policy_uses_carry(pol)
+
+
+def test_tp_sketch_falls_back_to_mask_and_carries_nothing():
+    """Plan-carry estimators are not tp_shardable: under tp_sketch the site
+    resolves to the dense mask backend with no compact rows and no carry."""
+    cfg = SketchConfig(method="l1", budget=0.4, backend="onepass", block=4)
+    spec = resolve_site("mlp_in", cfg, d_out=DOUT, d_in=DIN, x_ndim=3,
+                        mesh=None, tp_sketch=True)
+    assert spec.cfg.backend == "mask"
+    assert spec.compact_rows is None and spec.carry_rows is None
+    # and the slot builder consumes the same resolution: no sslot emitted
+    params = {"mlp": {"in": {"w": jnp.zeros((DOUT, DIN))}}}
+    out = pstate.with_plan_state(params, _carry_policy("onepass"),
+                                 tp_sketch=True)
+    assert pstate.PLAN_SLOT not in out["mlp"]["in"]
+    # positive control: same site without tp_sketch carries [d_out] scores
+    out = pstate.with_plan_state(params, _carry_policy("onepass"))
+    assert out["mlp"]["in"][pstate.PLAN_SLOT].shape == (DOUT,)
+
+
+# ---------------------------------------------------------------------------
+# End-to-end: carry through jitted train steps
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", ["onepass", "stale"])
+def test_train_step_carry_persistence(backend):
+    rt = Runtime(policy=_carry_policy(backend))
+    opt = sgd(0.1)
+    state = rt.init_state(jax.random.key(0), TINY, opt)
+    slots0 = {p: v for p, v in _named_leaves(state.params)
+              if p.endswith(pstate.PLAN_SLOT)}
+    assert slots0, "carry policy must emit sslot leaves at init"
+    for v in slots0.values():
+        np.testing.assert_array_equal(np.asarray(v), np.ones(v.shape))
+
+    step = rt.train_step(TINY, opt, donate=False)
+    state1, m1 = step(state, _batch(0), jax.random.key(1))
+    assert np.isfinite(float(m1["loss"]))
+    assert np.isfinite(float(m1["grad_norm"])) and float(m1["grad_norm"]) > 0
+    slots1 = {p: v for p, v in _named_leaves(state1.params)
+              if p.endswith(pstate.PLAN_SLOT)}
+    assert set(slots1) == set(slots0)
+    for p, v in slots1.items():
+        arr = np.asarray(v)
+        assert np.isfinite(arr).all()
+        assert not np.array_equal(arr, np.ones(arr.shape)), \
+            f"carry at {p} was not refreshed"
+        if backend == "stale":
+            # partial refresh: at budget 0.4 the uniform prior keeps a strict
+            # subset of blocks, so some columns must still hold the prior
+            assert (arr == 1.0).any(), f"stale carry at {p} fully refreshed"
+
+    # the carry keeps evolving on the next step
+    state2, _ = step(state1, _batch(1), jax.random.key(2))
+    slots2 = {p: v for p, v in _named_leaves(state2.params)
+              if p.endswith(pstate.PLAN_SLOT)}
+    assert any(not np.array_equal(np.asarray(slots2[p]), np.asarray(slots1[p]))
+               for p in slots2)
+
+
+def test_grad_norm_excludes_carry():
+    """The sslot cotangent (fresh scores, magnitude ~N·E|g|) must not leak
+    into the reported gradient norm: a carry backend and the equivalent
+    non-carry pallas backend see the same-scale grad_norm."""
+    opt = sgd(0.1)
+    norms = {}
+    for backend in ("pallas", "stale"):
+        rt = Runtime(policy=_carry_policy(backend))
+        state = rt.init_state(jax.random.key(0), TINY, opt)
+        step = rt.train_step(TINY, opt, donate=False)
+        _, m = step(state, _batch(0), jax.random.key(1))
+        norms[backend] = float(m["grad_norm"])
+    # same arch/key/data; sketches differ so norms differ, but an sslot leak
+    # (hundreds of f32 scores of magnitude ~sum|G|) would inflate by >10x
+    assert norms["stale"] < 10 * norms["pallas"]
+
+
+def test_accum_carries_plan_state():
+    rt = Runtime(policy=_carry_policy("stale"),
+                 execution=ExecutionConfig(accum=2))
+    opt = sgd(0.1)
+    state = rt.init_state(jax.random.key(0), TINY, opt)
+    step = rt.train_step(TINY, opt, donate=False)
+    batch = _batch(0)
+    big = jax.tree.map(lambda a: jnp.concatenate([a, a], axis=0), batch)
+    state1, m = step(state, big, jax.random.key(1))
+    assert np.isfinite(float(m["loss"]))
+    slots = [v for p, v in _named_leaves(state1.params)
+             if p.endswith(pstate.PLAN_SLOT)]
+    assert slots and all(np.isfinite(np.asarray(v)).all() for v in slots)
+    assert any(not np.array_equal(np.asarray(v), np.ones(v.shape))
+               for v in slots)
+
+
+def test_execution_config_vmem_limit_validation():
+    assert ExecutionConfig().fused_vmem_limit is None
+    assert ExecutionConfig(fused_vmem_limit=4 << 20).fused_vmem_limit == 4 << 20
+    for bad in (0, -1, 2.5, "8MiB"):
+        with pytest.raises((ValueError, TypeError)):
+            ExecutionConfig(fused_vmem_limit=bad)
+
+
+def _named_leaves(tree):
+    out = []
+
+    def walk(node, path):
+        if isinstance(node, dict):
+            for k, v in node.items():
+                walk(v, path + (str(k),))
+        elif isinstance(node, (list, tuple)):
+            for i, v in enumerate(node):
+                walk(v, path + (str(i),))
+        else:
+            out.append(("/".join(path), node))
+
+    walk(tree, ())
+    return out

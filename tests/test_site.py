@@ -37,11 +37,16 @@ ARCH = ArchConfig(name="site-golden", family="dense", n_layers=1, d_model=32,
                   kv_chunk=16)
 
 # backend × block × compact_grads × probes; mask has no compact form.
+# The plan-carry estimators (onepass/stale, ISSUE 10) extend the grid with
+# NEW entries only — the pre-existing mask/compact/pallas captures stay
+# byte-identical, proving the sslot plumbing leaves legacy paths untouched.
 _GRID = (
     [("mask", 0, False, p) for p in (False, True)]
     + [("compact", b, cg, p) for b in (0, 4) for cg in (False, True)
        for p in (False, True)]
     + [("pallas", 4, cg, p) for cg in (False, True) for p in (False, True)]
+    + [(be, 4, cg, p) for be in ("onepass", "stale")
+       for cg in (False, True) for p in (False, True)]
 )
 
 
